@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks (interpret-mode timings are NOT TPU numbers —
+the derived column carries the structural quantities the §Roofline uses:
+FLOPs, VMEM working set, arithmetic intensity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+
+
+def _time(f, *args, iters=3):
+    f(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return 1e6 * (time.time() - t0) / iters
+
+
+def run() -> list:
+    rows = []
+
+    # flash attention: FLOPs = 4 * b*h*s^2*hd (qk + pv), causal halves it
+    from repro.kernels.flash_attention import ops as fa
+    b, s, nh, nkv, hd = 1, 512, 4, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, nh, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    us = _time(lambda *a: fa.flash_attention(*a, causal=True), q, k, v)
+    flops = 4 * b * nh * s * s * hd / 2
+    vmem = (128 * hd * 4 * 2 + 2 * 128 * hd * 4 + 128 * 128 * 4)
+    rows.append(Row("kernel_flash_attention_s512", us,
+                    f"flops={flops:.3e};vmem_bytes={vmem};"
+                    f"ai={flops / (3 * b * s * nh * hd * 4):.1f}"))
+
+    # wkv6: FLOPs ~ 2*b*h*(s*C*n + s*n*n) chunked
+    from repro.kernels.rwkv6 import ops as wkv
+    b, s, h, n, c = 1, 256, 2, 64, 64
+    r = jax.random.normal(jax.random.PRNGKey(3), (b, s, h, n))
+    kk = jax.random.normal(jax.random.PRNGKey(4), (b, s, h, n))
+    vv = jax.random.normal(jax.random.PRNGKey(5), (b, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(6),
+                                         (b, s, h, n))) * 0.5 + 0.45
+    u = 0.1 * jax.random.normal(jax.random.PRNGKey(7), (h, n))
+    us = _time(lambda *a: wkv.wkv6(*a, chunk=c)[0], r, kk, vv, w, u)
+    flops = 2 * b * h * (s * c * n + 2 * s * n * n)
+    rows.append(Row("kernel_wkv6_s256", us,
+                    f"flops={flops:.3e};state_bytes={h * n * n * 4}"))
+
+    # consensus step: 2 matmuls (m x m) @ (m x D)
+    from repro.kernels.consensus_step import ops as cs
+    from repro.core import ring_mixing
+    m, d = 16, 4096
+    mix = jnp.asarray(ring_mixing(m).matrix, jnp.float32)
+    X = jax.random.normal(jax.random.PRNGKey(8), (m, d))
+    us = _time(lambda mx, x: cs.consensus_step(mx, x, x, x, x, alpha=0.1),
+               mix, X)
+    rows.append(Row("kernel_consensus_m16_d4096", us,
+                    f"flops={2 * 2 * m * m * d:.3e};"
+                    f"bytes={5 * m * d * 4}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,116 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Each bench_* module exposes ``run() -> list[Row]``; benchmarks/run.py
+aggregates them into the required ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import (
+    HypergradConfig, MLPMetaProblem, convergence_metric,
+    erdos_renyi_adjacency, init_dsgd_state, init_gt_dsgd_state, init_head,
+    init_mlp_backbone, init_state, init_svr_state, laplacian_mixing,
+    make_dsgd_step, make_gt_dsgd_step, make_interact_step,
+    make_svr_interact_step, make_synthetic_agents,
+)
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+@dataclasses.dataclass
+class Setup:
+    data: object
+    prob: object
+    x0: object
+    y0: object
+    spec: object
+    hg: object
+    m: int
+    n: int
+
+
+def make_setup(m: int = 5, n: int = 600, p_connect: float = 0.5,
+               seed: int = 0, d_in: int = 16, classes: int = 5) -> Setup:
+    key = jax.random.PRNGKey(seed)
+    data = make_synthetic_agents(key, num_agents=m, n_per_agent=n,
+                                 d_in=d_in, num_classes=classes)
+    prob = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(seed + 1), d_in, hidden=20)
+    y0 = init_head(jax.random.PRNGKey(seed + 2), 20, classes)
+    spec = laplacian_mixing(erdos_renyi_adjacency(m, p_connect, seed=seed + 3))
+    hg = HypergradConfig(method="cg", cg_iters=24)
+    return Setup(data, prob, x0, y0, spec, hg, m, n)
+
+
+def metric_of(s: Setup, state) -> float:
+    rep = convergence_metric(s.prob, s.hg, state.x, state.y, 300, 0.5,
+                             s.data)
+    return float(rep.total)
+
+
+ALGORITHMS = ("interact", "svr-interact", "gt-dsgd", "d-sgd")
+
+
+def build(s: Setup, algo: str, alpha: float = 0.3, beta: float = 0.3,
+          batch: int | None = None, q: int | None = None, seed: int = 7):
+    """(state, step_fn, samples_per_step) for one algorithm.
+
+    samples_per_step = IFO calls per agent per iteration (Definition 1):
+    full gradients cost n, minibatch estimators cost the batch size, the
+    SVR recursive estimator evaluates 2 points per sample.
+    """
+    q = q or int(np.ceil(np.sqrt(s.n)))
+    batch = batch or q
+    if algo == "interact":
+        st = init_state(s.prob, s.hg, s.x0, s.y0, s.data)
+        fn = make_interact_step(s.prob, s.hg, s.spec, alpha, beta)
+        return st, fn, float(s.n)
+    if algo == "svr-interact":
+        st = init_svr_state(s.prob, s.hg, s.x0, s.y0, s.data,
+                            jax.random.PRNGKey(seed))
+        fn = make_svr_interact_step(s.prob, s.hg, s.spec, alpha, beta, q=q,
+                                    batch_size=batch)
+        # amortized: one full refresh (n) every q steps + 2*batch otherwise
+        return st, fn, float(s.n / q + 2 * batch)
+    if algo == "gt-dsgd":
+        st = init_gt_dsgd_state(s.prob, s.hg, s.x0, s.y0, s.data,
+                                jax.random.PRNGKey(seed), batch)
+        fn = make_gt_dsgd_step(s.prob, s.hg, s.spec, alpha, beta, batch)
+        return st, fn, float(batch)
+    if algo == "d-sgd":
+        st = init_dsgd_state(s.x0, s.y0, s.m, jax.random.PRNGKey(seed))
+        fn = make_dsgd_step(s.prob, s.hg, s.spec, alpha, beta, batch)
+        return st, fn, float(batch)
+    raise ValueError(algo)
+
+
+def run_algo(s: Setup, algo: str, iters: int, record_every: int = 5,
+             **kw) -> tuple[list[float], float, float]:
+    """Returns (metric trace, us_per_step, samples_per_step)."""
+    state, fn, spc = build(s, algo, **kw)
+    trace = []
+    # warmup compile
+    state = fn(state, s.data)
+    t0 = time.time()
+    for t in range(iters):
+        if t % record_every == 0:
+            trace.append(metric_of(s, state))
+        state = fn(state, s.data)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state.x)[0])
+    took = time.time() - t0
+    trace.append(metric_of(s, state))
+    return trace, 1e6 * took / iters, spc

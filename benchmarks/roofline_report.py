@@ -1,0 +1,52 @@
+"""§Roofline report generator: reads experiments/dryrun/*.json and prints
+the three-term roofline table per (arch x shape) on the single-pod mesh.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--tag pod]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.roofline.analysis import (
+    load_dryrun, report_table, roofline_terms)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _trip_correction(arch: str, shape: str) -> float:
+    """XLA cost analysis counts scan bodies once (verified in
+    tests/test_roofline.py); multiply the layer-loop share back in."""
+    cfg = get_config(arch)
+    return float(cfg.num_periods())
+
+
+def run(tag: str = "pod") -> list:
+    rows = []
+    reports = []
+    for res in load_dryrun(RESULTS, tag=tag):
+        if res.get("skipped"):
+            continue
+        cfg = get_config(res["arch"])
+        rep = roofline_terms(res, cfg,
+                             scan_trip_correction=_trip_correction(
+                                 res["arch"], res["shape"]))
+        reports.append(rep)
+        rows.append(Row(
+            f"roofline_{res['arch']}_{res['shape']}_{tag}", 0.0,
+            f"compute_s={rep.compute_s:.3e};memory_s={rep.memory_s:.3e};"
+            f"collective_s={rep.collective_s:.3e};dominant={rep.dominant};"
+            f"useful_ratio={rep.useful_ratio:.3f}"))
+    if reports:
+        print(report_table(reports))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="pod")
+    args = ap.parse_args()
+    for r in run(args.tag):
+        print(r.csv())

@@ -1,0 +1,45 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig2  convergence of INTERACT/SVR-INTERACT vs GT-DSGD/D-SGD (5/10 agents)
+  fig4  edge-connectivity sensitivity
+  fig5  learning-rate sensitivity
+  table1 sample & communication complexity to eps-stationarity
+  kernels  Pallas kernel micro-structure
+  roofline dry-run derived roofline terms (if dry-run artifacts exist)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_complexity, bench_connectivity,
+                            bench_convergence, bench_kernels, bench_lr,
+                            roofline_report)
+    suites = [
+        ("fig2", bench_convergence.run),
+        ("fig4", bench_connectivity.run),
+        ("fig5", bench_lr.run),
+        ("table1", bench_complexity.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", roofline_report.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(row.csv(), flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""End-to-end driver: decentralized bilevel LM training with INTERACT.
+
+Trains a ~100M-parameter smollm-family model (reduced depth for CPU; use
+--full-width on real hardware) for a few hundred INTERACT steps across 4
+agents with heterogeneous token streams — the full production code path:
+shard_map consensus (ppermute ring), Neumann hypergradients, per-agent
+heads, checkpointing.
+
+    PYTHONPATH=src python examples/decentralized_llm_training.py \
+        [--steps 300] [--agents 4]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpoint import save_step
+from repro.configs import get_config
+from repro.data.synthetic import TokenTaskStream
+from repro.launch.train import make_host_mesh
+from repro.sharding.partition import tree_shardings
+from repro.train.bilevel_lm import BilevelHyper
+from repro.train.step import (
+    InteractConfig, init_train_state, make_train_step, make_eval_step,
+    train_state_specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--per-agent-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full-width", action="store_true",
+                    help="use the real 960-wide smollm trunk (slow on CPU)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-360m")
+    if args.full_width:
+        # ~100M params: full width, reduced depth — CPU-tractable yet real.
+        cfg = dataclasses.replace(cfg, num_layers=8, vocab_size=49152,
+                                  dtype="float32")
+    else:
+        cfg = cfg.reduced(vocab_size=2048, num_layers=2, d_model=256,
+                          d_ff=512, dtype="float32")
+
+    mesh = make_host_mesh(args.agents)
+    m = mesh.shape["data"]
+    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}; mesh={dict(mesh.shape)}; agents={m}")
+
+    icfg = InteractConfig(
+        alpha=0.02, beta=0.5,
+        hyper=BilevelHyper(mu_g=0.1, neumann_k=3, lipschitz_g=2.0,
+                           ce_chunk=min(256, args.seq_len), remat=False))
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0), m)
+    specs = train_state_specs(state, mesh)
+    state = jax.device_put(state, tree_shardings(mesh, specs))
+    stream = TokenTaskStream(vocab_size=cfg.vocab_size, num_agents=m, seed=1)
+    step = make_train_step(cfg, mesh, icfg)
+    evaluate = make_eval_step(cfg, mesh, icfg)
+    tok_shard = NamedSharding(mesh, P("data"))
+
+    with jax.set_mesh(mesh):
+        jstep = jax.jit(step, donate_argnums=(0,))
+        jeval = jax.jit(evaluate)
+        eval_tokens = jax.device_put(
+            stream.global_batch(10_000, args.per_agent_batch, args.seq_len),
+            tok_shard)
+        t0 = time.time()
+        for t in range(args.steps):
+            tokens = jax.device_put(
+                stream.global_batch(t, args.per_agent_batch, args.seq_len),
+                tok_shard)
+            state, metrics = jstep(state, tokens)
+            if (t + 1) % 25 == 0:
+                held_out = float(jeval(state, eval_tokens))
+                print(f"step {t + 1:4d}  train outer_ce "
+                      f"{float(metrics['outer_ce']):.4f}  held-out ce "
+                      f"{held_out:.4f}  tracked |u| "
+                      f"{float(metrics['grad_norm']):.3e}  "
+                      f"({(time.time() - t0) / 25:.2f}s/step)")
+                t0 = time.time()
+        if args.ckpt_dir:
+            save_step(args.ckpt_dir, args.steps, jax.device_get(state))
+            print(f"saved final state to {args.ckpt_dir}")
+
+    print("\nEach agent adapted its own head y_i to its token distribution "
+          "while the ring consensus kept the backbones synchronized — "
+          "decentralized bilevel meta-learning at LM scale.")
+
+
+if __name__ == "__main__":
+    main()

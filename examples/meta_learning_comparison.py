@@ -1,0 +1,63 @@
+"""Paper Section-6 experiment: all four algorithms compared.
+
+Reproduces the Fig. 2 comparison (INTERACT, SVR-INTERACT, GT-DSGD, D-SGD)
+on the synthetic meta-learning task and prints an ASCII convergence plot
+plus the measured sample counts per agent (Table-1 style).
+
+    PYTHONPATH=src python examples/meta_learning_comparison.py
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import ALGORITHMS, make_setup, run_algo
+
+ITERS = 40
+RECORD = 5
+
+
+def ascii_plot(traces: dict, width: int = 60, height: int = 14) -> str:
+    all_vals = [v for t in traces.values() for v in t]
+    lo = np.log10(max(min(all_vals), 1e-8))
+    hi = np.log10(max(all_vals))
+    rows = [[" "] * width for _ in range(height)]
+    markers = {"interact": "I", "svr-interact": "S", "gt-dsgd": "G",
+               "d-sgd": "D"}
+    for name, trace in traces.items():
+        for i, v in enumerate(trace):
+            xpos = int(i / max(len(trace) - 1, 1) * (width - 1))
+            ynorm = (np.log10(max(v, 1e-8)) - lo) / max(hi - lo, 1e-9)
+            ypos = height - 1 - int(ynorm * (height - 1))
+            rows[ypos][xpos] = markers[name]
+    out = [f"log10(M): {hi:.1f}"]
+    out += ["".join(r) for r in rows]
+    out.append(f"log10(M): {lo:.1f}   (x: 0..{ITERS} iterations)")
+    out.append("I=INTERACT S=SVR-INTERACT G=GT-DSGD D=D-SGD")
+    return "\n".join(out)
+
+
+def main() -> None:
+    s = make_setup(m=5, n=600)
+    traces, samples = {}, {}
+    for algo in ALGORITHMS:
+        trace, us, spc = run_algo(s, algo, ITERS, record_every=RECORD)
+        traces[algo] = trace
+        samples[algo] = spc
+        print(f"{algo:14s} final M = {trace[-1]:.5f}   "
+              f"({us / 1e3:.1f} ms/iter, {spc:.0f} IFO calls/agent/iter)")
+
+    print("\n" + ascii_plot(traces) + "\n")
+
+    print("Table-1 style sample accounting (per agent, to the final M):")
+    for algo in ALGORITHMS:
+        print(f"  {algo:14s} ~{samples[algo] * ITERS:8.0f} samples, "
+              f"{ITERS} communication rounds")
+    print("\nSVR-INTERACT attains INTERACT-level M with "
+          f"{samples['svr-interact'] / samples['interact']:.2%} of its "
+          "samples per iteration — the sqrt(n) saving of Corollary 4.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Core: the paper's contribution — decentralized bilevel optimization."""
+from repro.core.bilevel import (
+    AgentData,
+    BilevelProblem,
+    MLPMetaProblem,
+    init_head,
+    init_mlp_backbone,
+    make_synthetic_agents,
+)
+from repro.core.consensus import (
+    MixingSpec,
+    erdos_renyi_adjacency,
+    laplacian_mixing,
+    metropolis_mixing,
+    mix_pytree,
+    ring_mixing,
+    second_eigenvalue,
+    validate_mixing,
+)
+from repro.core.hypergrad import (
+    HypergradConfig,
+    cg_solve,
+    hvp_xy,
+    hvp_yy,
+    hypergradient,
+    neumann_inverse_apply,
+)
+from repro.core.interact import (
+    InteractState,
+    init_state,
+    interact_step,
+    make_interact_step,
+    theorem1_step_sizes,
+)
+from repro.core.svr_interact import (
+    SvrState,
+    init_svr_state,
+    make_svr_interact_step,
+)
+from repro.core.baselines import (
+    DsgdState,
+    GtDsgdState,
+    init_dsgd_state,
+    init_gt_dsgd_state,
+    make_dsgd_step,
+    make_gt_dsgd_step,
+)
+from repro.core.metrics import MetricReport, convergence_metric, solve_inner
+
+__all__ = [name for name in dir() if not name.startswith("_")]

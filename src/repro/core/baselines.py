@@ -1,0 +1,121 @@
+"""Baseline algorithms from Section 6: GT-DSGD and D-SGD.
+
+* GT-DSGD — "stripped-down INTERACT": same consensus + gradient-tracking
+  skeleton, but the local gradients are plain stochastic minibatch
+  estimates (no variance reduction, no full refresh).
+* D-SGD — GT-DSGD without gradient tracking: each agent descends its own
+  stochastic hypergradient after the consensus combine.
+
+Both use the stochastic Neumann hypergradient of eq. (22) for the outer
+gradient (the bilevel analogue of a plain stochastic gradient).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import AgentData, BilevelProblem
+from repro.core.consensus import MixingSpec, mix_pytree
+from repro.core.hypergrad import HypergradConfig
+from repro.core.svr_interact import _minibatch_grads
+
+__all__ = [
+    "GtDsgdState", "init_gt_dsgd_state", "make_gt_dsgd_step",
+    "DsgdState", "init_dsgd_state", "make_dsgd_step",
+]
+
+
+class GtDsgdState(NamedTuple):
+    x: object
+    y: object
+    u: object
+    v: object
+    p_prev: object
+    t: jax.Array
+    key: jax.Array
+
+
+def _bcast(tree, m):
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (m,) + leaf.shape), tree)
+
+
+def init_gt_dsgd_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
+                       x0, y0, data: AgentData, key: jax.Array,
+                       batch_size: int) -> GtDsgdState:
+    m = data.inner_x.shape[0]
+    x, y = _bcast(x0, m), _bcast(y0, m)
+    keys = jax.random.split(key, m + 1)
+    p, v = jax.vmap(
+        partial(_minibatch_grads, problem, hg_cfg,
+                batch_size=batch_size))(x, y, data, keys[1:])
+    return GtDsgdState(x=x, y=y, u=p, v=v, p_prev=p,
+                       t=jnp.zeros((), jnp.int32), key=keys[0])
+
+
+def make_gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
+                      mixing: MixingSpec, alpha: float, beta: float,
+                      batch_size: int):
+    mat = jnp.asarray(mixing.matrix)
+
+    @jax.jit
+    def step(state: GtDsgdState, data: AgentData) -> GtDsgdState:
+        m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+        key, k_step = jax.random.split(state.key)
+        agent_keys = jax.random.split(k_step, m)
+
+        x_new = jax.tree_util.tree_map(
+            lambda mx, u: mx - alpha * u, mix_pytree(mat, state.x), state.u)
+        y_new = jax.tree_util.tree_map(
+            lambda y, v: y - beta * v, state.y, state.v)
+
+        p_new, v_new = jax.vmap(
+            partial(_minibatch_grads, problem, hg_cfg,
+                    batch_size=batch_size))(x_new, y_new, data, agent_keys)
+
+        u_new = jax.tree_util.tree_map(
+            lambda mu, pn, pp: mu + pn - pp,
+            mix_pytree(mat, state.u), p_new, state.p_prev)
+        return GtDsgdState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
+                           t=state.t + 1, key=key)
+
+    return step
+
+
+class DsgdState(NamedTuple):
+    x: object
+    y: object
+    t: jax.Array
+    key: jax.Array
+
+
+def init_dsgd_state(x0, y0, m: int, key: jax.Array) -> DsgdState:
+    return DsgdState(x=_bcast(x0, m), y=_bcast(y0, m),
+                     t=jnp.zeros((), jnp.int32), key=key)
+
+
+def make_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
+                   mixing: MixingSpec, alpha: float, beta: float,
+                   batch_size: int):
+    mat = jnp.asarray(mixing.matrix)
+
+    @jax.jit
+    def step(state: DsgdState, data: AgentData) -> DsgdState:
+        m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+        key, k_step = jax.random.split(state.key)
+        agent_keys = jax.random.split(k_step, m)
+
+        p, v = jax.vmap(
+            partial(_minibatch_grads, problem, hg_cfg,
+                    batch_size=batch_size))(state.x, state.y, data, agent_keys)
+
+        x_new = jax.tree_util.tree_map(
+            lambda mx, g: mx - alpha * g, mix_pytree(mat, state.x), p)
+        y_new = jax.tree_util.tree_map(
+            lambda y, g: y - beta * g, state.y, v)
+        return DsgdState(x=x_new, y=y_new, t=state.t + 1, key=key)
+
+    return step

@@ -1,0 +1,191 @@
+"""Network topologies and consensus (mixing) matrices.
+
+The paper models the peer-to-peer network as a graph G = (N, L) with a
+doubly-stochastic, symmetric mixing matrix M whose sparsity follows the
+edges (Section 4.1, properties (a)-(c)).  The second-largest eigenvalue
+magnitude lambda = max{|lambda_2|, |lambda_m|} governs the admissible
+step sizes (Theorems 1 and 3).
+
+Two families are provided:
+
+* Erdos-Renyi graphs with the paper's Laplacian-based mixing matrix
+  ``M = I - 2 L / (3 lambda_max(L))`` (Section 6) — used by the
+  paper-faithful CPU experiments.
+* Ring / torus mixings — used by the TPU mapping, where the agent axis is
+  a physical ICI ring and the mixing is realised with two
+  ``lax.ppermute`` neighbour exchanges (see ``repro/sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MixingSpec",
+    "erdos_renyi_adjacency",
+    "laplacian_mixing",
+    "metropolis_mixing",
+    "ring_mixing",
+    "ring_weights",
+    "second_eigenvalue",
+    "validate_mixing",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MixingSpec:
+    """A mixing matrix together with the quantities the theory needs.
+
+    Attributes:
+      matrix:  (m, m) doubly-stochastic symmetric mixing matrix.
+      lam:     second-largest eigenvalue magnitude (the paper's lambda).
+      neighbors: for sparse/ring topologies, the ppermute offsets used by
+        the distributed implementation (empty for dense matrices).
+      weights: per-offset weights aligned with ``neighbors`` (the self
+        weight is ``1 - sum(weights)``).
+    """
+
+    matrix: np.ndarray
+    lam: float
+    neighbors: tuple[int, ...] = ()
+    weights: tuple[float, ...] = ()
+
+    @property
+    def num_agents(self) -> int:
+        return int(self.matrix.shape[0])
+
+    @property
+    def self_weight(self) -> float:
+        return float(1.0 - sum(self.weights))
+
+
+def erdos_renyi_adjacency(m: int, p_connect: float, seed: int) -> np.ndarray:
+    """Sample a connected Erdos-Renyi graph adjacency matrix.
+
+    Re-samples until connected (standard practice; the paper requires a
+    connected graph for consensus to be feasible). A ring fallback edge set
+    guarantees termination for very small ``p_connect``.
+    """
+    rng = np.random.default_rng(seed)
+    for _ in range(512):
+        upper = rng.random((m, m)) < p_connect
+        adj = np.triu(upper, k=1)
+        adj = (adj | adj.T).astype(np.float64)
+        if _is_connected(adj):
+            return adj
+    # Fallback: ER sample + ring edges (connected by construction).
+    adj = np.triu(rng.random((m, m)) < p_connect, k=1)
+    adj = (adj | adj.T).astype(np.float64)
+    for i in range(m):
+        adj[i, (i + 1) % m] = 1.0
+        adj[(i + 1) % m, i] = 1.0
+    np.fill_diagonal(adj, 0.0)
+    return adj
+
+
+def _is_connected(adj: np.ndarray) -> bool:
+    m = adj.shape[0]
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        i = frontier.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if j not in seen:
+                seen.add(int(j))
+                frontier.append(int(j))
+    return len(seen) == m
+
+
+def laplacian_mixing(adj: np.ndarray) -> MixingSpec:
+    """The paper's Section-6 mixing matrix: W = I - 2L / (3 lambda_max(L))."""
+    deg = np.diag(adj.sum(axis=1))
+    lap = deg - adj
+    lam_max = float(np.linalg.eigvalsh(lap)[-1])
+    mat = np.eye(adj.shape[0]) - 2.0 * lap / (3.0 * lam_max)
+    return MixingSpec(matrix=mat, lam=second_eigenvalue(mat))
+
+
+def metropolis_mixing(adj: np.ndarray) -> MixingSpec:
+    """Metropolis-Hastings weights: doubly stochastic for any graph."""
+    m = adj.shape[0]
+    deg = adj.sum(axis=1)
+    mat = np.zeros((m, m))
+    for i in range(m):
+        for j in range(m):
+            if i != j and adj[i, j] > 0:
+                mat[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        mat[i, i] = 1.0 - mat[i].sum()
+    return MixingSpec(matrix=mat, lam=second_eigenvalue(mat))
+
+
+def ring_weights(self_weight: float = 1.0 / 3.0) -> tuple[float, float]:
+    """Symmetric ring neighbour weights (w_left = w_right)."""
+    w = (1.0 - self_weight) / 2.0
+    return (w, w)
+
+
+def ring_mixing(m: int, self_weight: float = 1.0 / 3.0) -> MixingSpec:
+    """Doubly-stochastic symmetric ring: the TPU ICI-native topology.
+
+    lambda for the ring is known analytically:
+      eigenvalues are  w0 + 2 w1 cos(2 pi k / m),  k = 0..m-1.
+    """
+    if m < 1:
+        raise ValueError("need at least one agent")
+    w1 = (1.0 - self_weight) / 2.0
+    mat = np.zeros((m, m))
+    for i in range(m):
+        mat[i, i] = self_weight
+        mat[i, (i - 1) % m] += w1
+        mat[i, (i + 1) % m] += w1
+    if m == 1:
+        mat[:] = 1.0
+    lam = second_eigenvalue(mat)
+    return MixingSpec(
+        matrix=mat,
+        lam=lam,
+        neighbors=(-1, 1) if m > 1 else (),
+        weights=(w1, w1) if m > 1 else (),
+    )
+
+
+def second_eigenvalue(mat: np.ndarray) -> float:
+    """lambda = max{|lambda_2|, |lambda_m|} of a symmetric stochastic M."""
+    eig = np.sort(np.linalg.eigvalsh(mat))
+    if eig.shape[0] == 1:
+        return 0.0
+    return float(max(abs(eig[0]), abs(eig[-2])))
+
+
+def validate_mixing(mat: np.ndarray, adj: np.ndarray | None = None,
+                    atol: float = 1e-8) -> None:
+    """Assert the Section-4.1 properties (a) doubly stochastic,
+    (b) symmetric, (c) network-defined sparsity."""
+    ones = np.ones(mat.shape[0])
+    if not np.allclose(mat @ ones, ones, atol=atol):
+        raise ValueError("rows do not sum to 1")
+    if not np.allclose(mat.T @ ones, ones, atol=atol):
+        raise ValueError("columns do not sum to 1")
+    if not np.allclose(mat, mat.T, atol=atol):
+        raise ValueError("matrix not symmetric")
+    if adj is not None:
+        off = ~np.eye(mat.shape[0], dtype=bool)
+        if np.any((np.abs(mat) > atol) & off & (adj <= 0)):
+            raise ValueError("nonzero weight on a non-edge")
+
+
+def mix_pytree(matrix: jax.Array, tree):
+    """Apply the consensus combine ``x_i <- sum_j M_ij x_j`` to every leaf.
+
+    Leaves carry a leading agent dimension of size m.  This is the dense
+    reference implementation (eq. 6 / eq. 10 left term); the distributed
+    runtime uses ppermute instead (see repro/sharding/collectives.py).
+    """
+    def combine(leaf):
+        return jnp.tensordot(matrix, leaf, axes=[[1], [0]]).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(combine, tree)

@@ -1,0 +1,167 @@
+"""The INTERACT algorithm (Algorithm 1).
+
+Inner-gradient-descent-outer-tracked-gradient.  Per iteration each agent:
+
+  Step 1 (consensus + descent):   x_i <- sum_j M_ij x_j - alpha u_i   (6)
+                                  y_i <- y_i - beta v_i               (7)
+  Step 2 (full local gradients):  p_i = grad_bar f_i(x_i, y_i)        (8)
+                                  v_i = grad_y g_i(x_i, y_i)          (9)
+  Step 3 (gradient tracking):     u_i <- sum_j M_ij u_j + p_i - p_i^- (10)
+
+State tensors carry a leading agent dimension m; gradients are vmapped per
+agent; the consensus combine is a dense ``M @ .`` in this single-host
+reference (the distributed runtime replaces it with ppermute — see
+repro/sharding).  Step sizes must satisfy the Theorem-1 bounds, exposed by
+``theorem1_step_sizes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import AgentData, BilevelProblem
+from repro.core.consensus import MixingSpec, mix_pytree
+from repro.core.hypergrad import HypergradConfig, hypergradient
+
+__all__ = [
+    "InteractState",
+    "init_state",
+    "interact_step",
+    "make_interact_step",
+    "theorem1_step_sizes",
+]
+
+
+class InteractState(NamedTuple):
+    x: object        # outer params, leaves (m, ...)
+    y: object        # inner params, leaves (m, ...)
+    u: object        # tracked global gradient estimate, like x
+    v: object        # inner gradient, like y
+    p_prev: object   # previous local hypergradient, like x
+    t: jax.Array     # iteration counter
+
+
+def _per_agent_batch(data: AgentData):
+    inner = (data.inner_x, data.inner_y)
+    outer = (data.outer_x, data.outer_y)
+    return inner, outer
+
+
+def _agent_gradients(problem: BilevelProblem, hg_cfg: HypergradConfig,
+                     x, y, inner_batch, outer_batch, key=None):
+    """(p_i, v_i) for a single agent (no leading agent dim here)."""
+    p = hypergradient(
+        problem.outer, problem.inner, x, y, hg_cfg,
+        f_args=(outer_batch,), g_args=(inner_batch,), key=key,
+    )
+    v = jax.grad(problem.inner, argnums=1)(x, y, inner_batch)
+    return p, v
+
+
+def init_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
+               x0, y0, data: AgentData) -> InteractState:
+    """Algorithm-1 initialisation: u_0 = grad_bar f(x_0, y_0), v_0 = grad_y g.
+
+    ``x0``/``y0`` are single-agent pytrees; every agent starts from the same
+    point (x^0, y^0) as in the paper, so we broadcast along the agent axis.
+    """
+    m = data.inner_x.shape[0]
+    bcast = lambda tree: jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (m,) + leaf.shape), tree)
+    x = bcast(x0)
+    y = bcast(y0)
+    inner_b, outer_b = _per_agent_batch(data)
+    grads = jax.vmap(
+        partial(_agent_gradients, problem, hg_cfg)
+    )(x, y, inner_b, outer_b)
+    p, v = grads
+    return InteractState(x=x, y=y, u=p, v=v, p_prev=p,
+                         t=jnp.zeros((), jnp.int32))
+
+
+def interact_step(
+    problem: BilevelProblem,
+    hg_cfg: HypergradConfig,
+    mixing: jax.Array,
+    alpha: float,
+    beta: float,
+    state: InteractState,
+    data: AgentData,
+) -> InteractState:
+    """One INTERACT iteration over all agents (reference implementation)."""
+    # Step 1: consensus update with gradient descent (6) + local inner GD (7).
+    x_new = jax.tree_util.tree_map(
+        lambda mx, u: mx - alpha * u, mix_pytree(mixing, state.x), state.u)
+    y_new = jax.tree_util.tree_map(
+        lambda y, v: y - beta * v, state.y, state.v)
+
+    # Step 2: full local gradient estimates (8)-(9).
+    inner_b, outer_b = _per_agent_batch(data)
+    p_new, v_new = jax.vmap(
+        partial(_agent_gradients, problem, hg_cfg)
+    )(x_new, y_new, inner_b, outer_b)
+
+    # Step 3: gradient tracking (10).
+    u_new = jax.tree_util.tree_map(
+        lambda mu, pn, pp: mu + pn - pp,
+        mix_pytree(mixing, state.u), p_new, state.p_prev)
+
+    return InteractState(x=x_new, y=y_new, u=u_new, v=v_new,
+                         p_prev=p_new, t=state.t + 1)
+
+
+def make_interact_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
+                       mixing: MixingSpec, alpha: float, beta: float):
+    """jit-compiled step closure over static configuration."""
+    mat = jnp.asarray(mixing.matrix)
+
+    @jax.jit
+    def step(state: InteractState, data: AgentData) -> InteractState:
+        return interact_step(problem, hg_cfg, mat, alpha, beta, state, data)
+
+    return step
+
+
+def theorem1_step_sizes(
+    mu_g: float,
+    L_g: float,
+    lam: float,
+    m: int,
+    L_f: float | None = None,
+    safety: float = 1.0,
+) -> tuple[float, float]:
+    """Conservative (alpha, beta) satisfying the Theorem-1 bounds.
+
+    The theorem lists ~10 upper bounds built from the Lipschitz constants of
+    Lemma 1/2; we compute the binding ones from (mu_g, L_g, lam, m) with
+    L_f defaulting to L_g.  ``safety`` < 1 shrinks both (useful when the
+    constants are estimated rather than exact).
+    """
+    L_f = L_f if L_f is not None else L_g
+    L_y = (L_g / mu_g) ** 2          # Lemma 1 with C_gxy ~ L_g
+    L_l = (L_f + L_f * L_g / mu_g) ** 2
+    L_K = max(L_f, L_g)
+
+    beta = safety * min(
+        3.0 * (mu_g + L_g) / (mu_g * L_g),
+        1.0 / (mu_g + L_g),
+    )
+    r = beta * mu_g * L_g / (3.0 * (mu_g + L_g))
+    one_minus = max(1.0 - lam, 1e-3)
+    alpha = safety * min(
+        1.0 / (4.0 * L_l),
+        1.0 / (2.0 * m),
+        1.0 / (m * one_minus),
+        one_minus ** 2 / (32.0 * L_K ** 2),
+        m * one_minus / (4.0 * L_l),
+        9.0 * r * r * m * one_minus / (32.0 * L_y ** 2 * (1.0 + 1.0 / r) * L_f ** 2 + 1e-30),
+        (1.0 - r) * (1.0 + r) * r * one_minus ** 2
+        / (32.0 * L_y ** 2 * (mu_g + L_g) * L_K ** 2 * beta + 1e-30),
+        one_minus / (4.0 * L_K),
+        1.0,
+    )
+    return float(alpha), float(beta)

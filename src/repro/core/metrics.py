@@ -1,0 +1,98 @@
+"""The paper's convergence metric (eqs. 2 / 11) and its ingredients.
+
+    M_t = ||grad l(x_bar)||^2            (stationarity of the average)
+        + (1/m) sum_i ||x_i - x_bar||^2  (consensus error)
+        + ||y* - y||^2                   (inner error, aggregated)
+
+Evaluating grad l(x_bar) = grad_bar f(x_bar, y*(x_bar)) requires the inner
+optimum; we compute y*(x) by running the strongly-convex inner problem to
+tolerance with gradient descent (exact up to solver precision — this is an
+*evaluation-only* cost, not part of any algorithm's sample complexity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import AgentData, BilevelProblem
+from repro.core.hypergrad import HypergradConfig, hypergradient
+
+__all__ = ["MetricReport", "solve_inner", "convergence_metric"]
+
+
+class MetricReport(NamedTuple):
+    total: jax.Array
+    stationarity: jax.Array
+    consensus_error: jax.Array
+    inner_error: jax.Array
+    outer_loss: jax.Array
+
+
+def _tree_sq_norm(tree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(l)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def _tree_mean_over_agents(tree):
+    return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), tree)
+
+
+def solve_inner(problem: BilevelProblem, x, y0, batch,
+                steps: int = 400, lr: float = 0.5):
+    """y*(x) via GD on the strongly-convex inner problem (single agent)."""
+    grad_g = jax.grad(problem.inner, argnums=1)
+
+    def body(_, y):
+        g = grad_g(x, y, batch)
+        return jax.tree_util.tree_map(lambda yi, gi: yi - lr * gi, y, g)
+
+    return jax.lax.fori_loop(0, steps, body, y0)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 4, 5))
+def convergence_metric(problem: BilevelProblem, hg_cfg: HypergradConfig,
+                       x_stack, y_stack, inner_steps: int, inner_lr: float,
+                       data: AgentData) -> MetricReport:
+    """Compute M_t for stacked per-agent iterates (leading axis m)."""
+    m = jax.tree_util.tree_leaves(x_stack)[0].shape[0]
+    x_bar = _tree_mean_over_agents(x_stack)
+
+    # --- consensus error: (1/m) sum_i ||x_i - x_bar||^2
+    cons = jax.tree_util.tree_map(
+        lambda xi, xb: jnp.sum(jnp.square(xi - xb[None])), x_stack, x_bar)
+    consensus_error = sum(jax.tree_util.tree_leaves(cons)) / m
+
+    # --- inner error: sum_i ||y_i*(x_i) - y_i||^2  at the *current* x_i
+    inner_batches = (data.inner_x, data.inner_y)
+
+    def agent_inner_err(x_i, y_i, batch):
+        y_star = solve_inner(problem, x_i, y_i, batch, inner_steps, inner_lr)
+        return _tree_sq_norm(jax.tree_util.tree_map(
+            lambda a, b: a - b, y_star, y_i))
+
+    inner_error = jnp.sum(jax.vmap(agent_inner_err)(
+        x_stack, y_stack, inner_batches))
+
+    # --- stationarity: ||grad l(x_bar)||^2 with y* at x_bar per agent.
+    def agent_hypergrad_at_bar(y_i, inner_b, outer_b):
+        y_star = solve_inner(problem, x_bar, y_i, inner_b,
+                             inner_steps, inner_lr)
+        p = hypergradient(problem.outer, problem.inner, x_bar, y_star,
+                          hg_cfg, f_args=(outer_b,), g_args=(inner_b,))
+        f_val = problem.outer(x_bar, y_star, outer_b)
+        return p, f_val
+
+    outer_batches = (data.outer_x, data.outer_y)
+    p_all, f_all = jax.vmap(agent_hypergrad_at_bar)(
+        y_stack, inner_batches, outer_batches)
+    grad_l = _tree_mean_over_agents(p_all)
+    stationarity = _tree_sq_norm(grad_l)
+    outer_loss = jnp.mean(f_all)
+
+    total = stationarity + consensus_error + inner_error
+    return MetricReport(total=total, stationarity=stationarity,
+                        consensus_error=consensus_error,
+                        inner_error=inner_error, outer_loss=outer_loss)

@@ -1,0 +1,77 @@
+"""Deterministic synthetic data pipelines.
+
+Two generators:
+
+* ``TokenTaskStream`` — per-agent language-model token streams with
+  agent-specific Markov structure (heterogeneous f_i/g_i as the paper's
+  decentralized setting requires).  Used by the LM-scale INTERACT examples
+  and the end-to-end driver.
+* ``classification_agents`` — re-export of the core synthetic classifier
+  data (the paper-faithful meta-learning experiments).
+
+Everything is seeded and stateless: batch t of agent i is a pure function
+of (seed, i, t), so runs are exactly reproducible and shardable without
+host-side coordination — each agent row materialises only its own batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bilevel import make_synthetic_agents as classification_agents
+
+__all__ = ["TokenTaskStream", "classification_agents"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenTaskStream:
+    """Heterogeneous per-agent token streams.
+
+    Agent i draws tokens from a sticky first-order chain over a random
+    agent-specific preferred-vocabulary subset — cheap to generate on
+    device, deterministic, and genuinely non-iid across agents.
+    """
+
+    vocab_size: int
+    num_agents: int
+    seed: int = 0
+    stickiness: float = 0.8
+    subset_frac: float = 0.25
+
+    def _agent_key(self, agent: int, step: int) -> jax.Array:
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), agent), step)
+
+    def agent_batch(self, agent: int, step: int, batch: int,
+                    seq_len: int) -> jax.Array:
+        """(batch, seq_len) int32 tokens for one agent at one step."""
+        key = self._agent_key(agent, step)
+        k_sub, k_first, k_next, k_stick = jax.random.split(key, 4)
+        sub = max(2, int(self.subset_frac * self.vocab_size))
+        # agent-preferred contiguous vocab band (cheap, deterministic)
+        start = jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), agent),
+            (), 0, max(1, self.vocab_size - sub))
+
+        first = jax.random.randint(k_first, (batch, 1), 0, sub)
+        jumps = jax.random.randint(k_next, (batch, seq_len), 0, sub)
+        stick = jax.random.uniform(k_stick, (batch, seq_len)) < self.stickiness
+
+        def chain(carry, ts):
+            jump, st = ts
+            nxt = jnp.where(st, carry, jump)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(
+            chain, first[:, 0], (jumps.T, stick.T))
+        return (toks.T + start).astype(jnp.int32) % self.vocab_size
+
+    def global_batch(self, step: int, per_agent: int,
+                     seq_len: int) -> jax.Array:
+        """(num_agents, per_agent, seq_len) stacked over agents."""
+        rows = [self.agent_batch(i, step, per_agent, seq_len)
+                for i in range(self.num_agents)]
+        return jnp.stack(rows, axis=0)

@@ -1,0 +1,73 @@
+"""Pallas kernel fusing the INTERACT consensus + tracking updates.
+
+One iteration of the paper's core op (eqs. 6 and 10), fused so the agent
+dimension stays VMEM-resident and x/u/p stream through once:
+
+    x_out = M @ x - alpha * u            (consensus + descent)
+    u_out = M @ u + p - p_prev           (gradient tracking)
+
+Layout: parameters are flattened to (m, D); the grid tiles D.  The m x m
+mixing matrix (m <= a few hundred agents) lives in VMEM for every tile, and
+both matmuls hit the MXU with the (m, BD) tiles.  This is the single-host
+m-agent simulator's hot loop; on the distributed runtime the same update is
+expressed with ppermute (repro/sharding/collectives.py) instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_D = 512
+
+
+def _consensus_kernel(mix_ref, x_ref, u_ref, p_ref, pprev_ref,
+                      xout_ref, uout_ref, *, alpha: float):
+    mix = mix_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    pp = pprev_ref[...].astype(jnp.float32)
+
+    mx = jax.lax.dot_general(mix, x, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    mu = jax.lax.dot_general(mix, u, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    xout_ref[...] = (mx - alpha * u).astype(xout_ref.dtype)
+    uout_ref[...] = (mu + p - pp).astype(uout_ref.dtype)
+
+
+def consensus_step_kernel(
+    mix: jax.Array,     # (m, m) doubly-stochastic
+    x: jax.Array,       # (m, D) outer iterates
+    u: jax.Array,       # (m, D) tracked gradients
+    p: jax.Array,       # (m, D) new local hypergradients
+    p_prev: jax.Array,  # (m, D)
+    *,
+    alpha: float,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    m, d = x.shape
+    assert d % block_d == 0, (d, block_d)
+    grid = (d // block_d,)
+
+    kernel = functools.partial(_consensus_kernel, alpha=alpha)
+    tile = pl.BlockSpec((m, block_d), lambda i: (0, i))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, m), lambda i: (0, 0)),
+                  tile, tile, tile, tile],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((m, d), x.dtype),
+                   jax.ShapeDtypeStruct((m, d), u.dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(mix, x, u, p, p_prev)

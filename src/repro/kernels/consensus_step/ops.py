@@ -1,0 +1,52 @@
+"""jit'd wrapper: apply the fused consensus step to a whole pytree.
+
+Flattens every leaf (m, ...) to (m, D), pads D to the tile size, runs the
+kernel once over the concatenated parameter vector, and unflattens.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.consensus_step.kernel import (
+    DEFAULT_BLOCK_D, consensus_step_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block_d", "interpret"))
+def consensus_step(mix: jax.Array, x_tree, u_tree, p_tree, pprev_tree, *,
+                   alpha: float, block_d: int = DEFAULT_BLOCK_D,
+                   interpret: bool = True):
+    """Returns (x_tree', u_tree') after one fused eq.(6)+(10) update."""
+    leaves_x, treedef = jax.tree_util.tree_flatten(x_tree)
+    leaves_u = treedef.flatten_up_to(u_tree)
+    leaves_p = treedef.flatten_up_to(p_tree)
+    leaves_pp = treedef.flatten_up_to(pprev_tree)
+    m = leaves_x[0].shape[0]
+
+    def flat(leaves):
+        return jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
+
+    X, U, P, PP = flat(leaves_x), flat(leaves_u), flat(leaves_p), flat(leaves_pp)
+    d = X.shape[1]
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    if pad:
+        X, U, P, PP = (jnp.pad(t, ((0, 0), (0, pad))) for t in (X, U, P, PP))
+
+    X_out, U_out = consensus_step_kernel(mix, X, U, P, PP, alpha=alpha,
+                                         block_d=bd, interpret=interpret)
+    X_out, U_out = X_out[:, :d], U_out[:, :d]
+
+    def unflat(mat, template):
+        out, off = [], 0
+        for l in template:
+            size = l[0].size
+            out.append(mat[:, off:off + size].reshape(l.shape))
+            off += size
+        return out
+
+    x_new = treedef.unflatten(unflat(X_out, leaves_x))
+    u_new = treedef.unflatten(unflat(U_out, leaves_u))
+    return x_new, u_new

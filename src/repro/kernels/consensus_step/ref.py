@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused consensus + tracking step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def consensus_step_ref(mix: jax.Array, x: jax.Array, u: jax.Array,
+                       p: jax.Array, p_prev: jax.Array, *, alpha: float
+                       ) -> tuple[jax.Array, jax.Array]:
+    mix32 = mix.astype(jnp.float32)
+    x32, u32 = x.astype(jnp.float32), u.astype(jnp.float32)
+    x_out = mix32 @ x32 - alpha * u32
+    u_out = mix32 @ u32 + p.astype(jnp.float32) - p_prev.astype(jnp.float32)
+    return x_out.astype(x.dtype), u_out.astype(u.dtype)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (batch, q_len, num_heads, head_dim)
+    k: jax.Array,  # (batch, kv_len, num_kv_heads, head_dim)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Exact softmax GQA attention in fp32."""
+    b, sq, nh, hd = q.shape
+    _, skv, nkv, _ = k.shape
+    group = nh // nkv
+    qg = q.reshape(b, sq, nkv, group, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+    row = jnp.arange(sq, dtype=jnp.int32)[:, None] + q_offset
+    col = jnp.arange(skv, dtype=jnp.int32)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= row >= col
+    if window is not None:
+        mask &= row - col < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible keys (possible with window+offset) -> zeros
+    any_visible = jnp.any(mask, axis=-1)
+    p = jnp.where(any_visible[None, None, None, :, None], p, 0.0)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, nh, hd).astype(q.dtype)

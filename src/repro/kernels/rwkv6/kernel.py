@@ -1,0 +1,126 @@
+"""Pallas TPU kernel for the WKV6 recurrence (RWKV-6 "Finch").
+
+Chunked formulation of the data-dependent-decay linear attention:
+
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T,   o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+A sequential scan serializes seq_len steps on the VPU; instead we split the
+sequence into chunks of C tokens and compute per chunk (all MXU matmuls):
+
+  inter-chunk:  o_t += (r_t * W_t) S_0            W_t = prod_{j<t} w_j
+  intra-chunk:  o_t += sum_{s<t} [(r_t * W_t / W_{s+1}) . k_s] v_s
+                       + (r_t * u . k_t) v_t      (bonus diagonal)
+  state:        S_C = diag(W_C) S_0 + sum_s diag(W_C / W_{s+1}) k_s v_s
+
+Decay products are kept in log space (w in (0,1) => log w < 0) so the
+ratios W_t / W_{s+1} = exp(cum_t - cum_{s+1}) <= 1 never overflow.
+
+Grid: (batch, heads, num_chunks) with the chunk dimension sequential
+("arbitrary"), carrying the (N, N) state in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_final_ref,
+                 state_ref, *, chunk: int, head_size: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)   # (C, N)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, 0, :].astype(jnp.float32)      # (N,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))                    # (C, N) <= 0
+    cum = jnp.cumsum(logw, axis=0)                           # inclusive
+    cum_excl = cum - logw                                    # exclusive: sum_{j<t}
+
+    state = state_ref[...]                                   # (N, N) k-major
+
+    # ----- inter-chunk: o_t += (r_t * W_t) @ S0
+    r_decayed = r * jnp.exp(cum_excl)
+    o = jax.lax.dot_general(r_decayed, state, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # ----- intra-chunk: A[t, s] = sum_n r[t,n] k[s,n] exp(cum_excl[t]-cum[s])
+    #                   (strictly lower triangular), bonus on the diagonal.
+    # ratio exp(cum_excl[t] - cum[s]) <= 1 for s < t; clamp the masked upper
+    # triangle before exp to avoid overflow there.
+    diff = cum_excl[:, None, :] - cum[None, :, :]            # (C, C, N)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ratio = jnp.exp(jnp.where(tri[..., None], diff, -1e30))  # 0 when masked
+    A = jnp.einsum("tn,sn,tsn->ts", r, k, ratio)
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)              # (C,)
+    A = A + jnp.diag(bonus)
+    o = o + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+    # ----- state update: S = diag(exp(cum_C)) S0 + sum_s diag(exp(cum_C - cum_s)) k_s v_s
+    total = cum[-1]                                          # (N,)
+    k_scaled = k * jnp.exp(total[None, :] - cum)             # (C, N)
+    state_ref[...] = state * jnp.exp(total)[:, None] + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        s_final_ref[0, 0, :, :] = state_ref[...]
+
+
+def wkv6_kernel(
+    r: jax.Array,  # (batch, seq, heads, N)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decays in (0, 1)
+    u: jax.Array,  # (heads, N) bonus
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (b, s, h, N), final_state (b, h, N, N))."""
+    b, s, h, n = r.shape
+    assert s % chunk == 0, (s, chunk)
+    grid = (b, h, s // chunk)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, head_size=n)
+    io_spec = pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0))
+
+    out, s_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            io_spec, io_spec, io_spec, io_spec,
+            pl.BlockSpec((1, 1, n), lambda bi, hi, ci: (0, hi, 0)),
+        ],
+        out_specs=[
+            io_spec,
+            pl.BlockSpec((1, 1, n, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, n), r.dtype),
+            jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(r, k, v, w, u[None])
+    return out, s_final

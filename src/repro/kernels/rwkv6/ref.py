@@ -1,0 +1,32 @@
+"""Pure-jnp sequential oracle for the WKV6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """Token-by-token scan.
+
+    r, k, v, w: (batch, seq, heads, N); u: (heads, N).
+    state: (batch, heads, N, N), k-major (state[b,h,i,j] ~ k_i v_j).
+    """
+    b, s, h, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), dtype=jnp.float32)
+    r32, k32, v32, w32 = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    def step(st, ts):
+        rt, kt, vt, wt = ts
+        kv = kt[..., :, None] * vt[..., None, :]
+        att = st + u32[None, :, :, None] * kv
+        ot = jnp.einsum("bhn,bhnm->bhm", rt, att)
+        st = wt[..., :, None] * st + kv
+        return st, ot
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r32, k32, v32, w32))
+    final, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), final

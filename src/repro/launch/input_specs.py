@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input shape) pair.
+
+No device allocation: everything here is ``jax.ShapeDtypeStruct`` (weights
+and state via ``jax.eval_shape`` over the real initialisers), ready for
+``jax.jit(...).lower()``.
+
+Assigned input shapes:
+
+  train_4k     seq=4096    global_batch=256   (training, INTERACT step)
+  prefill_32k  seq=32768   global_batch=32    (inference prefill)
+  decode_32k   seq=32768   global_batch=128   (decode: 1 token + cache)
+  long_500k    seq=524288  global_batch=1     (long-context decode)
+
+long_500k applies only to sub-quadratic-state archs (DESIGN.md §4):
+rwkv6-3b, jamba-1.5-large-398b, mixtral-8x7b (SWA), gemma2-2b (window
+long-context mode).  ``shape_applicable`` encodes the skips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.base import ArchConfig
+from repro.launch.mesh import agent_count
+
+__all__ = ["SHAPES", "ShapeDef", "shape_applicable", "train_inputs",
+           "prefill_inputs", "decode_inputs", "state_shapes",
+           "LONG_CONTEXT_OK", "long_context_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeDef("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeDef("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeDef("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeDef("long_500k", 524288, 1, "decode"),
+}
+
+# Archs allowed to run long_500k (sub-quadratic decode state).
+LONG_CONTEXT_OK = {
+    "rwkv6-3b": "recurrent O(1) state",
+    "jamba-1.5-large-398b": "mamba state + 1:8 attention with cache",
+    "mixtral-8x7b": "sliding-window attention, cache bounded at 4096",
+    "gemma2-2b": "local layers SWA; global layers forced to window mode",
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    if shape != "long_500k":
+        return True, ""
+    if cfg.name in LONG_CONTEXT_OK:
+        return True, LONG_CONTEXT_OK[cfg.name]
+    return False, ("full-attention architecture without a sliding-window "
+                   "variant; unbounded KV cache fails the sub-quadratic "
+                   "gate (DESIGN.md §4)")
+
+
+def long_context_config(cfg: ArchConfig) -> ArchConfig:
+    """gemma2's long_500k deviation: window every attention layer."""
+    if cfg.name == "gemma2-2b":
+        return dataclasses.replace(cfg, long_context_mode="window")
+    return cfg
+
+
+def _itoken(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _prefix_struct(cfg: ArchConfig, batch: int):
+    if cfg.frontend == "none" or not cfg.num_prefix_tokens:
+        return None
+    fd = cfg.frontend_dim or cfg.d_model
+    return jax.ShapeDtypeStruct((batch, cfg.num_prefix_tokens, fd),
+                                jnp.dtype(cfg.dtype))
+
+
+def train_inputs(cfg: ArchConfig, mesh) -> dict[str, Any]:
+    sd = SHAPES["train_4k"]
+    m = agent_count(mesh)
+    per_agent = sd.global_batch // m
+    out = {"tokens": _itoken((m, per_agent, sd.seq_len))}
+    prefix = _prefix_struct(cfg, per_agent)
+    if prefix is not None:
+        out["prefix"] = jax.ShapeDtypeStruct(
+            (m,) + prefix.shape, prefix.dtype)
+    return out
+
+
+def prefill_inputs(cfg: ArchConfig) -> dict[str, Any]:
+    sd = SHAPES["prefill_32k"]
+    seq = sd.seq_len - (cfg.num_prefix_tokens
+                        if cfg.frontend != "none" else 0)
+    out = {"tokens": _itoken((sd.global_batch, seq))}
+    prefix = _prefix_struct(cfg, sd.global_batch)
+    if prefix is not None:
+        out["prefix"] = prefix
+    return out
+
+
+def decode_inputs(cfg: ArchConfig, shape: str) -> dict[str, Any]:
+    sd = SHAPES[shape]
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch=sd.global_batch,
+                             max_len=sd.seq_len))
+    return {
+        "token": _itoken((sd.global_batch, 1)),
+        "cache": cache,
+        "position": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_shapes(cfg: ArchConfig, mesh):
+    """TrainState shapes via eval_shape (no allocation)."""
+    from repro.train.step import init_train_state
+    m = agent_count(mesh)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, k, m), key)
+
+
+def params_shapes(cfg: ArchConfig, with_head: bool = True):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k, with_head=with_head), key)

@@ -1,0 +1,47 @@
+"""Production meshes.
+
+Single pod:  (16, 16)      axes ("data", "model")    — 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+The *agent* axis of the paper (the peer-to-peer network) is the data axis,
+extended across pods in the multi-pod mesh: agents = pod-major ring, so
+only the two ring edges crossing the pod boundary use DCI (DESIGN.md §3).
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "agent_axes", "agent_count", "model_axis"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — the "
+            "dry-run launcher must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def agent_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that together form the paper's agent ring."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def agent_count(mesh) -> int:
+    n = 1
+    for ax in agent_axes(mesh):
+        n *= mesh.shape[ax]
+    return n
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,64 @@
+"""Serving steps: prefill (full-sequence forward) and decode (one token).
+
+Serving is standard single-copy inference — no agent semantics: params are
+replicated across the data axes and sharded on ``model``; the request
+batch shards across the data axes.  Decode state (KV caches / SSM states)
+shards per ``repro.sharding.partition.cache_specs`` — batch over data when
+possible, the cache *sequence* over data for the single-request long_500k
+shape.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.base import ArchConfig
+
+__all__ = ["make_prefill_step", "make_serve_step"]
+
+
+def make_prefill_step(cfg: ArchConfig, *, attn_impl: str = "reference",
+                      seq_shard: bool = False):
+    """prefill(params, tokens[, prefix]) -> last-token logits.
+
+    The full-sequence forward; in production the same pass also emits the
+    KV cache (pure stores, fused by XLA) — the compute/communication
+    profile analysed by the roofline is this forward.
+    """
+
+    def prefill(params, tokens, prefix=None):
+        # Only the last position's logits are needed to start decoding:
+        # slice features BEFORE the head matmul so the (batch, seq, vocab)
+        # logits tensor never exists (perf iteration P1, EXPERIMENTS.md).
+        act_spec = None
+        if seq_shard:
+            from jax.sharding import PartitionSpec as P
+            act_spec = P(None, "model", None)
+        feats, _aux = M.features(cfg, params, tokens, prefix_embed=prefix,
+                                 impl=attn_impl, remat=False,
+                                 act_spec=act_spec)
+        head = params["head"] if "head" in params else params["embed"].T
+        return M.head_logits(cfg, head, feats[:, -1:, :])[:, 0, :]
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, *, attn_impl: str = "reference"):
+    """serve(params, token, cache, position) -> (logits, new_cache).
+
+    ONE new token per request against a seq_len-deep cache (the assigned
+    decode_32k / long_500k shapes).
+    """
+
+    def serve(params, token, cache, position):
+        head = params["head"] if "head" in params else None
+        logits, new_cache = M.decode_step(cfg, params, head, token, cache,
+                                          position, impl=attn_impl)
+        return logits[:, 0, :], new_cache
+
+    return serve

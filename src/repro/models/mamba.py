@@ -1,0 +1,174 @@
+"""Mamba (S6) block — the SSM mixer used by jamba's 7-of-8 layers.
+
+Selective state-space model:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t      (diagonal A < 0)
+    y_t = C_t . h_t + D x_t
+
+Training path uses ``jax.lax.associative_scan`` over time (parallel prefix
+— the TPU-friendly formulation; a sequential scan would serialize 4k
+steps).  Decode path is the O(1) single-step recurrence on a carried
+state, which is what makes jamba eligible for long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mamba", "mamba_block", "mamba_decode_step", "init_mamba_state"]
+
+
+def init_mamba(key, d_model: int, d_state: int, d_conv: int,
+               expand: int, dtype) -> dict:
+    d_inner = expand * d_model
+    keys = jax.random.split(key, 7)
+    si = 1.0 / jnp.sqrt(d_model)
+    sinner = 1.0 / jnp.sqrt(d_inner)
+    # S4D-real initialisation for A.
+    a_init = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                      (d_inner, 1))
+    return {
+        "w_in": (jax.random.normal(keys[0], (d_model, 2 * d_inner)) * si).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (d_conv, d_inner)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype=dtype),
+        "w_bcdt": (jax.random.normal(keys[2], (d_inner, 2 * d_state + 1)) * sinner).astype(dtype),
+        "dt_bias": jnp.full((d_inner,), -4.0, dtype=dtype),  # softplus^-1(~0.018)
+        "w_dt": (jax.random.normal(keys[3], (1, d_inner)) * 0.1).astype(dtype),
+        "a_log": jnp.log(a_init).astype(dtype),
+        "d_skip": jnp.ones((d_inner,), dtype=dtype),
+        "w_out": (jax.random.normal(keys[4], (d_inner, d_model)) * sinner).astype(dtype),
+    }
+
+
+def _ssm_params(params, u):
+    """Input-dependent (dt, B, C) from the post-conv activations u."""
+    bcdt = u @ params["w_bcdt"]                       # (..., 2*ds + 1)
+    d_state = (bcdt.shape[-1] - 1) // 2
+    B, C, dt_raw = jnp.split(bcdt, [d_state, 2 * d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ params["w_dt"] + params["dt_bias"])  # (..., d_inner)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))  # (d_inner, d_state)
+    return dt, B, C, A
+
+
+def _causal_conv(params, x):
+    """Depthwise causal conv1d over (batch, seq, d_inner)."""
+    d_conv = params["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * params["conv_w"][i]
+              for i in range(d_conv))
+    return out + params["conv_b"]
+
+
+def _ssm_apply(params, u, dt, B, C, A, h0=None):
+    """Selective scan over the full given span; returns (y, h_last).
+
+    h_t = decay_t h_{t-1} + drive_t, with optional incoming state h0
+    folded in closed form: h_t += (prod_{j<=t} decay_j) h0.
+    """
+    dt32, u32 = dt.astype(jnp.float32), u.astype(jnp.float32)
+    B32, C32 = B.astype(jnp.float32), C.astype(jnp.float32)
+    log_decay = dt32[..., None] * A                   # (b, s, d_inner, N)
+    decay = jnp.exp(log_decay)
+    drive = (dt32 * u32)[..., None] * B32[..., None, :]
+
+    def combine(a, b_):
+        d1, x1 = a
+        d2, x2 = b_
+        return d1 * d2, x1 * d2 + x2
+
+    _, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    if h0 is not None:
+        h = h + jnp.exp(jnp.cumsum(log_decay, axis=1)) * h0[:, None]
+    y = jnp.einsum("bsdn,bsn->bsd", h, C32)
+    y = y + params["d_skip"].astype(jnp.float32) * u32
+    return y, h[:, -1]
+
+
+def mamba_block(params: dict, x: jax.Array,
+                seq_chunk: int | None = None) -> jax.Array:
+    """x: (batch, seq, d_model) -> same; training/prefill path.
+
+    ``seq_chunk`` (perf P7): run the selective scan in sequence chunks
+    with a carried (d_inner, N) state — bounds the (b, s, d_inner, N)
+    decay/drive temporaries to O(b * chunk * d_inner * N).  This is the
+    XLA-side analogue of the fused mamba kernel's working-set control.
+    """
+    b, s, _ = x.shape
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)                  # (b, s, d_inner)
+    u = jax.nn.silu(_causal_conv(params, u))
+    dt, B, C, A = _ssm_params(params, u)
+
+    if seq_chunk is None or s % seq_chunk != 0 or s <= seq_chunk:
+        y, _ = _ssm_apply(params, u, dt, B, C, A)
+    else:
+        nc = s // seq_chunk
+        resh = lambda t: jnp.moveaxis(
+            t.reshape(b, nc, seq_chunk, *t.shape[2:]), 1, 0)
+        d_inner = u.shape[-1]
+        h0 = jnp.zeros((b, d_inner, A.shape[-1]), jnp.float32)
+
+        def body(h, xs):
+            uc, dtc, Bc, Cc = xs
+            yc, h_new = _ssm_apply(params, uc, dtc, Bc, Cc, A, h0=h)
+            return h_new, yc
+
+        _, ys = jax.lax.scan(jax.checkpoint(body), h0,
+                             (resh(u), resh(dt), resh(B), resh(C)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s, -1)
+
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["w_out"]
+
+
+def mamba_prefill(params: dict, x: jax.Array,
+                  seq_chunk: int | None = None) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also emits the decode state (fresh
+    cache): recurrent h after the last token + the conv tail."""
+    b, s, _ = x.shape
+    xz = x @ params["w_in"]
+    u_pre, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(_causal_conv(params, u_pre))
+    dt, B, C, A = _ssm_params(params, u)
+    y, h_last = _ssm_apply(params, u, dt, B, C, A)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["w_out"]
+
+    d_conv = params["conv_w"].shape[0]
+    tail = d_conv - 1
+    if s >= tail:
+        conv_tail = u_pre[:, s - tail:, :]
+    else:
+        conv_tail = jnp.pad(u_pre, ((0, 0), (tail - s, 0), (0, 0)))
+    return out, {"h": h_last, "conv": conv_tail.astype(x.dtype)}
+
+
+def init_mamba_state(batch: int, d_model: int, d_state: int, d_conv: int,
+                     expand: int, dtype) -> dict:
+    d_inner = expand * d_model
+    return {
+        "h": jnp.zeros((batch, d_inner, d_state), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype=dtype),
+    }
+
+
+def mamba_decode_step(params: dict, x: jax.Array, state: dict
+                      ) -> tuple[jax.Array, dict]:
+    """Single-token step.  x: (batch, 1, d_model)."""
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)                  # (b, 1, d_inner)
+    conv_buf = jnp.concatenate([state["conv"], u.astype(state["conv"].dtype)], axis=1)
+    d_conv = params["conv_w"].shape[0]
+    u_conv = jnp.einsum("bkd,kd->bd", conv_buf, params["conv_w"]) + params["conv_b"]
+    u_act = jax.nn.silu(u_conv)[:, None, :]           # (b, 1, d_inner)
+
+    dt, B, C, A = _ssm_params(params, u_act)
+    dt32 = dt[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt32[..., None] * A)              # (b, d_inner, d_state)
+    drive = (dt32 * u_act[:, 0].astype(jnp.float32))[..., None] * \
+        B[:, 0].astype(jnp.float32)[:, None, :]
+    h = state["h"] * decay + drive
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0].astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32) * u_act[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = (y @ params["w_out"])[:, None, :]
+    return out, {"h": h, "conv": conv_buf[:, 1:, :]}

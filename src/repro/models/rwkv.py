@@ -1,0 +1,159 @@
+"""RWKV-6 "Finch" block: attention-free time mixing with data-dependent decay.
+
+Per head (size N), with receptance r_t, key k_t, value v_t, decay w_t
+(all input-dependent in RWKV-6) and a learned bonus u:
+
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+The reference path below is a ``lax.scan`` over time; the Pallas kernel in
+``repro/kernels/rwkv6`` implements the chunked formulation and is verified
+against ``wkv6_ref``.  Decode carries the (heads, N, N) state — O(1) per
+token, which is why rwkv6 runs long_500k.
+
+Channel mixing is the RWKV variant of a gated MLP with token shift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_rwkv_block", "rwkv_time_mix", "rwkv_channel_mix",
+    "wkv6_ref", "init_rwkv_state", "rwkv_time_mix_decode",
+]
+
+
+def init_rwkv_block(key, d_model: int, head_size: int, dtype,
+                    d_ff: int | None = None) -> dict:
+    assert d_model % head_size == 0
+    d_ff = d_ff or 4 * d_model
+    keys = jax.random.split(key, 10)
+    s = 1.0 / jnp.sqrt(d_model)
+    num_heads = d_model // head_size
+    return {
+        # time mixing
+        "w_r": (jax.random.normal(keys[0], (d_model, d_model)) * s).astype(dtype),
+        "w_k": (jax.random.normal(keys[1], (d_model, d_model)) * s).astype(dtype),
+        "w_v": (jax.random.normal(keys[2], (d_model, d_model)) * s).astype(dtype),
+        "w_g": (jax.random.normal(keys[3], (d_model, d_model)) * s).astype(dtype),
+        "w_decay": (jax.random.normal(keys[4], (d_model, d_model)) * 0.1 * s).astype(dtype),
+        "decay_bias": jnp.full((d_model,), -5.0, dtype=dtype),
+        "bonus_u": (0.5 * jax.random.normal(keys[5], (num_heads, head_size))).astype(dtype),
+        "mix_coeff": (0.5 * jnp.ones((5, d_model))).astype(dtype),
+        "w_out_t": (jax.random.normal(keys[6], (d_model, d_model)) * s).astype(dtype),
+        "ln_x_scale": jnp.ones((d_model,), dtype=dtype),
+        # channel mixing
+        "cm_wk": (jax.random.normal(keys[7], (d_model, d_ff)) * s).astype(dtype),
+        "cm_wv": (jax.random.normal(keys[8], (d_ff, d_model)) * 0.5 * s).astype(dtype),
+        "cm_wr": (jax.random.normal(keys[9], (d_model, d_model)) * s).astype(dtype),
+        "cm_mix": (0.5 * jnp.ones((2, d_model))).astype(dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Shift sequence right by one; ``last`` supplies the carry for decode."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1) if x.shape[1] > 1 \
+        else last[:, None, :]
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """Sequential WKV6 oracle.
+
+    r,k,v,w: (batch, seq, heads, N); u: (heads, N);
+    state: (batch, heads, N, N) [k-major: state[b,h,i,j] = sum decay * k_i v_j].
+    Returns (out: (batch, seq, heads, N), final_state).
+    """
+    b, s, h, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), dtype=jnp.float32)
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    w32 = w.astype(jnp.float32)
+    u32 = u.astype(jnp.float32)
+
+    def step(carry, ts):
+        st = carry
+        rt, kt, vt, wt = ts  # (b, h, n)
+        kv = kt[..., :, None] * vt[..., None, :]          # (b, h, n, n)
+        att = st + u32[None, :, :, None] * kv             # bonus on current
+        ot = jnp.einsum("bhn,bhnm->bhm", rt, att)
+        st = wt[..., :, None] * st + kv
+        return st, ot
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r32, k32, v32, w32))
+    final, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), final
+
+
+def rwkv_time_mix(params: dict, x: jax.Array, head_size: int,
+                  state: jax.Array | None = None, x_last: jax.Array | None = None,
+                  impl: str = "reference"
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, final_wkv_state, last_token) for chaining decode."""
+    b, s, d = x.shape
+    h = d // head_size
+    shifted = _token_shift(x, x_last)
+    mix = params["mix_coeff"]
+    xr = x * mix[0] + shifted * (1 - mix[0])
+    xk = x * mix[1] + shifted * (1 - mix[1])
+    xv = x * mix[2] + shifted * (1 - mix[2])
+    xg = x * mix[3] + shifted * (1 - mix[3])
+    xw = x * mix[4] + shifted * (1 - mix[4])
+
+    r = (xr @ params["w_r"]).reshape(b, s, h, head_size)
+    k = (xk @ params["w_k"]).reshape(b, s, h, head_size)
+    v = (xv @ params["w_v"]).reshape(b, s, h, head_size)
+    g = jax.nn.silu(xg @ params["w_g"])
+    # data-dependent decay in (0, 1):  w = exp(-exp(decay))
+    decay = params["decay_bias"] + xw @ params["w_decay"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(b, s, h, head_size)
+
+    if impl == "pallas":
+        from repro.kernels.rwkv6 import ops as wkv_ops
+        out, final = wkv_ops.wkv6(r, k, v, w.astype(r.dtype),
+                                  params["bonus_u"], state)
+    else:
+        out, final = wkv6_ref(r, k, v, w.astype(r.dtype), params["bonus_u"],
+                              state)
+    out = out.reshape(b, s, d)
+    # group-norm over heads (ln_x in the reference implementation)
+    out = out.reshape(b, s, h, head_size)
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    out = out * params["ln_x_scale"] * g
+    return out @ params["w_out_t"], final, x[:, -1, :]
+
+
+def rwkv_channel_mix(params: dict, x: jax.Array,
+                     x_last: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    shifted = _token_shift(x, x_last)
+    mix = params["cm_mix"]
+    xk = x * mix[0] + shifted * (1 - mix[0])
+    xr = x * mix[1] + shifted * (1 - mix[1])
+    k = jnp.square(jax.nn.relu(xk @ params["cm_wk"]))
+    kv = k @ params["cm_wv"]
+    return jax.nn.sigmoid(xr @ params["cm_wr"]) * kv, x[:, -1, :]
+
+
+def init_rwkv_state(batch: int, d_model: int, head_size: int) -> dict:
+    h = d_model // head_size
+    return {
+        "wkv": jnp.zeros((batch, h, head_size, head_size), dtype=jnp.float32),
+        "tm_last": jnp.zeros((batch, d_model), dtype=jnp.float32),
+        "cm_last": jnp.zeros((batch, d_model), dtype=jnp.float32),
+    }
+
+
+def rwkv_time_mix_decode(params: dict, x: jax.Array, head_size: int,
+                         state: dict) -> tuple[jax.Array, dict]:
+    """Single-token decode; x: (batch, 1, d)."""
+    out, wkv, last = rwkv_time_mix(
+        params, x, head_size, state=state["wkv"],
+        x_last=state["tm_last"].astype(x.dtype))
+    return out, {**state, "wkv": wkv, "tm_last": last.astype(jnp.float32)}

@@ -1,0 +1,112 @@
+"""Pure-JAX optimizers (no optax dependency in this container).
+
+The paper's algorithms use plain (tracked) gradient steps; these are the
+substrate for the non-bilevel examples and for inner-problem solvers.
+Each optimizer is (init, update) on arbitrary pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd", "momentum", "adam", "adamw", "clip_by_global_norm",
+           "cosine_schedule", "warmup_linear"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(_params):
+        return ()
+
+    def update(grads, state, _params=None):
+        return _tmap(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return _tmap(jnp.zeros_like, params)
+
+    def update(grads, vel, _params=None):
+        vel = _tmap(lambda v, g: beta * v + g, vel, grads)
+        if nesterov:
+            upd = _tmap(lambda v, g: -lr * (beta * v + g), vel, grads)
+        else:
+            upd = _tmap(lambda v: -lr * v, vel)
+        return upd, vel
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return AdamState(_tmap(jnp.zeros_like, params),
+                         _tmap(jnp.zeros_like, params),
+                         jnp.zeros((), jnp.int32))
+
+    def update(grads, state, _params=None):
+        count = state.count + 1
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = _tmap(lambda n, g: b2 * n + (1 - b2) * g * g, state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        upd = _tmap(lambda m, n: -lr * (m / c1) / (jnp.sqrt(n / c2) + eps),
+                    mu, nu)
+        return upd, AdamState(mu, nu, count)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        upd, state = base.update(grads, state, params)
+        upd = _tmap(lambda u, p: u - lr * weight_decay * p, upd, params)
+        return upd, state
+
+    return Optimizer(base.init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(grads))
+    norm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                 grads), norm
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return lr
+
+
+def warmup_linear(base_lr: float, warmup_steps: int):
+    def lr(step):
+        return base_lr * jnp.minimum(1.0, (step + 1) / warmup_steps)
+    return lr

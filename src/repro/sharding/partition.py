@@ -1,0 +1,135 @@
+"""Parameter / state sharding rules for the production meshes.
+
+Rule for weight leaves: shard the largest dimension divisible by the
+``model`` axis size (ties broken toward later dims — output features),
+replicate 1-D leaves (norm scales, biases).  Per-agent stacked state
+(leading dim = number of agents) puts the agent axis first.
+
+This single divisibility-driven rule covers every assigned architecture:
+  * embed (vocab, d)           -> vocab on model (vocab >> d)
+  * attention wq (d, h, hd)    -> d or h on model depending on divisibility
+  * MoE expert stacks (E, d, f)-> E on model when E % 16 == 0 (expert
+    parallelism: dbrx/jamba 16e), else f (mixtral 8e -> tensor parallel
+    inside experts)
+  * mamba / rwkv inner dims    -> d_inner on model
+KV caches shard batch on the data axes when divisible, else the sequence
+dim (long_500k batch=1), else replicate.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "leaf_spec", "tree_specs", "tree_shardings", "stacked_tree_specs",
+    "cache_specs", "batch_spec",
+]
+
+
+def _largest_divisible_dim(shape, size: int, skip: tuple[int, ...] = ()):
+    """Index of the largest dim divisible by ``size`` (later dims win ties),
+    or None."""
+    best, best_dim = None, -1
+    for i, d in enumerate(shape):
+        if i in skip:
+            continue
+        if d % size == 0 and d >= size and d >= best_dim:
+            best, best_dim = i, d
+    return best
+
+
+def leaf_spec(shape, model_size: int, agent_axes: tuple[str, ...] | None = None,
+              agent_leading: bool = False,
+              extra_axes: tuple[tuple[str, int], ...] = ()) -> P:
+    """PartitionSpec for one weight leaf.
+
+    ``extra_axes``: additional (axis_name, size) pairs to spread over
+    further divisible dims — used by the agents-per-pod layout (perf P6)
+    where each agent's parameters shard over model AND data.
+    """
+    entries: list[Any] = [None] * len(shape)
+    start = 0
+    if agent_leading:
+        entries[0] = agent_axes if len(agent_axes) > 1 else agent_axes[0]
+        start = 1
+    if len(shape) - start >= 2:  # matrices and higher: shard on model
+        skip: tuple[int, ...] = ()
+        idx = _largest_divisible_dim(shape[start:], model_size)
+        if idx is not None:
+            entries[start + idx] = "model"
+            skip = (idx,)
+        for name, size in extra_axes:
+            j = _largest_divisible_dim(shape[start:], size, skip=skip)
+            if j is not None:
+                entries[start + j] = name
+                skip = skip + (j,)
+    return P(*entries)
+
+
+def tree_specs(tree, model_size: int) -> Any:
+    """Specs for a plain (single-copy) parameter pytree."""
+    return jax.tree_util.tree_map(
+        lambda l: leaf_spec(l.shape, model_size), tree)
+
+
+def stacked_tree_specs(tree, model_size: int,
+                       agent_axes: tuple[str, ...],
+                       extra_axes: tuple[tuple[str, int], ...] = ()) -> Any:
+    """Specs for per-agent stacked state: leaves are (num_agents, ...)."""
+    return jax.tree_util.tree_map(
+        lambda l: leaf_spec(l.shape, model_size, agent_axes,
+                            agent_leading=True, extra_axes=extra_axes), tree)
+
+
+def tree_shardings(mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(agent_axes: tuple[str, ...], per_agent: bool = True) -> P:
+    """Input batch: leading agent dim (per-agent layout) or plain batch."""
+    ax = agent_axes if len(agent_axes) > 1 else agent_axes[0]
+    return P(ax)
+
+
+def cache_specs(tree, mesh, batch: int) -> Any:
+    """Decode-cache sharding.
+
+    Leaves look like (periods, batch, seq, kv_heads, hd) for attention or
+    (periods, batch, inner, state) for SSM.  Strategy:
+      * shard batch over the data axes when divisible,
+      * else shard the largest remaining dim over 'data' (long-context
+        single-request: the cache *sequence* gets sharded),
+      * always try to put 'model' on a divisible trailing dim.
+    """
+    data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    data_size = int(np.prod([mesh.shape[a] for a in data_axes]))
+    model_size = mesh.shape["model"]
+    data_entry = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def spec_for(l):
+        shape = l.shape
+        entries: list[Any] = [None] * len(shape)
+        # periods dim (0) never sharded.
+        used_data = False
+        if len(shape) >= 2 and shape[1] == batch and batch % data_size == 0:
+            entries[1] = data_entry
+            used_data = True
+        # model on the largest divisible trailing dim (skip periods+batch)
+        idx = _largest_divisible_dim(shape[2:], model_size)
+        if idx is not None:
+            entries[2 + idx] = "model"
+        if not used_data:
+            # long_500k: batch too small — shard the big sequence dim on data
+            cand = _largest_divisible_dim(
+                shape[2:], data_size,
+                skip=(() if idx is None else (idx,)))
+            if cand is not None and shape[2 + cand] >= 4 * data_size:
+                entries[2 + cand] = data_entry
+        return P(*entries)
+
+    return jax.tree_util.tree_map(spec_for, tree)

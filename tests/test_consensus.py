@@ -1,0 +1,105 @@
+"""Tests for mixing matrices and the consensus combine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    erdos_renyi_adjacency,
+    laplacian_mixing,
+    metropolis_mixing,
+    mix_pytree,
+    ring_mixing,
+    second_eigenvalue,
+    validate_mixing,
+)
+
+
+@pytest.mark.parametrize("m,p", [(5, 0.5), (10, 0.5), (5, 0.3), (5, 0.7), (8, 0.9)])
+def test_laplacian_mixing_properties(m, p):
+    adj = erdos_renyi_adjacency(m, p, seed=42)
+    spec = laplacian_mixing(adj)
+    validate_mixing(spec.matrix, adj)
+    assert 0.0 <= spec.lam < 1.0  # connected graph => lambda < 1
+
+
+@pytest.mark.parametrize("m", [4, 5, 16, 32])
+def test_metropolis_mixing_properties(m):
+    adj = erdos_renyi_adjacency(m, 0.4, seed=7)
+    spec = metropolis_mixing(adj)
+    validate_mixing(spec.matrix, adj)
+    assert spec.lam < 1.0
+
+
+@pytest.mark.parametrize("m", [2, 3, 4, 16, 32, 256])
+def test_ring_mixing_analytic_lambda(m):
+    spec = ring_mixing(m, self_weight=1.0 / 3.0)
+    validate_mixing(spec.matrix)
+    # analytic eigenvalues: w0 + 2*w1*cos(2 pi k/m)
+    w0, w1 = 1.0 / 3.0, 1.0 / 3.0
+    eigs = np.array([w0 + 2 * w1 * np.cos(2 * np.pi * k / m) for k in range(m)])
+    eigs = np.sort(np.abs(eigs))[::-1]
+    assert spec.lam == pytest.approx(eigs[1], abs=1e-9)
+
+
+def test_ring_mixing_matches_ppermute_weights():
+    spec = ring_mixing(8, self_weight=0.5)
+    assert spec.neighbors == (-1, 1)
+    assert spec.self_weight == pytest.approx(0.5)
+    # row structure: self weight on diag, w1 on the two ring neighbours
+    assert spec.matrix[0, 0] == pytest.approx(0.5)
+    assert spec.matrix[0, 1] == pytest.approx(0.25)
+    assert spec.matrix[0, 7] == pytest.approx(0.25)
+
+
+def test_mix_pytree_matches_dense_matmul():
+    m, d = 6, 13
+    key = jax.random.PRNGKey(0)
+    mat = jnp.asarray(ring_mixing(m).matrix)
+    leaf = jax.random.normal(key, (m, d, 3))
+    tree = {"a": leaf, "b": (leaf[..., 0], leaf[..., 1])}
+    mixed = mix_pytree(mat, tree)
+    expect = jnp.einsum("ij,jdk->idk", mat, leaf)
+    np.testing.assert_allclose(np.asarray(mixed["a"]), np.asarray(expect), rtol=1e-6)
+
+
+def test_consensus_contraction():
+    """||Mx - 1 x_bar|| <= lambda ||x - 1 x_bar|| (Step-3 contraction)."""
+    m = 10
+    spec = laplacian_mixing(erdos_renyi_adjacency(m, 0.5, seed=1))
+    mat = jnp.asarray(spec.matrix)
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, 17))
+    xbar = x.mean(axis=0, keepdims=True)
+    before = jnp.linalg.norm(x - xbar)
+    mixed = mat @ x
+    after = jnp.linalg.norm(mixed - mixed.mean(axis=0, keepdims=True))
+    assert float(after) <= spec.lam * float(before) + 1e-6
+
+
+def test_mixing_preserves_mean():
+    """Doubly-stochastic M preserves the agent average exactly."""
+    m = 12
+    spec = ring_mixing(m)
+    x = jax.random.normal(jax.random.PRNGKey(3), (m, 9))
+    mixed = jnp.asarray(spec.matrix) @ x
+    np.testing.assert_allclose(np.asarray(mixed.mean(0)), np.asarray(x.mean(0)),
+                               atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(3, 24), sw=st.floats(0.1, 0.9))
+def test_ring_mixing_property(m, sw):
+    spec = ring_mixing(m, self_weight=sw)
+    validate_mixing(spec.matrix)
+    assert 0.0 <= spec.lam <= 1.0
+    assert spec.self_weight == pytest.approx(sw)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(3, 12), p=st.floats(0.3, 1.0), seed=st.integers(0, 999))
+def test_er_graph_connected_and_valid(m, p, seed):
+    adj = erdos_renyi_adjacency(m, p, seed)
+    spec = laplacian_mixing(adj)
+    validate_mixing(spec.matrix, adj)
+    assert spec.lam < 1.0 - 1e-9

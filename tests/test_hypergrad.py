@@ -1,0 +1,159 @@
+"""Hypergradient correctness: CG & Neumann vs. analytic quadratic oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    HypergradConfig,
+    cg_solve,
+    hvp_xy,
+    hvp_yy,
+    hypergradient,
+    neumann_inverse_apply,
+)
+
+
+def quad_problem(key, dx=5, dy=4, mu=0.5):
+    """Analytic bilevel instance:
+
+      g(x, y) = 0.5 y^T A y + x^T B y        (A symm PD => y*(x) = -A^-1 B^T x)
+      f(x, y) = 0.5 ||y - c||^2 + 0.5||x||^2
+
+    True hypergradient:
+      l(x) = f(x, y*(x)),  grad l = x + (dy*/dx)^T (y* - c)
+           = x - B A^{-1} (y*(x) - c).
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.random.normal(k1, (dy, dy))
+    A = w @ w.T / dy + mu * jnp.eye(dy)
+    B = jax.random.normal(k2, (dx, dy)) / np.sqrt(dx)
+    c = jax.random.normal(k3, (dy,))
+
+    def g(x, y, _batch=None):
+        return 0.5 * y @ A @ y + x @ B @ y
+
+    def f(x, y, _batch=None):
+        return 0.5 * jnp.sum((y - c) ** 2) + 0.5 * jnp.sum(x ** 2)
+
+    def true_hypergrad(x):
+        y_star = -jnp.linalg.solve(A, B.T @ x)
+        return x - B @ jnp.linalg.solve(A, y_star - c), y_star
+
+    return f, g, A, B, true_hypergrad
+
+
+def test_hvp_yy_matches_matrix():
+    f, g, A, B, _ = quad_problem(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5,))
+    y = jax.random.normal(jax.random.PRNGKey(2), (4,))
+    v = jax.random.normal(jax.random.PRNGKey(3), (4,))
+    np.testing.assert_allclose(np.asarray(hvp_yy(g, x, y, v)),
+                               np.asarray(A @ v), rtol=1e-5)
+
+
+def test_hvp_xy_matches_matrix():
+    f, g, A, B, _ = quad_problem(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5,))
+    y = jax.random.normal(jax.random.PRNGKey(2), (4,))
+    v = jax.random.normal(jax.random.PRNGKey(3), (4,))
+    np.testing.assert_allclose(np.asarray(hvp_xy(g, x, y, v)),
+                               np.asarray(B @ v), rtol=1e-5)
+
+
+def test_cg_solve_spd():
+    _, g, A, _, _ = quad_problem(jax.random.PRNGKey(4))
+    b = jax.random.normal(jax.random.PRNGKey(5), (4,))
+    x = jax.random.normal(jax.random.PRNGKey(6), (5,))
+    y = jnp.zeros((4,))
+    z = cg_solve(lambda v: hvp_yy(g, x, y, v), b, iters=50, tol=1e-10)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(jnp.linalg.solve(A, b)),
+                               rtol=1e-4)
+
+
+def test_hypergradient_cg_matches_analytic_at_ystar():
+    f, g, A, B, truth = quad_problem(jax.random.PRNGKey(7))
+    x = jax.random.normal(jax.random.PRNGKey(8), (5,))
+    expected, y_star = truth(x)
+    cfg = HypergradConfig(method="cg", cg_iters=64, cg_tol=1e-12)
+    got = hypergradient(f, g, x, y_star, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected), rtol=1e-4)
+
+
+def test_neumann_converges_to_cg_with_k():
+    """Deterministic Neumann bias shrinks like (1 - mu/L)^K (Lemma 3)."""
+    f, g, A, B, truth = quad_problem(jax.random.PRNGKey(9))
+    x = jax.random.normal(jax.random.PRNGKey(10), (5,))
+    expected, y_star = truth(x)
+    L = float(jnp.linalg.eigvalsh(A)[-1]) * 1.05
+    errs = []
+    for K in (2, 8, 32, 128):
+        cfg = HypergradConfig(method="neumann", neumann_k=K, lipschitz_g=L)
+        got = hypergradient(f, g, x, y_star, cfg)
+        errs.append(float(jnp.linalg.norm(got - expected)))
+    assert errs[-1] < 1e-3
+    assert errs == sorted(errs, reverse=True)  # monotone in K
+
+
+def test_stochastic_neumann_unbiased_in_expectation():
+    """E_k[(K/L)(I - A/L)^k b] equals the K-term truncated sum."""
+    _, g, A, _, _ = quad_problem(jax.random.PRNGKey(11))
+    b = jax.random.normal(jax.random.PRNGKey(12), (4,))
+    x = jnp.zeros((5,))
+    y = jnp.zeros((4,))
+    L = float(jnp.linalg.eigvalsh(A)[-1]) * 1.1
+    K = 6
+    det = neumann_inverse_apply(g, x, y, b, k_terms=K, lipschitz_g=L)
+    samples = [
+        neumann_inverse_apply(g, x, y, b, k_terms=K, lipschitz_g=L,
+                              stochastic_k=True, key=jax.random.PRNGKey(s))
+        for s in range(3000)
+    ]
+    mean = jnp.mean(jnp.stack(samples), axis=0)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(det),
+                               atol=5e-2, rtol=0.1)
+
+
+def test_hypergradient_pytree_params():
+    """Hypergradient works on nested pytrees (the MLP case)."""
+    def g(x, y, batch=None):
+        (w1, b1) = x[0]
+        wy, by = y
+        h = jnp.tanh(batch @ w1 + b1)
+        return jnp.sum((h @ wy + by) ** 2) / batch.shape[0] + 0.5 * (
+            jnp.sum(wy ** 2) + jnp.sum(by ** 2))
+
+    def f(x, y, batch=None):
+        (w1, b1) = x[0]
+        wy, by = y
+        h = jnp.tanh(batch @ w1 + b1)
+        return jnp.mean((h @ wy + by - 1.0) ** 2)
+
+    key = jax.random.PRNGKey(13)
+    batch = jax.random.normal(key, (32, 6))
+    x = [(jax.random.normal(jax.random.PRNGKey(14), (6, 8)) * 0.3,
+          jnp.zeros((8,)))]
+    y = (jax.random.normal(jax.random.PRNGKey(15), (8, 3)) * 0.3,
+         jnp.zeros((3,)))
+    cfg_cg = HypergradConfig(method="cg", cg_iters=64, cg_tol=1e-12)
+    cfg_ne = HypergradConfig(method="neumann", neumann_k=256, lipschitz_g=8.0)
+    p_cg = hypergradient(f, g, x, y, cfg_cg, f_args=(batch,), g_args=(batch,))
+    p_ne = hypergradient(f, g, x, y, cfg_ne, f_args=(batch,), g_args=(batch,))
+    for a, b in zip(jax.tree_util.tree_leaves(p_cg),
+                    jax.tree_util.tree_leaves(p_ne)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-2, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), dx=st.integers(2, 8), dy=st.integers(2, 8))
+def test_hypergradient_matches_finite_difference(seed, dx, dy):
+    """Property: grad_bar f at y*(x) == finite-difference of l(x)."""
+    f, g, A, B, truth = quad_problem(jax.random.PRNGKey(seed), dx=dx, dy=dy)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (dx,))
+    expected, y_star = truth(x)
+    cfg = HypergradConfig(method="cg", cg_iters=96, cg_tol=1e-12)
+    got = hypergradient(f, g, x, y_star, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected),
+                               rtol=1e-3, atol=1e-5)

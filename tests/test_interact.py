@@ -1,0 +1,160 @@
+"""System behaviour tests for INTERACT / SVR-INTERACT / baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HypergradConfig,
+    MLPMetaProblem,
+    convergence_metric,
+    erdos_renyi_adjacency,
+    init_dsgd_state,
+    init_gt_dsgd_state,
+    init_head,
+    init_mlp_backbone,
+    init_state,
+    init_svr_state,
+    laplacian_mixing,
+    make_dsgd_step,
+    make_gt_dsgd_step,
+    make_interact_step,
+    make_svr_interact_step,
+    make_synthetic_agents,
+    theorem1_step_sizes,
+)
+
+M_AGENTS = 5
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    data = make_synthetic_agents(key, num_agents=M_AGENTS, n_per_agent=200,
+                                 d_in=16, num_classes=5)
+    prob = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(1), 16, hidden=20)
+    y0 = init_head(jax.random.PRNGKey(2), 20, 5)
+    spec = laplacian_mixing(erdos_renyi_adjacency(M_AGENTS, 0.5, seed=3))
+    hg = HypergradConfig(method="cg", cg_iters=24)
+    return data, prob, x0, y0, spec, hg
+
+
+def _run(step, state, data, iters):
+    for _ in range(iters):
+        state = step(state, data)
+    return state
+
+
+def _metric(prob, hg, state, data):
+    rep = convergence_metric(prob, hg, state.x, state.y, 300, 0.5, data)
+    return float(rep.total)
+
+
+def test_interact_decreases_metric(setup):
+    data, prob, x0, y0, spec, hg = setup
+    st0 = init_state(prob, hg, x0, y0, data)
+    step = make_interact_step(prob, hg, spec, alpha=0.3, beta=0.3)
+    m0 = _metric(prob, hg, st0, data)
+    st = _run(step, st0, data, 50)
+    m1 = _metric(prob, hg, st, data)
+    assert m1 < 0.1 * m0  # strong decrease after 50 full-gradient steps
+    assert np.isfinite(m1)
+
+
+def test_interact_consensus_error_shrinks(setup):
+    data, prob, x0, y0, spec, hg = setup
+    st = init_state(prob, hg, x0, y0, data)
+    step = make_interact_step(prob, hg, spec, alpha=0.3, beta=0.3)
+    st = _run(step, st, data, 60)
+    rep = convergence_metric(prob, hg, st.x, st.y, 300, 0.5, data)
+    assert float(rep.consensus_error) < 5e-3
+    assert float(rep.inner_error) < 5e-2
+
+
+def test_tracking_preserves_average_gradient_identity(setup):
+    """Gradient-tracking invariant: u_bar_t == p_bar_t for all t.
+
+    Averaging eq. (10) over agents with doubly-stochastic M telescopes to
+    u_bar_t = u_bar_{t-1} + p_bar_t - p_bar_{t-1} and u_0 = p_0.
+    """
+    data, prob, x0, y0, spec, hg = setup
+    st = init_state(prob, hg, x0, y0, data)
+    step = make_interact_step(prob, hg, spec, alpha=0.2, beta=0.2)
+    for _ in range(8):
+        st = step(st, data)
+        u_bar = jax.tree_util.tree_map(lambda l: l.mean(0), st.u)
+        p_bar = jax.tree_util.tree_map(lambda l: l.mean(0), st.p_prev)
+        for a, b in zip(jax.tree_util.tree_leaves(u_bar),
+                        jax.tree_util.tree_leaves(p_bar)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+def test_svr_interact_converges(setup):
+    data, prob, x0, y0, spec, hg = setup
+    sst = init_svr_state(prob, hg, x0, y0, data, jax.random.PRNGKey(7))
+    step = make_svr_interact_step(prob, hg, spec, alpha=0.3, beta=0.3, q=12)
+    m0 = _metric(prob, hg, sst, data)
+    sst = _run(step, sst, data, 50)
+    m1 = _metric(prob, hg, sst, data)
+    assert m1 < 0.2 * m0
+
+
+def test_interact_beats_baselines(setup):
+    """Fig. 2 qualitative claim: INTERACT/SVR < GT-DSGD and D-SGD on M."""
+    data, prob, x0, y0, spec, hg = setup
+    iters, bs = 40, 12
+
+    st = _run(make_interact_step(prob, hg, spec, 0.3, 0.3),
+              init_state(prob, hg, x0, y0, data), data, iters)
+    sst = _run(make_svr_interact_step(prob, hg, spec, 0.3, 0.3, q=12),
+               init_svr_state(prob, hg, x0, y0, data, jax.random.PRNGKey(7)),
+               data, iters)
+    gst = _run(make_gt_dsgd_step(prob, hg, spec, 0.3, 0.3, bs),
+               init_gt_dsgd_state(prob, hg, x0, y0, data,
+                                  jax.random.PRNGKey(8), bs), data, iters)
+    dst = _run(make_dsgd_step(prob, hg, spec, 0.3, 0.3, bs),
+               init_dsgd_state(x0, y0, M_AGENTS, jax.random.PRNGKey(9)),
+               data, iters)
+
+    m_int = _metric(prob, hg, st, data)
+    m_svr = _metric(prob, hg, sst, data)
+    m_gt = _metric(prob, hg, gst, data)
+    m_d = _metric(prob, hg, dst, data)
+    assert m_int < m_gt and m_int < m_d
+    assert m_svr < m_gt and m_svr < m_d
+
+
+def test_one_over_t_rate(setup):
+    """Theorem 1: running average of M_t decays like O(1/T)."""
+    data, prob, x0, y0, spec, hg = setup
+    st = init_state(prob, hg, x0, y0, data)
+    step = make_interact_step(prob, hg, spec, alpha=0.25, beta=0.25)
+    metrics = []
+    for t in range(60):
+        metrics.append(_metric(prob, hg, st, data))
+        st = step(st, data)
+    avg = np.cumsum(metrics) / np.arange(1, len(metrics) + 1)
+    # average metric at T=60 should be well below a C/T envelope fit at T=10
+    c = avg[9] * 10
+    assert avg[-1] <= c / len(avg) * 3.0  # slack factor 3 for constants
+
+
+def test_theorem1_step_sizes_reasonable():
+    a, b = theorem1_step_sizes(mu_g=0.5, L_g=4.0, lam=0.9, m=5)
+    assert 0 < a < 1 and 0 < b <= 3 * 4.5 / 2.0
+    # denser network (smaller lambda) admits a larger alpha (Remark 1)
+    a2, _ = theorem1_step_sizes(mu_g=0.5, L_g=4.0, lam=0.2, m=5)
+    assert a2 >= a
+
+
+def test_interact_deterministic(setup):
+    """Full-gradient INTERACT is exactly deterministic."""
+    data, prob, x0, y0, spec, hg = setup
+    step = make_interact_step(prob, hg, spec, 0.3, 0.3)
+    s1 = _run(step, init_state(prob, hg, x0, y0, data), data, 5)
+    s2 = _run(step, init_state(prob, hg, x0, y0, data), data, 5)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.x),
+                    jax.tree_util.tree_leaves(s2.x)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,249 @@
+"""Per-kernel allclose validation against the pure-jnp oracles.
+
+Sweeps shapes/dtypes per the assignment; kernels run in interpret mode on
+CPU (the kernel body is the TPU program, executed in Python).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.rwkv6 import ops as wkv_ops, ref as wkv_ref
+from repro.kernels.consensus_step import ops as cs_ops, ref as cs_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (batch, seq, heads, kv_heads, head_dim, causal, window, softcap, dtype)
+    (2, 256, 4, 2, 64, True, None, None, jnp.float32),
+    (1, 256, 8, 1, 128, True, None, None, jnp.float32),     # MQA
+    (1, 256, 4, 4, 64, True, 128, None, jnp.float32),       # SWA
+    (1, 192, 4, 2, 64, True, None, 50.0, jnp.float32),      # softcap
+    (1, 256, 4, 2, 64, True, 64, 30.0, jnp.float32),        # SWA+softcap
+    (2, 128, 4, 2, 64, False, None, None, jnp.float32),     # bidirectional
+    (1, 200, 4, 2, 64, True, None, None, jnp.float32),      # padded seq
+    (1, 256, 2, 2, 256, True, None, None, jnp.bfloat16),    # bf16, hd=256
+    (1, 128, 4, 2, 32, True, None, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize(
+    "b,s,nh,nkv,hd,causal,win,cap,dtype", FLASH_CASES)
+def test_flash_attention_matches_oracle(b, s, nh, nkv, hd, causal, win, cap,
+                                        dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, nh, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, nkv, hd), dtype)
+    out = fa_ops.flash_attention(q, k, v, causal=causal, window=win,
+                                 logit_softcap=cap)
+    exp = fa_ref.attention_ref(q, k, v, causal=causal, window=win,
+                               logit_softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_decode_offset():
+    """q_offset path: 1 suffix query vs a longer kv prefix (decode)."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    skv, hd = 256, 64
+    q = jax.random.normal(ks[0], (1, 1, 4, hd))
+    k = jax.random.normal(ks[1], (1, skv, 2, hd))
+    v = jax.random.normal(ks[2], (1, skv, 2, hd))
+    out = fa_ops.flash_attention(q, k, v, causal=True, q_offset=skv - 1)
+    exp = fa_ref.attention_ref(q, k, v, causal=True, q_offset=skv - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+def test_flash_attention_block_size_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    outs = [
+        fa_ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+        for bq, bk in [(64, 64), (128, 128), (32, 128), (128, 32)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.integers(16, 160),
+    nh=st.sampled_from([2, 4]),
+    group=st.sampled_from([1, 2]),
+    hd=st.sampled_from([32, 64]),
+    seed=st.integers(0, 100),
+)
+def test_flash_attention_property(s, nh, group, hd, seed):
+    nkv = nh // group
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, nh, hd))
+    k = jax.random.normal(ks[1], (1, s, nkv, hd))
+    v = jax.random.normal(ks[2], (1, s, nkv, hd))
+    out = fa_ops.flash_attention(q, k, v, causal=True)
+    exp = fa_ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=3e-5)
+
+
+def test_flash_attention_rows_sum_to_convex_combination():
+    """Each output row is a convex combination of v rows (softmax weights)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jnp.ones((1, 64, 2, 32))
+    out = fa_ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.ones_like(out), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 / wkv
+# ---------------------------------------------------------------------------
+
+WKV_CASES = [
+    # (batch, seq, heads, N, chunk, with_state, dtype)
+    (2, 128, 2, 16, 32, False, jnp.float32),
+    (1, 96, 4, 32, 32, False, jnp.float32),
+    (2, 64, 2, 16, 16, True, jnp.float32),
+    (1, 100, 2, 16, 32, False, jnp.float32),   # padding
+    (1, 1, 2, 16, 32, True, jnp.float32),      # decode-like
+    (1, 128, 2, 64, 64, False, jnp.float32),   # full head size
+    (1, 64, 2, 16, 32, False, jnp.bfloat16),
+]
+
+
+def _wkv_inputs(b, s, h, n, dtype, seed=0, with_state=False):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r = jax.random.normal(ks[0], (b, s, h, n), dtype)
+    k = jax.random.normal(ks[1], (b, s, h, n), dtype)
+    v = jax.random.normal(ks[2], (b, s, h, n), dtype)
+    w = (jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n)) * 2.0 - 1.0)
+         * 0.6 + 0.35).astype(dtype)
+    u = (0.3 * jax.random.normal(ks[4], (h, n))).astype(dtype)
+    st_ = (0.5 * jax.random.normal(ks[5], (b, h, n, n), jnp.float32)
+           if with_state else None)
+    return r, k, v, w, u, st_
+
+
+@pytest.mark.parametrize("b,s,h,n,chunk,with_state,dtype", WKV_CASES)
+def test_wkv6_matches_oracle(b, s, h, n, chunk, with_state, dtype):
+    r, k, v, w, u, st_ = _wkv_inputs(b, s, h, n, dtype,
+                                     with_state=with_state)
+    out, sf = wkv_ops.wkv6(r, k, v, w, u, state=st_, chunk=chunk)
+    exp, sf_exp = wkv_ref.wkv6_ref(r, k, v, w, u, state=st_)
+    tol = 2e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_exp),
+                               atol=tol, rtol=tol)
+
+
+def test_wkv6_chunk_invariance():
+    r, k, v, w, u, _ = _wkv_inputs(1, 128, 2, 16, jnp.float32, seed=5)
+    outs = [wkv_ops.wkv6(r, k, v, w, u, chunk=c)[0] for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=2e-4)
+
+
+def test_wkv6_chained_chunks_equal_single_call():
+    """Running two halves with state carry == one full call (prefill
+    chunking invariant, used by long-context serving)."""
+    r, k, v, w, u, _ = _wkv_inputs(1, 128, 2, 16, jnp.float32, seed=6)
+    full, s_full = wkv_ops.wkv6(r, k, v, w, u)
+    h1, s1 = wkv_ops.wkv6(r[:, :64], k[:, :64], v[:, :64], w[:, :64], u)
+    h2, s2 = wkv_ops.wkv6(r[:, 64:], k[:, 64:], v[:, 64:], w[:, 64:], u,
+                          state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], axis=1)),
+                               np.asarray(full), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(2, 80), h=st.sampled_from([1, 2]),
+       n=st.sampled_from([8, 16]), seed=st.integers(0, 50))
+def test_wkv6_property(s, h, n, seed):
+    r, k, v, w, u, _ = _wkv_inputs(1, s, h, n, jnp.float32, seed=seed)
+    out, _ = wkv_ops.wkv6(r, k, v, w, u, chunk=32)
+    exp, _ = wkv_ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# consensus step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,d,dtype", [
+    (4, 512, jnp.float32), (8, 700, jnp.float32), (16, 2048, jnp.float32),
+    (5, 123, jnp.float32), (8, 512, jnp.bfloat16),
+])
+def test_consensus_step_matches_oracle(m, d, dtype):
+    from repro.core import ring_mixing
+    mix = jnp.asarray(ring_mixing(m).matrix, jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    X = jax.random.normal(ks[0], (m, d), dtype)
+    U = jax.random.normal(ks[1], (m, d), dtype)
+    P = jax.random.normal(ks[2], (m, d), dtype)
+    PP = jax.random.normal(ks[3], (m, d), dtype)
+    xn, un = cs_ops.consensus_step(mix, X, U, P, PP, alpha=0.3)
+    xo, uo = cs_ref.consensus_step_ref(mix, X, U, P, PP, alpha=0.3)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(xn, np.float32),
+                               np.asarray(xo, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(un, np.float32),
+                               np.asarray(uo, np.float32), atol=tol, rtol=tol)
+
+
+def test_consensus_step_pytree():
+    from repro.core import ring_mixing
+    m = 6
+    mix = jnp.asarray(ring_mixing(m).matrix, jnp.float32)
+    key = jax.random.PRNGKey(1)
+    tree = {"w": jax.random.normal(key, (m, 13, 7)),
+            "b": jax.random.normal(key, (m, 99))}
+    u = jax.tree_util.tree_map(lambda l: 0.1 * l, tree)
+    p = jax.tree_util.tree_map(lambda l: 0.2 * l, tree)
+    pp = jax.tree_util.tree_map(lambda l: 0.3 * l, tree)
+    xn, un = cs_ops.consensus_step(mix, tree, u, p, pp, alpha=0.25)
+    for key_ in tree:
+        X = tree[key_].reshape(m, -1)
+        xo, uo = cs_ref.consensus_step_ref(mix, X, u[key_].reshape(m, -1),
+                                           p[key_].reshape(m, -1),
+                                           pp[key_].reshape(m, -1), alpha=0.25)
+        np.testing.assert_allclose(np.asarray(xn[key_].reshape(m, -1)),
+                                   np.asarray(xo), atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(un[key_].reshape(m, -1)),
+                                   np.asarray(uo), atol=1e-5, rtol=1e-5)
+
+
+def test_consensus_kernel_in_interact_loop():
+    """The fused kernel drives the same trajectory as mix_pytree-based
+    INTERACT Step 1+3 (swap-in equivalence)."""
+    from repro.core import ring_mixing, mix_pytree
+    m = 8
+    spec = ring_mixing(m)
+    mix = jnp.asarray(spec.matrix, jnp.float32)
+    key = jax.random.PRNGKey(2)
+    x = {"p": jax.random.normal(key, (m, 50))}
+    u = {"p": 0.5 * jax.random.normal(key, (m, 50))}
+    p = {"p": 0.1 * jax.random.normal(key, (m, 50))}
+    pp = {"p": 0.2 * jax.random.normal(key, (m, 50))}
+    for _ in range(3):
+        xk, uk = cs_ops.consensus_step(mix, x, u, p, pp, alpha=0.3)
+        x_ref = jax.tree_util.tree_map(lambda mx, uu: mx - 0.3 * uu,
+                                       mix_pytree(mix, x), u)
+        u_ref = jax.tree_util.tree_map(lambda mu, pn, ppp: mu + pn - ppp,
+                                       mix_pytree(mix, u), p, pp)
+        np.testing.assert_allclose(np.asarray(xk["p"]), np.asarray(x_ref["p"]),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(uk["p"]), np.asarray(u_ref["p"]),
+                                   atol=1e-5)
+        x, u, pp = xk, uk, p

@@ -1,0 +1,133 @@
+"""Correctness of the beyond-paper perf variants (EXPERIMENTS.md §Perf):
+the optimized paths must agree with the paper-faithful reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import moe as Moe
+
+
+# ---------------------------------------------------------------------------
+# P2: blockwise attention == reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("win,cap", [(None, None), (64, None), (None, 30.0),
+                                     (64, 50.0)])
+def test_blockwise_attention_matches_ref(win, cap):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 200, 4, 32))
+    k = jax.random.normal(ks[1], (2, 200, 2, 32))
+    v = jax.random.normal(ks[2], (2, 200, 2, 32))
+    pos = jnp.arange(200, dtype=jnp.int32)
+    a = L.attention_blockwise(q, k, v, pos, pos, win, cap, block_k=64)
+    b = L.attention_ref(q, k, v, pos, pos, win, cap)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_blockwise_gradients_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 2, 16))
+    v = jax.random.normal(ks[2], (1, 64, 2, 16))
+    pos = jnp.arange(64, dtype=jnp.int32)
+
+    def loss_block(q_):
+        return jnp.sum(L.attention_blockwise(q_, k, v, pos, pos,
+                                             block_k=16) ** 2)
+
+    def loss_ref(q_):
+        return jnp.sum(L.attention_ref(q_, k, v, pos, pos) ** 2)
+
+    g1 = jax.grad(loss_block)(q)
+    g2 = jax.grad(loss_ref)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_model_forward_blockwise_equals_reference():
+    cfg = get_config("gemma2-2b").reduced(vocab_size=128)
+    params = M.init_params(cfg, jax.random.PRNGKey(2), with_head=True)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 48), 0, 128)
+    ref, _ = M.forward(cfg, params, tokens, impl="reference", remat=False)
+    blk, _ = M.forward(cfg, params, tokens, impl="blockwise", remat=False)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref),
+                               atol=5e-4, rtol=1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(s=st.integers(10, 120), block=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 99))
+def test_blockwise_block_size_invariant(s, block, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, 2, 16))
+    k = jax.random.normal(ks[1], (1, s, 2, 16))
+    v = jax.random.normal(ks[2], (1, s, 2, 16))
+    pos = jnp.arange(s, dtype=jnp.int32)
+    a = L.attention_blockwise(q, k, v, pos, pos, block_k=block)
+    b = L.attention_ref(q, k, v, pos, pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# P3: chunked MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_chunked_equals_unchunked_when_no_drops():
+    """With a generous capacity factor nothing is dropped, so per-chunk
+    routing equals global routing exactly."""
+    params = Moe.init_moe(jax.random.PRNGKey(4), 16, 32, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 64, 16))
+    o1, _ = Moe.moe_ffn(params, x, num_experts=4, top_k=2,
+                        capacity_factor=8.0)
+    o2, _ = Moe.moe_ffn(params, x, num_experts=4, top_k=2,
+                        capacity_factor=8.0, token_chunk=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_moe_chunked_differentiable():
+    params = Moe.init_moe(jax.random.PRNGKey(6), 16, 32, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 64, 16))
+
+    def loss(p):
+        out, aux = Moe.moe_ffn(p, x, num_experts=4, top_k=2,
+                               token_chunk=16)
+        return jnp.sum(out ** 2) + aux
+
+    g = jax.grad(loss)(params)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_moe_capacity_drops_bounded():
+    """Even with drops, outputs stay finite and the drop rate is bounded
+    by the capacity factor."""
+    params = Moe.init_moe(jax.random.PRNGKey(8), 16, 32, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 64, 16))
+    out, aux = Moe.moe_ffn(params, x, num_experts=4, top_k=2,
+                           capacity_factor=0.5)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # a 0.5 capacity factor zeroes at most ~[1 - 0.5/imbalance] of tokens;
+    # at least some tokens must still be routed
+    assert float(jnp.mean(jnp.abs(out))) > 0
+
+
+# ---------------------------------------------------------------------------
+# P1: last-token prefill
+# ---------------------------------------------------------------------------
+
+def test_prefill_last_token_matches_full_forward():
+    from repro.launch.serving import make_prefill_step
+    cfg = get_config("llama3.2-3b").reduced(vocab_size=128)
+    params = M.init_params(cfg, jax.random.PRNGKey(10), with_head=True)
+    tokens = jax.random.randint(jax.random.PRNGKey(11), (2, 32), 0, 128)
+    prefill = make_prefill_step(cfg)
+    last = prefill(params, tokens)
+    full, _ = M.forward(cfg, params, tokens, remat=False)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, -1]),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,100 @@
+"""Roofline machinery tests: cost-analysis semantics, collective parsing,
+analytic parameter counts, term construction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.dryrun import parse_collectives
+from repro.models import model as M
+from repro.roofline.analysis import (
+    HBM_BW, LINK_BW, PEAK_FLOPS, active_param_count, analytic_param_count,
+    model_flops, roofline_terms)
+
+
+def test_xla_counts_scan_body_once():
+    """The §Roofline trip-count correction rests on this XLA behaviour:
+    cost_analysis FLOPs do NOT scale with scan length."""
+    def flops_for(nlayers):
+        cfg = get_config("smollm-360m").reduced(num_layers=nlayers,
+                                                vocab_size=512)
+        params = M.init_params(cfg, jax.random.PRNGKey(0), with_head=True)
+        tokens = jnp.zeros((2, 64), jnp.int32)
+        fn = jax.jit(lambda p, t: M.forward(cfg, p, t, remat=False)[0])
+        return fn.lower(params, tokens).compile().cost_analysis()["flops"]
+
+    assert flops_for(4) == flops_for(8)
+
+
+def test_parse_collectives_counts_and_bytes():
+    hlo = """
+  %ag = bf16[16,128,256]{2,1,0} all-gather(%x), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(%y), to_apply=%add
+  %cp = f32[4,8]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %rs = bf16[64]{0} reduce-scatter(%w), to_apply=%add
+  %aa = f32[2,2]{1,0} all-to-all(%v), dimensions={0}
+"""
+    stats = parse_collectives(hlo)
+    per = stats["per_op"]
+    assert per["all-gather"]["count"] == 1
+    assert per["all-gather"]["bytes"] == 16 * 128 * 256 * 2
+    assert per["all-reduce"]["bytes"] == 1024 * 4
+    assert per["collective-permute"]["bytes"] == 32 * 4
+    # all-reduce weighted 2x in wire bytes
+    expected_wire = (16 * 128 * 256 * 2 + 2 * 1024 * 4 + 32 * 4
+                     + 64 * 2 + 4 * 4)
+    assert stats["wire_bytes"] == expected_wire
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_analytic_param_count_matches_real_init(arch):
+    """Config-derived N matches the actual initialised parameter count
+    (within 2% — analytic skips norm scales / small biases)."""
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), with_head=True)
+    real = M.param_count(params)
+    analytic = analytic_param_count(cfg)
+    assert abs(real - analytic) / real < 0.06, (real, analytic)
+
+
+def test_active_params_less_than_total_for_moe():
+    cfg = get_config("mixtral-8x7b")
+    assert active_param_count(cfg) < analytic_param_count(cfg)
+    ratio = active_param_count(cfg) / analytic_param_count(cfg)
+    assert 0.25 < ratio < 0.65  # top-2 of 8 experts + dense trunk
+
+
+def test_model_flops_shapes():
+    cfg = get_config("smollm-360m")
+    n = active_param_count(cfg)
+    assert model_flops(cfg, "train", 4096, 256) == 6.0 * n * 4096 * 256
+    assert model_flops(cfg, "decode", 32768, 128) == 2.0 * n * 128
+
+
+def test_roofline_terms_dominance():
+    cfg = get_config("smollm-360m")
+    fake = {
+        "arch": "smollm-360m", "shape": "decode_32k", "devices": 256,
+        "cost": {"flops": 1e9, "bytes_accessed": 1e12},
+        "collectives": {"wire_bytes": 1e6},
+    }
+    rep = roofline_terms(fake, cfg)
+    assert rep.memory_s == pytest.approx(1e12 / HBM_BW)
+    assert rep.compute_s == pytest.approx(1e9 / PEAK_FLOPS)
+    assert rep.collective_s == pytest.approx(1e6 / LINK_BW)
+    assert rep.dominant == "memory"
+
+
+def test_roofline_correction_scales_compute_and_memory_only():
+    cfg = get_config("smollm-360m")
+    fake = {
+        "arch": "smollm-360m", "shape": "train_4k", "devices": 256,
+        "cost": {"flops": 1e12, "bytes_accessed": 1e10},
+        "collectives": {"wire_bytes": 1e9},
+    }
+    r1 = roofline_terms(fake, cfg)
+    r32 = roofline_terms(fake, cfg, scan_trip_correction=32.0)
+    assert r32.compute_s == pytest.approx(32 * r1.compute_s)
+    assert r32.memory_s == pytest.approx(32 * r1.memory_s)
+    assert r32.collective_s == pytest.approx(r1.collective_s)
