@@ -61,6 +61,43 @@ def run() -> list:
     rows.append(Row("kernel_consensus_m16_d4096", us,
                     f"flops={2 * 2 * m * m * d:.3e};"
                     f"bytes={5 * m * d * 4}"))
+
+    rows += run_consensus_backends()
+    return rows
+
+
+def run_consensus_backends() -> list:
+    """ConsensusEngine backend sweep: dense vs pallas step1_step3 over
+    (m, D).  Derived fields carry the structural quantities the roofline
+    ingests (flops, HBM bytes, and the ppermute backend's wire bytes for
+    the same ring round: 2 edges x D x 4 bytes) so backend wins are
+    tracked in the bench trajectory.
+    """
+    from repro.consensus import make_engine
+    from repro.core import ring_mixing
+
+    rows = []
+    for m in (8, 64, 256):
+        spec = ring_mixing(m)
+        for d in (4096, 65536):
+            ks = jax.random.split(jax.random.PRNGKey(9), 4)
+            x = {"w": jax.random.normal(ks[0], (m, d))}
+            u = {"w": jax.random.normal(ks[1], (m, d))}
+            p = {"w": jax.random.normal(ks[2], (m, d))}
+            pp = {"w": jax.random.normal(ks[3], (m, d))}
+            flops = 2 * 2 * m * m * d          # two (m,m)@(m,D) matmuls
+            hbm = 6 * m * d * 4                # 4 in + 2 out streams
+            wire = 2 * d * 4                   # ring ppermute equivalent
+            for backend in ("dense", "pallas"):
+                eng = make_engine(backend, spec)
+                fn = jax.jit(lambda a, b, c, e:
+                             eng.step1_step3(a, b, c, e, 0.1))
+                us = _time(fn, x, u, p, pp, iters=1)
+                rows.append(Row(
+                    f"consensus_{backend}_m{m}_D{d}", us,
+                    f"flops={flops:.3e};bytes={hbm};wire_bytes={wire};"
+                    f"backend={backend};m={m};D={d};"
+                    f"ai={flops / hbm:.2f}"))
     return rows
 
 

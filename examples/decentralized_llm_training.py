@@ -21,6 +21,7 @@ from repro.checkpoint.checkpoint import save_step
 from repro.configs import get_config
 from repro.data.synthetic import TokenTaskStream
 from repro.launch.train import make_host_mesh
+from repro.sharding.compat import set_mesh
 from repro.sharding.partition import tree_shardings
 from repro.train.bilevel_lm import BilevelHyper
 from repro.train.step import (
@@ -66,7 +67,7 @@ def main() -> None:
     evaluate = make_eval_step(cfg, mesh, icfg)
     tok_shard = NamedSharding(mesh, P("data"))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jstep = jax.jit(step, donate_argnums=(0,))
         jeval = jax.jit(evaluate)
         eval_tokens = jax.device_put(

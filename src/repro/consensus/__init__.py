@@ -1,0 +1,40 @@
+"""Unified consensus engine: one pluggable backend API behind all four
+INTERACT update paths (see engine.py for the design).
+
+Backend classes are exported lazily (PEP 562): importing this package —
+which every ``repro.core`` algorithm does — must not pull in the pallas
+TPU extras or the sharding collectives; those load only when the
+corresponding backend is actually requested.
+"""
+from repro.consensus.engine import (
+    BACKENDS,
+    ConsensusEngine,
+    as_engine,
+    consensus_descent_and_track,
+    make_engine,
+)
+
+__all__ = [
+    "BACKENDS",
+    "ConsensusEngine",
+    "DenseEngine",
+    "PallasEngine",
+    "PermuteEngine",
+    "as_engine",
+    "consensus_descent_and_track",
+    "make_engine",
+]
+
+_LAZY_BACKENDS = {
+    "DenseEngine": "repro.consensus.dense",
+    "PallasEngine": "repro.consensus.pallas",
+    "PermuteEngine": "repro.consensus.ppermute",
+}
+
+
+def __getattr__(name):
+    module = _LAZY_BACKENDS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)

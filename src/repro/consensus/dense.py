@@ -1,0 +1,28 @@
+"""Dense consensus backend: the (m, m) matmul reference.
+
+Works for any topology; leaves carry a leading agent dim of size m.  This
+is the single-host reference every other backend is validated against
+(tests/test_consensus_backends.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.consensus.engine import ConsensusEngine
+from repro.core.consensus import MixingSpec, mix_pytree
+
+__all__ = ["DenseEngine"]
+
+
+class DenseEngine(ConsensusEngine):
+
+    name = "dense"
+
+    def __init__(self, mixing: MixingSpec | jax.Array):
+        mat = mixing.matrix if isinstance(mixing, MixingSpec) else mixing
+        self.matrix = jnp.asarray(mat)
+
+    def mix(self, tree, *, dp_key=None, agent_index=None):
+        del dp_key, agent_index  # single-host backend: no wire, no DP
+        return mix_pytree(self.matrix, tree)

@@ -1,0 +1,174 @@
+"""The ConsensusEngine API: one pluggable backend behind every update path.
+
+The paper's communication result hinges on a single primitive — the
+consensus combine ``x_i <- sum_j M_ij x_j`` (eqs. 6/10).  Every INTERACT
+variant (Algorithm 1, SVR-INTERACT, GT-DSGD, D-SGD, and the distributed LM
+train step) expresses its Steps 1/3 through this API instead of carrying
+its own copy of the combine:
+
+    engine.mix(tree) -> tree
+        The bare combine applied leaf-wise (leading agent dim m on the
+        dense/pallas backends; the local agent's slice under shard_map on
+        the ppermute backend).
+
+    engine.step1_step3(x, u, p, p_prev, alpha) -> (x_new, u_new)
+        The fused pair the algorithms actually need:
+            x_new = mix(x) - alpha * u          (Step 1, eq. 6)
+            u_new = mix(u) + (p - p_prev)       (Step 3, eq. 10)
+        The base implementation composes two ``mix`` calls; the pallas
+        backend overrides it with one fused kernel launch.
+
+Backends (see ``make_engine``):
+
+    dense     (m, m) matmul reference — any topology, single host.
+    pallas    fused consensus+tracking Pallas kernel — any topology,
+              single host, the m-agent simulator's hot loop.
+    ppermute  per-offset ``lax.ppermute`` schedule — any sparse symmetric
+              topology, runs inside ``shard_map`` on the device mesh.
+
+``consensus_descent_and_track`` is the shared step-core: the full Steps
+1-3 skeleton (consensus + descent, local gradients via a callback,
+gradient tracking) used by interact / svr_interact / baselines / the
+distributed train steps, so the algorithm files only differ in how they
+estimate the local gradients.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ConsensusEngine", "as_engine", "make_engine", "BACKENDS",
+    "consensus_descent_and_track",
+]
+
+
+def _f32(leaf):
+    return leaf.astype(jnp.float32)
+
+
+class ConsensusEngine:
+    """Base class: a consensus combine plus the fused Step-1/3 pair."""
+
+    name = "base"
+
+    def mix(self, tree, *, dp_key: jax.Array | None = None,
+            agent_index: jax.Array | None = None):
+        """Apply ``x_i <- sum_j M_ij x_j`` to every leaf of ``tree``.
+
+        ``dp_key`` (backends that support it) keys the local-DP noise on
+        the outgoing payload; ``agent_index`` threads the agent's ring
+        position into distributed backends that cannot derive it from the
+        mesh.  Single-host backends ignore both.
+        """
+        raise NotImplementedError
+
+    def step1_step3(self, x, u, p, p_prev, alpha: float, *,
+                    dp_key: jax.Array | None = None,
+                    agent_index: jax.Array | None = None):
+        """Fused eq. (6) + eq. (10): returns (x_new, u_new).
+
+        Math runs in float32 and is cast back to the leaf dtype, so bf16
+        states mix without drift.  The tracking difference is grouped as
+        ``mix(u) + (p - p_prev)`` so calling with ``p is p_prev`` yields
+        ``mix(u)`` exactly (how the step-core obtains the mixed tracker
+        before the new gradients exist).
+        """
+        x_mixed = self.mix(x, dp_key=dp_key, agent_index=agent_index)
+        u_mixed = self.mix(u, agent_index=agent_index)
+        x_new = jax.tree_util.tree_map(
+            lambda mx, uu: (_f32(mx) - alpha * _f32(uu)).astype(mx.dtype),
+            x_mixed, u)
+        u_new = jax.tree_util.tree_map(
+            lambda mu, pn, pp: (_f32(mu) + (_f32(pn) - _f32(pp))
+                                ).astype(mu.dtype),
+            u_mixed, p, p_prev)
+        return x_new, u_new
+
+
+def consensus_descent_and_track(
+    engine: ConsensusEngine,
+    x, y, u, v, p_prev,
+    alpha: float, beta: float,
+    grads_fn: Callable,
+    *,
+    dp_key: jax.Array | None = None,
+    agent_index: jax.Array | None = None,
+):
+    """One INTERACT iteration skeleton shared by every tracking algorithm.
+
+      Step 1: x_new = mix(x) - alpha u ;  y_new = y - beta v
+      Step 2: (p_new, v_new, aux) = grads_fn(x_new, y_new)
+      Step 3: u_new = mix(u) + p_new - p_prev
+
+    Both mixes are issued through one ``engine.step1_step3`` call (with
+    ``p = p_prev`` its tracking term vanishes and it returns exactly
+    ``(x_new, mix(u))``), so the pallas backend fuses them into a single
+    kernel launch; the tracking correction is applied element-wise once
+    the new local gradients exist.
+
+    ``grads_fn(x_new, y_new) -> (p_new, v_new, aux)``; ``aux`` is passed
+    through untouched (metrics, or None).
+
+    Returns ``(x_new, y_new, u_new, v_new, p_new, aux)``.
+    """
+    x_new, u_mixed = engine.step1_step3(x, u, p_prev, p_prev, alpha,
+                                        dp_key=dp_key,
+                                        agent_index=agent_index)
+    y_new = jax.tree_util.tree_map(
+        lambda yy, vv: (_f32(yy) - beta * _f32(vv)).astype(yy.dtype), y, v)
+
+    p_new, v_new, aux = grads_fn(x_new, y_new)
+
+    u_new = jax.tree_util.tree_map(
+        lambda mu, pn, pp: (_f32(mu) + (_f32(pn) - _f32(pp))
+                            ).astype(mu.dtype),
+        u_mixed, p_new, p_prev)
+    return x_new, y_new, u_new, v_new, p_new, aux
+
+
+def _make_dense(mixing, **opts):
+    from repro.consensus.dense import DenseEngine
+    return DenseEngine(mixing, **opts)
+
+
+def _make_pallas(mixing, **opts):
+    from repro.consensus.pallas import PallasEngine
+    return PallasEngine(mixing, **opts)
+
+
+def _make_ppermute(mixing, **opts):
+    from repro.consensus.ppermute import PermuteEngine
+    return PermuteEngine(mixing, **opts)
+
+
+BACKENDS = {
+    "dense": _make_dense,
+    "pallas": _make_pallas,
+    "ppermute": _make_ppermute,
+}
+
+
+def make_engine(backend: str, mixing, **opts) -> ConsensusEngine:
+    """Build a consensus backend by name.
+
+    ``mixing`` is a ``MixingSpec`` or a raw (m, m) matrix.  Backend
+    options: ``block_d``/``interpret`` (pallas), ``agent_axes``/
+    ``compress``/``dp_sigma`` (ppermute).
+    """
+    try:
+        factory = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown consensus backend {backend!r}; "
+            f"choose from {sorted(BACKENDS)}") from None
+    return factory(mixing, **opts)
+
+
+def as_engine(mixing_or_engine) -> ConsensusEngine:
+    """Coerce a raw mixing matrix / MixingSpec to a dense engine."""
+    if isinstance(mixing_or_engine, ConsensusEngine):
+        return mixing_or_engine
+    return _make_dense(mixing_or_engine)

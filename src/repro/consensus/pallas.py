@@ -1,0 +1,45 @@
+"""Pallas consensus backend: the fused consensus+tracking kernel.
+
+Wraps ``repro/kernels/consensus_step`` behind the ``ConsensusEngine`` API,
+putting the kernel on the single-host m-agent simulator's hot loop: both
+Step-1/3 matmuls run in one launch with the (m, m) mixing matrix
+VMEM-resident and the flattened parameters streaming through once.
+Arbitrary pytrees are handled by ``ravel_pytree`` and D is zero-padded to
+the tile size inside the kernel, so any model / any dense ``M`` works.
+``interpret=True`` (default) executes the same kernel body on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.consensus.engine import ConsensusEngine
+from repro.core.consensus import MixingSpec
+from repro.kernels.consensus_step.kernel import DEFAULT_BLOCK_D
+from repro.kernels.consensus_step.ops import consensus_mix, consensus_step
+
+__all__ = ["PallasEngine"]
+
+
+class PallasEngine(ConsensusEngine):
+
+    name = "pallas"
+
+    def __init__(self, mixing: MixingSpec | jax.Array,
+                 block_d: int = DEFAULT_BLOCK_D, interpret: bool = True):
+        mat = mixing.matrix if isinstance(mixing, MixingSpec) else mixing
+        self.matrix = jnp.asarray(mat, jnp.float32)
+        self.block_d = int(block_d)
+        self.interpret = bool(interpret)
+
+    def mix(self, tree, *, dp_key=None, agent_index=None):
+        del dp_key, agent_index  # single-host backend: no wire, no DP
+        return consensus_mix(self.matrix, tree, block_d=self.block_d,
+                             interpret=self.interpret)
+
+    def step1_step3(self, x, u, p, p_prev, alpha, *, dp_key=None,
+                    agent_index=None):
+        del dp_key, agent_index
+        return consensus_step(self.matrix, x, u, p, p_prev,
+                              alpha=float(alpha), block_d=self.block_d,
+                              interpret=self.interpret)

@@ -1,0 +1,58 @@
+"""ppermute consensus backend: sparse topologies on the device mesh.
+
+Decomposes any ``MixingSpec`` into per-offset cyclic-shift permute rounds
+(``repro/sharding/collectives.permute_schedule``) so Erdős–Rényi /
+Metropolis / torus graphs — not just the hard-coded ring — run under
+``shard_map``.  Must be called from *inside* a shard_map body whose
+manual axes are exactly ``agent_axes``; leaves are the local agent's
+slice (leading local dim 1 in the train step, or unbatched in tests).
+
+int8 wire compression and local-DP noise are backend options carried by
+the engine, not ring-only kwargs: ``compress="int8"`` quantizes every
+outgoing payload, ``dp_sigma > 0`` adds Gaussian noise to the payload
+whenever a ``dp_key`` is supplied to ``mix`` (the x-mix passes one, the
+u-mix does not — only shared iterates are privatized).
+
+``impl="psum"`` selects the all-reduce realisation of the same matrix —
+required for partially-auto bodies on old-JAX stacks whose partitioner
+cannot lower ppermute there (see sharding/compat); it needs the agent
+index threaded in via ``mix(..., agent_index=...)``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.consensus.engine import ConsensusEngine
+from repro.core.consensus import MixingSpec
+from repro.sharding.collectives import (
+    PermuteSchedule, permute_mix_tree, permute_schedule)
+
+__all__ = ["PermuteEngine"]
+
+
+class PermuteEngine(ConsensusEngine):
+
+    name = "ppermute"
+
+    def __init__(self, mixing: MixingSpec | PermuteSchedule,
+                 agent_axes: Sequence[str] = ("data",),
+                 compress: str | None = None, dp_sigma: float = 0.0,
+                 impl: str = "ppermute"):
+        self.schedule = (mixing if isinstance(mixing, PermuteSchedule)
+                         else permute_schedule(mixing))
+        self.agent_axes = tuple(agent_axes)
+        self.compress = compress
+        self.dp_sigma = float(dp_sigma)
+        if impl not in ("ppermute", "psum"):
+            raise ValueError(f"unknown ppermute impl {impl!r}")
+        self.impl = impl
+
+    @property
+    def rounds_per_mix(self) -> int:
+        return self.schedule.rounds_per_mix
+
+    def mix(self, tree, *, dp_key=None, agent_index=None):
+        return permute_mix_tree(
+            tree, self.agent_axes, self.schedule, compress=self.compress,
+            dp_sigma=self.dp_sigma if dp_key is not None else 0.0,
+            dp_key=dp_key, impl=self.impl, agent_index=agent_index)

@@ -15,6 +15,8 @@ from repro.core.consensus import (
     mix_pytree,
     ring_mixing,
     second_eigenvalue,
+    torus_adjacency,
+    torus_mixing,
     validate_mixing,
 )
 from repro.core.hypergrad import (

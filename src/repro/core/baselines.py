@@ -17,8 +17,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.consensus import consensus_descent_and_track, make_engine
 from repro.core.bilevel import AgentData, BilevelProblem
-from repro.core.consensus import MixingSpec, mix_pytree
+from repro.core.consensus import MixingSpec
 from repro.core.hypergrad import HypergradConfig
 from repro.core.svr_interact import _minibatch_grads
 
@@ -58,8 +59,9 @@ def init_gt_dsgd_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
 
 def make_gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
                       mixing: MixingSpec, alpha: float, beta: float,
-                      batch_size: int):
-    mat = jnp.asarray(mixing.matrix)
+                      batch_size: int, backend: str = "dense",
+                      **backend_opts):
+    engine = make_engine(backend, mixing, **backend_opts)
 
     @jax.jit
     def step(state: GtDsgdState, data: AgentData) -> GtDsgdState:
@@ -67,18 +69,16 @@ def make_gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
         key, k_step = jax.random.split(state.key)
         agent_keys = jax.random.split(k_step, m)
 
-        x_new = jax.tree_util.tree_map(
-            lambda mx, u: mx - alpha * u, mix_pytree(mat, state.x), state.u)
-        y_new = jax.tree_util.tree_map(
-            lambda y, v: y - beta * v, state.y, state.v)
+        def grads_fn(x_new, y_new):
+            p_new, v_new = jax.vmap(
+                partial(_minibatch_grads, problem, hg_cfg,
+                        batch_size=batch_size))(x_new, y_new, data,
+                                                agent_keys)
+            return p_new, v_new, None
 
-        p_new, v_new = jax.vmap(
-            partial(_minibatch_grads, problem, hg_cfg,
-                    batch_size=batch_size))(x_new, y_new, data, agent_keys)
-
-        u_new = jax.tree_util.tree_map(
-            lambda mu, pn, pp: mu + pn - pp,
-            mix_pytree(mat, state.u), p_new, state.p_prev)
+        x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
+            engine, state.x, state.y, state.u, state.v, state.p_prev,
+            alpha, beta, grads_fn)
         return GtDsgdState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
                            t=state.t + 1, key=key)
 
@@ -99,8 +99,9 @@ def init_dsgd_state(x0, y0, m: int, key: jax.Array) -> DsgdState:
 
 def make_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
                    mixing: MixingSpec, alpha: float, beta: float,
-                   batch_size: int):
-    mat = jnp.asarray(mixing.matrix)
+                   batch_size: int, backend: str = "dense",
+                   **backend_opts):
+    engine = make_engine(backend, mixing, **backend_opts)
 
     @jax.jit
     def step(state: DsgdState, data: AgentData) -> DsgdState:
@@ -112,8 +113,10 @@ def make_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
             partial(_minibatch_grads, problem, hg_cfg,
                     batch_size=batch_size))(state.x, state.y, data, agent_keys)
 
+        # No tracking: descend the raw stochastic hypergradient after the
+        # consensus combine.
         x_new = jax.tree_util.tree_map(
-            lambda mx, g: mx - alpha * g, mix_pytree(mat, state.x), p)
+            lambda mx, g: mx - alpha * g, engine.mix(state.x), p)
         y_new = jax.tree_util.tree_map(
             lambda y, g: y - beta * g, state.y, v)
         return DsgdState(x=x_new, y=y_new, t=state.t + 1, key=key)

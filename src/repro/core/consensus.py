@@ -32,6 +32,8 @@ __all__ = [
     "ring_mixing",
     "ring_weights",
     "second_eigenvalue",
+    "torus_adjacency",
+    "torus_mixing",
     "validate_mixing",
 ]
 
@@ -151,6 +153,26 @@ def ring_mixing(m: int, self_weight: float = 1.0 / 3.0) -> MixingSpec:
         neighbors=(-1, 1) if m > 1 else (),
         weights=(w1, w1) if m > 1 else (),
     )
+
+
+def torus_adjacency(rows: int, cols: int) -> np.ndarray:
+    """2-D torus adjacency: each agent links to its 4 grid neighbours
+    (degenerate dimensions of size 1 or 2 collapse duplicate edges)."""
+    m = rows * cols
+    adj = np.zeros((m, m))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                if j != i:
+                    adj[i, j] = 1.0
+    return adj
+
+
+def torus_mixing(rows: int, cols: int) -> MixingSpec:
+    """Doubly-stochastic symmetric torus mixing (Metropolis weights)."""
+    return metropolis_mixing(torus_adjacency(rows, cols))
 
 
 def second_eigenvalue(mat: np.ndarray) -> float:

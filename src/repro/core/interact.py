@@ -8,11 +8,16 @@ Inner-gradient-descent-outer-tracked-gradient.  Per iteration each agent:
                                   v_i = grad_y g_i(x_i, y_i)          (9)
   Step 3 (gradient tracking):     u_i <- sum_j M_ij u_j + p_i - p_i^- (10)
 
-State tensors carry a leading agent dimension m; gradients are vmapped per
-agent; the consensus combine is a dense ``M @ .`` in this single-host
-reference (the distributed runtime replaces it with ppermute — see
-repro/sharding).  Step sizes must satisfy the Theorem-1 bounds, exposed by
-``theorem1_step_sizes``.
+State tensors carry a leading agent dimension m; gradients are vmapped
+per agent.  Steps 1 and 3 are delegated to a pluggable
+``ConsensusEngine`` (repro/consensus) through the shared
+``consensus_descent_and_track`` step-core — the same skeleton drives
+SVR-INTERACT, the Section-6 baselines, and the distributed LM train step.
+``make_interact_step(..., backend=...)`` selects the combine
+implementation: ``"dense"`` (matmul reference), ``"pallas"`` (the fused
+consensus+tracking kernel on the simulator hot loop), or ``"ppermute"``
+(device-mesh collectives, used by repro/train).  Step sizes must satisfy
+the Theorem-1 bounds, exposed by ``theorem1_step_sizes``.
 """
 from __future__ import annotations
 
@@ -23,8 +28,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.consensus import as_engine, consensus_descent_and_track, make_engine
 from repro.core.bilevel import AgentData, BilevelProblem
-from repro.core.consensus import MixingSpec, mix_pytree
+from repro.core.consensus import MixingSpec
 from repro.core.hypergrad import HypergradConfig, hypergradient
 
 __all__ = [
@@ -86,42 +92,49 @@ def init_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
 def interact_step(
     problem: BilevelProblem,
     hg_cfg: HypergradConfig,
-    mixing: jax.Array,
+    mixing,
     alpha: float,
     beta: float,
     state: InteractState,
     data: AgentData,
 ) -> InteractState:
-    """One INTERACT iteration over all agents (reference implementation)."""
-    # Step 1: consensus update with gradient descent (6) + local inner GD (7).
-    x_new = jax.tree_util.tree_map(
-        lambda mx, u: mx - alpha * u, mix_pytree(mixing, state.x), state.u)
-    y_new = jax.tree_util.tree_map(
-        lambda y, v: y - beta * v, state.y, state.v)
+    """One INTERACT iteration over all agents.
 
-    # Step 2: full local gradient estimates (8)-(9).
-    inner_b, outer_b = _per_agent_batch(data)
-    p_new, v_new = jax.vmap(
-        partial(_agent_gradients, problem, hg_cfg)
-    )(x_new, y_new, inner_b, outer_b)
+    ``mixing`` is a ``ConsensusEngine`` (or a raw (m, m) matrix, coerced
+    to the dense backend).  Steps 1 and 3 run through the shared
+    step-core; Step 2 is the full local gradient pass (8)-(9).
+    """
+    engine = as_engine(mixing)
 
-    # Step 3: gradient tracking (10).
-    u_new = jax.tree_util.tree_map(
-        lambda mu, pn, pp: mu + pn - pp,
-        mix_pytree(mixing, state.u), p_new, state.p_prev)
+    def grads_fn(x_new, y_new):
+        inner_b, outer_b = _per_agent_batch(data)
+        p_new, v_new = jax.vmap(
+            partial(_agent_gradients, problem, hg_cfg)
+        )(x_new, y_new, inner_b, outer_b)
+        return p_new, v_new, None
+
+    x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
+        engine, state.x, state.y, state.u, state.v, state.p_prev,
+        alpha, beta, grads_fn)
 
     return InteractState(x=x_new, y=y_new, u=u_new, v=v_new,
                          p_prev=p_new, t=state.t + 1)
 
 
 def make_interact_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
-                       mixing: MixingSpec, alpha: float, beta: float):
-    """jit-compiled step closure over static configuration."""
-    mat = jnp.asarray(mixing.matrix)
+                       mixing: MixingSpec, alpha: float, beta: float,
+                       backend: str = "dense", **backend_opts):
+    """jit-compiled step closure over static configuration.
+
+    ``backend`` selects the consensus implementation ("dense" matmul
+    reference or "pallas" fused kernel on the single-host simulator).
+    """
+    engine = make_engine(backend, mixing, **backend_opts)
 
     @jax.jit
     def step(state: InteractState, data: AgentData) -> InteractState:
-        return interact_step(problem, hg_cfg, mat, alpha, beta, state, data)
+        return interact_step(problem, hg_cfg, engine, alpha, beta, state,
+                             data)
 
     return step
 

@@ -22,8 +22,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.consensus import consensus_descent_and_track, make_engine
 from repro.core.bilevel import AgentData, BilevelProblem
-from repro.core.consensus import MixingSpec, mix_pytree
+from repro.core.consensus import MixingSpec
 from repro.core.hypergrad import HypergradConfig, hypergradient
 
 __all__ = ["SvrState", "init_svr_state", "make_svr_interact_step"]
@@ -86,9 +87,16 @@ def make_svr_interact_step(
     beta: float,
     q: int,
     batch_size: int | None = None,
+    backend: str = "dense",
+    **backend_opts,
 ):
-    """jit'd SVR-INTERACT step.  batch_size defaults to q (paper: |S|=q)."""
-    mat = jnp.asarray(mixing.matrix)
+    """jit'd SVR-INTERACT step.  batch_size defaults to q (paper: |S|=q).
+
+    Consensus Steps 1/3 run through the shared step-core on the selected
+    ``ConsensusEngine`` backend; only Step 2 (the SPIDER estimator)
+    differs from Algorithm 1.
+    """
+    engine = make_engine(backend, mixing, **backend_opts)
     bs = batch_size if batch_size is not None else q
 
     def _vr_grads(x, y, x_prev, y_prev, v_prev, p_prev, data, key):
@@ -111,27 +119,21 @@ def make_svr_interact_step(
         key, k_step = jax.random.split(state.key)
         agent_keys = jax.random.split(k_step, m)
 
-        # Step 1: consensus + descent.
-        x_new = jax.tree_util.tree_map(
-            lambda mx, u: mx - alpha * u, mix_pytree(mat, state.x), state.u)
-        y_new = jax.tree_util.tree_map(
-            lambda y, v: y - beta * v, state.y, state.v)
+        def grads_fn(x_new, y_new):
+            # Step 2: full refresh every q steps, recursive otherwise.
+            full_p, full_v = jax.vmap(partial(_full_grads, problem, hg_cfg))(
+                x_new, y_new, data, agent_keys)
+            vr_p, vr_v = jax.vmap(_vr_grads)(
+                x_new, y_new, state.x, state.y, state.v, state.p_prev,
+                data, agent_keys)
+            refresh = (state.t + 1) % q == 0
+            pick = lambda a, b: jax.tree_util.tree_map(
+                lambda ai, bi: jnp.where(refresh, ai, bi), a, b)
+            return pick(full_p, vr_p), pick(full_v, vr_v), None
 
-        # Step 2: full refresh every q steps, recursive estimator otherwise.
-        full_p, full_v = jax.vmap(partial(_full_grads, problem, hg_cfg))(
-            x_new, y_new, data, agent_keys)
-        vr_p, vr_v = jax.vmap(_vr_grads)(
-            x_new, y_new, state.x, state.y, state.v, state.p_prev,
-            data, agent_keys)
-        refresh = (state.t + 1) % q == 0
-        pick = lambda a, b: jax.tree_util.tree_map(
-            lambda ai, bi: jnp.where(refresh, ai, bi), a, b)
-        p_new, v_new = pick(full_p, vr_p), pick(full_v, vr_v)
-
-        # Step 3: gradient tracking (10).
-        u_new = jax.tree_util.tree_map(
-            lambda mu, pn, pp: mu + pn - pp,
-            mix_pytree(mat, state.u), p_new, state.p_prev)
+        x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
+            engine, state.x, state.y, state.u, state.v, state.p_prev,
+            alpha, beta, grads_fn)
 
         return SvrState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
                         x_prev=state.x, y_prev=state.y,

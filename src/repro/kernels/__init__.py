@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared Pallas version compatibility."""
+from jax.experimental.pallas import tpu as _pltpu
+
+# Renamed across JAX releases: TPUCompilerParams (0.4.x) -> CompilerParams.
+compiler_params = getattr(_pltpu, "CompilerParams", None)
+if compiler_params is None:
+    compiler_params = _pltpu.TPUCompilerParams
+
+__all__ = ["compiler_params"]

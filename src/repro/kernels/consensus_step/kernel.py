@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compiler_params
 
 DEFAULT_BLOCK_D = 512
 
@@ -40,6 +41,45 @@ def _consensus_kernel(mix_ref, x_ref, u_ref, p_ref, pprev_ref,
     uout_ref[...] = (mu + p - pp).astype(uout_ref.dtype)
 
 
+def _mix_kernel(mix_ref, x_ref, out_ref):
+    mix = mix_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] = jax.lax.dot_general(
+        mix, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def consensus_mix_kernel(
+    mix: jax.Array,     # (m, m) doubly-stochastic
+    x: jax.Array,       # (m, D)
+    *,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bare combine ``M @ x`` — the mix-only half of the fused kernel,
+    for callers that need eq. (6)/(10)'s combine without the tracking
+    update (one matmul, two streams instead of five)."""
+    m, d = x.shape
+    bd = min(block_d, max(d, 1))
+    pad = (-d) % bd
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    dp = d + pad
+    tile = pl.BlockSpec((m, bd), lambda i: (0, i))
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(dp // bd,),
+        in_specs=[pl.BlockSpec((m, m), lambda i: (0, 0)), tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((m, dp), x.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(mix, x)
+    return out[:, :d] if pad else out
+
+
 def consensus_step_kernel(
     mix: jax.Array,     # (m, m) doubly-stochastic
     x: jax.Array,       # (m, D) outer iterates
@@ -52,22 +92,32 @@ def consensus_step_kernel(
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     m, d = x.shape
-    assert d % block_d == 0, (d, block_d)
-    grid = (d // block_d,)
+    # Zero-pad D up to the tile multiple (real models rarely flatten to a
+    # multiple of block_d); the pad lanes mix to zero and are sliced off.
+    bd = min(block_d, max(d, 1))
+    pad = (-d) % bd
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)))
+        x, u, p, p_prev = padf(x), padf(u), padf(p), padf(p_prev)
+    dp = d + pad
+    grid = (dp // bd,)
 
     kernel = functools.partial(_consensus_kernel, alpha=alpha)
-    tile = pl.BlockSpec((m, block_d), lambda i: (0, i))
+    tile = pl.BlockSpec((m, bd), lambda i: (0, i))
 
-    return pl.pallas_call(
+    x_out, u_out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((m, m), lambda i: (0, 0)),
                   tile, tile, tile, tile],
         out_specs=[tile, tile],
-        out_shape=[jax.ShapeDtypeStruct((m, d), x.dtype),
-                   jax.ShapeDtypeStruct((m, d), u.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        out_shape=[jax.ShapeDtypeStruct((m, dp), x.dtype),
+                   jax.ShapeDtypeStruct((m, dp), u.dtype)],
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
     )(mix, x, u, p, p_prev)
+    if pad:
+        x_out, u_out = x_out[:, :d], u_out[:, :d]
+    return x_out, u_out

@@ -1,17 +1,46 @@
 """jit'd wrapper: apply the fused consensus step to a whole pytree.
 
-Flattens every leaf (m, ...) to (m, D), pads D to the tile size, runs the
-kernel once over the concatenated parameter vector, and unflattens.
+Ravels every agent's subtree to a flat (m, D) matrix via
+``jax.flatten_util.ravel_pytree`` (vmapped over the leading agent dim),
+runs the kernel once over the concatenated parameter vector — the kernel
+itself zero-pads D up to the tile size — and unravels back.  This is the
+implementation layer of the ``pallas`` consensus backend
+(``repro/consensus/pallas.py``).
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
 
 from repro.kernels.consensus_step.kernel import (
-    DEFAULT_BLOCK_D, consensus_step_kernel)
+    DEFAULT_BLOCK_D, consensus_mix_kernel, consensus_step_kernel)
+
+__all__ = ["consensus_mix", "consensus_step", "flatten_agents",
+           "unflatten_agents"]
+
+
+def flatten_agents(tree):
+    """(m, ...)-leaved pytree -> ((m, D) matrix, per-agent unravel fn)."""
+    one_agent = jax.tree_util.tree_map(lambda l: l[0], tree)
+    _, unravel = ravel_pytree(one_agent)
+    flat = jax.vmap(lambda t: ravel_pytree(t)[0])(tree)
+    return flat, unravel
+
+
+def unflatten_agents(flat, unravel):
+    return jax.vmap(unravel)(flat)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def consensus_mix(mix: jax.Array, tree, *, block_d: int = DEFAULT_BLOCK_D,
+                  interpret: bool = True):
+    """Bare combine ``x_i <- sum_j M_ij x_j`` over a pytree (one matmul)."""
+    X, unravel = flatten_agents(tree)
+    X_out = consensus_mix_kernel(mix, X, block_d=block_d,
+                                 interpret=interpret)
+    return unflatten_agents(X_out, unravel)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "block_d", "interpret"))
@@ -19,34 +48,15 @@ def consensus_step(mix: jax.Array, x_tree, u_tree, p_tree, pprev_tree, *,
                    alpha: float, block_d: int = DEFAULT_BLOCK_D,
                    interpret: bool = True):
     """Returns (x_tree', u_tree') after one fused eq.(6)+(10) update."""
-    leaves_x, treedef = jax.tree_util.tree_flatten(x_tree)
-    leaves_u = treedef.flatten_up_to(u_tree)
-    leaves_p = treedef.flatten_up_to(p_tree)
-    leaves_pp = treedef.flatten_up_to(pprev_tree)
-    m = leaves_x[0].shape[0]
-
-    def flat(leaves):
-        return jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
-
-    X, U, P, PP = flat(leaves_x), flat(leaves_u), flat(leaves_p), flat(leaves_pp)
-    d = X.shape[1]
-    bd = min(block_d, d)
-    pad = (-d) % bd
-    if pad:
-        X, U, P, PP = (jnp.pad(t, ((0, 0), (0, pad))) for t in (X, U, P, PP))
+    X, unravel_x = flatten_agents(x_tree)
+    # u gets its own unravel: for mixed-dtype trees, x's unravel would
+    # silently cast the tracker to x's leaf dtypes on the way back.
+    U, unravel_u = flatten_agents(u_tree)
+    P, _ = flatten_agents(p_tree)
+    PP, _ = flatten_agents(pprev_tree)
 
     X_out, U_out = consensus_step_kernel(mix, X, U, P, PP, alpha=alpha,
-                                         block_d=bd, interpret=interpret)
-    X_out, U_out = X_out[:, :d], U_out[:, :d]
-
-    def unflat(mat, template):
-        out, off = [], 0
-        for l in template:
-            size = l[0].size
-            out.append(mat[:, off:off + size].reshape(l.shape))
-            off += size
-        return out
-
-    x_new = treedef.unflatten(unflat(X_out, leaves_x))
-    u_new = treedef.unflatten(unflat(U_out, leaves_u))
-    return x_new, u_new
+                                         block_d=block_d,
+                                         interpret=interpret)
+    return (unflatten_agents(X_out, unravel_x),
+            unflatten_agents(U_out, unravel_u))

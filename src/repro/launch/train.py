@@ -27,6 +27,7 @@ from repro.data.synthetic import TokenTaskStream
 from repro.launch.mesh import agent_axes, make_production_mesh
 from repro.sharding.partition import tree_shardings
 from repro.train.bilevel_lm import BilevelHyper
+from repro.sharding.compat import set_mesh
 from repro.train.step import (
     InteractConfig, init_train_state, make_train_step, train_state_specs)
 
@@ -101,7 +102,7 @@ def main() -> None:
     step_fn = make_train_step(cfg, mesh, icfg)
     tok_shard = NamedSharding(mesh, P(aent))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jstep = jax.jit(step_fn, donate_argnums=(0,))
         t0 = time.time()
         for t in range(start, args.steps):

@@ -39,8 +39,24 @@ LINK_BW = 50e9             # bytes/s / ICI link
 
 __all__ = [
     "analytic_param_count", "active_param_count", "model_flops",
-    "roofline_terms", "RooflineReport", "load_dryrun", "report_table",
+    "normalize_cost_analysis", "roofline_terms", "RooflineReport",
+    "load_dryrun", "report_table",
 ]
+
+
+def normalize_cost_analysis(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Newer JAX returns a flat dict; older versions return a one-element
+    list of dicts (one per executable program).  Always returns a dict so
+    callers can index properties (``"flops"``, ``"bytes accessed"``, ...)
+    without version checks.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
 
 
 def _attn_params(cfg: ArchConfig) -> int:

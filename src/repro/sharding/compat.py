@@ -1,0 +1,88 @@
+"""Version-compat resolvers for JAX APIs that moved between releases.
+
+Two surfaces the repo depends on have migrated across JAX versions:
+
+* ``shard_map`` — new JAX exposes ``jax.shard_map(f, mesh=..., in_specs=...,
+  out_specs=..., axis_names=..., check_vma=...)``; older releases (including
+  the 0.4.x series) only have ``jax.experimental.shard_map.shard_map`` with
+  positional args, ``check_rep`` instead of ``check_vma``, and an ``auto``
+  set (the complement of ``axis_names``) for axes left to the partitioner.
+* ``set_mesh`` — new JAX has ``jax.set_mesh`` as a context manager; older
+  releases either provide ``jax.sharding.use_mesh`` or rely on the ``Mesh``
+  object itself being a context manager.
+
+Everything in ``repro`` (train steps, launchers, tests) routes through the
+two wrappers below instead of touching ``jax.*`` directly, so the same code
+runs on every JAX this repo has met.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "axis_size",
+           "HAS_NATIVE_SHARD_MAP", "PARTIAL_AUTO_COLLECTIVES_SAFE"]
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+if _NEW_SHARD_MAP is None:
+    from jax.experimental.shard_map import shard_map as _OLD_SHARD_MAP
+else:
+    _OLD_SHARD_MAP = None
+
+HAS_NATIVE_SHARD_MAP = _NEW_SHARD_MAP is not None
+
+# On the old-JAX stack, XLA's SPMD partitioner cannot lower
+# collective-permute / all-gather / partition-id inside a *partially*
+# manual shard_map (manual agent axes + auto model axis): it aborts with
+# "IsManualSubgroup" check failures.  Only all-reduce (psum/pmean)
+# survives.  Consumers use this flag to select the psum-based consensus
+# fallback when mixing under partial-auto bodies.
+PARTIAL_AUTO_COLLECTIVES_SAFE = HAS_NATIVE_SHARD_MAP
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Iterable[str] | None = None,
+              check_vma: bool | None = None):
+    """``jax.shard_map`` with a uniform keyword surface on every JAX.
+
+    ``axis_names`` is the set of mesh axes the body is *manual* over; the
+    remaining axes stay automatic (partitioned by XLA).  ``check_vma``
+    maps to ``check_rep`` on old JAX; when unspecified we disable the
+    replication check — the repo's bodies mix manual collectives with
+    auto-partitioned einsums, which the old checker rejects.
+    """
+    if _NEW_SHARD_MAP is not None:
+        kwargs = {"check_vma": bool(check_vma)
+                  if check_vma is not None else False}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return _NEW_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+    manual = set(axis_names) if axis_names is not None else set(mesh.axis_names)
+    auto = frozenset(set(mesh.axis_names) - manual)
+    return _OLD_SHARD_MAP(f, mesh, in_specs, out_specs,
+                          check_rep=bool(check_vma) if check_vma is not None
+                          else False,
+                          auto=auto)
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` with a fallback for JAX versions before it
+    existed: ``psum(1, name)`` resolves to the static axis size."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    new = getattr(jax, "set_mesh", None)
+    if new is not None:
+        return new(mesh)
+    use = getattr(jax.sharding, "use_mesh", None)
+    if use is not None:
+        return use(mesh)
+    # Oldest supported path: Mesh is itself a context manager.
+    return mesh

@@ -6,16 +6,21 @@ carries a leading agent dim of size m sharded one-agent-per-row, so the
 per-device footprint equals plain data-parallel training while each agent
 keeps a *distinct* x_i — exactly Problem (1).
 
-The step body runs under ``jax.shard_map`` over the agent axes only; the
+The step body runs under ``shard_map`` over the agent axes only; the
 ``model`` axis stays auto, so XLA partitions every einsum in the backbone
-exactly as in the serving path.  Consensus (eqs. 6/10) is two
-``ppermute``s per mixing — the communication-frugal TPU realisation of the
-mixing matrix M (ring topology, lambda known analytically).
+exactly as in the serving path.  Consensus (eqs. 6/10) goes through the
+``ConsensusEngine`` selected by ``InteractConfig`` — by default the
+``ppermute`` backend, which decomposes the configured topology's mixing
+matrix (ring, Erdős–Rényi, or torus — see ``InteractConfig.topology``)
+into per-offset neighbour exchanges, so the paper-faithful ER-graph
+Section-6 scenario runs on the distributed runtime, not just the ICI
+ring.  int8 wire compression and local-DP noise are engine options.
 
-One call == one INTERACT iteration (Algorithm 1):
-  Step 1: x <- ringmix(x) - alpha*u ; y <- y - beta*v
+One call == one INTERACT iteration (Algorithm 1), expressed through the
+shared ``consensus_descent_and_track`` step-core (repro/consensus):
+  Step 1: x <- mix(x) - alpha*u ; y <- y - beta*v
   Step 2: (p, v) local hypergradient / inner gradient at the new iterate
-  Step 3: u <- ringmix(u) + p - p_prev
+  Step 3: u <- mix(u) + p - p_prev
 """
 from __future__ import annotations
 
@@ -27,10 +32,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.consensus import consensus_descent_and_track, make_engine
+from repro.core.consensus import (
+    MixingSpec, erdos_renyi_adjacency, laplacian_mixing, ring_mixing,
+    torus_mixing)
 from repro.launch.mesh import agent_axes, agent_count
 from repro.models import model as M
 from repro.models.base import ArchConfig
-from repro.sharding.collectives import ring_mix_tree
+from repro.sharding.compat import PARTIAL_AUTO_COLLECTIVES_SAFE, shard_map
 from repro.sharding.partition import (
     leaf_spec, stacked_tree_specs, tree_shardings)
 from repro.train.bilevel_lm import BilevelHyper, local_grads
@@ -54,9 +63,60 @@ class InteractConfig:
     beta: float = 0.5            # inner step size
     self_weight: float = 1.0 / 3.0  # ring mixing w0; lambda analytic
     hyper: BilevelHyper = BilevelHyper()
+    # consensus engine selection (repro/consensus):
+    consensus_backend: str = "ppermute"    # only mesh-native backend today
+    topology: str = "ring"                 # ring | erdos-renyi | torus
+    p_connect: float = 0.5                 # ER edge probability
+    topology_seed: int = 0                 # ER graph sample seed
     # paper future-work extensions (conclusion, both opt-in):
     consensus_compress: str | None = None  # "int8" compressed consensus
     dp_sigma: float = 0.0                  # local-DP noise on shared x
+
+    def mixing_spec(self, m: int) -> MixingSpec:
+        """The configured topology's mixing matrix for m agents."""
+        if self.topology == "ring":
+            return ring_mixing(m, self_weight=self.self_weight)
+        if self.topology == "erdos-renyi":
+            return laplacian_mixing(
+                erdos_renyi_adjacency(m, self.p_connect, self.topology_seed))
+        if self.topology == "torus":
+            rows = int(m ** 0.5)
+            while rows > 1 and m % rows:
+                rows -= 1
+            return torus_mixing(rows, m // rows)
+        raise ValueError(f"unknown topology {self.topology!r}")
+
+    def compat_hyper(self, a_axes, mesh) -> BilevelHyper:
+        """The hyper config adjusted for the shard_map body: on old-JAX
+        stacks a partially-auto body cannot contain while-loops over
+        manual subgroups, so every scan in the backbone unrolls."""
+        if (set(mesh.axis_names) - set(a_axes)
+                and not PARTIAL_AUTO_COLLECTIVES_SAFE):
+            return dataclasses.replace(self.hyper, unroll_scans=True)
+        return self.hyper
+
+    def consensus_engine(self, m: int, a_axes, mesh=None):
+        """Build the distributed consensus engine for this config.
+
+        When the mesh carries auto (non-agent) axes and the JAX stack
+        cannot lower ppermute under a partially-manual body, the engine
+        falls back to the psum realisation of the same mixing matrix
+        (see sharding/compat.PARTIAL_AUTO_COLLECTIVES_SAFE).
+        """
+        if self.consensus_backend != "ppermute":
+            raise ValueError(
+                f"backend {self.consensus_backend!r} cannot run inside "
+                "shard_map; the distributed runtime requires 'ppermute' "
+                "(dense/pallas serve the single-host simulator)")
+        impl = "ppermute"
+        if (mesh is not None
+                and set(mesh.axis_names) - set(a_axes)
+                and not PARTIAL_AUTO_COLLECTIVES_SAFE):
+            impl = "psum"
+        return make_engine("ppermute", self.mixing_spec(m),
+                           agent_axes=tuple(a_axes),
+                           compress=self.consensus_compress,
+                           dp_sigma=self.dp_sigma, impl=impl)
 
 
 def _zeros_like_tree(tree):
@@ -145,54 +205,46 @@ def make_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
     for ax in a_axes:
         m *= mesh.shape[ax]
     aentry = _agent_entry(a_axes)
-    hyper = icfg.hyper
+    hyper = icfg.compat_hyper(a_axes, mesh)
+    engine = icfg.consensus_engine(m, a_axes, mesh=mesh)
 
-    def per_agent(state: TrainState, tokens, prefix):
-        # Leaves arrive with leading agent dim of local size 1.
+    def per_agent(state: TrainState, tokens, ids, prefix):
+        # Leaves arrive with leading agent dim of local size 1; ``ids``
+        # threads each agent's ring position in as data (axis_index does
+        # not lower under partially-auto bodies on old JAX).
         sq = lambda t: jax.tree_util.tree_map(lambda l: l[0], t)
         un = lambda t: jax.tree_util.tree_map(lambda l: l[None], t)
+        agent_idx = ids[0]
 
-        # ---- Step 1: consensus + descent --------------------------------
         dp_key = (jax.random.fold_in(jax.random.PRNGKey(0), state.t)
                   if icfg.dp_sigma > 0 else None)
-        x_mixed = ring_mix_tree(state.x, a_axes, icfg.self_weight,
-                                compress=icfg.consensus_compress,
-                                dp_sigma=icfg.dp_sigma, dp_key=dp_key)
-        u_mixed = ring_mix_tree(state.u, a_axes, icfg.self_weight,
-                                compress=icfg.consensus_compress)
-        x_new = jax.tree_util.tree_map(
-            lambda mx, uu: (mx.astype(jnp.float32)
-                            - icfg.alpha * uu.astype(jnp.float32)
-                            ).astype(mx.dtype), x_mixed, state.u)
-        y_new = (state.y.astype(jnp.float32)
-                 - icfg.beta * state.v.astype(jnp.float32)
-                 ).astype(state.y.dtype)
 
-        # ---- Step 2: local gradients at the new iterate ------------------
-        toks = tokens[0]                       # (b, s) this agent
-        # (pods mode: batch-parallelism is induced by the residual-stream
-        # constraint inside features() — constraining the token *indices*
-        # here trips XLA's gather partitioner, see EXPERIMENTS.md P6.)
-        half = toks.shape[0] // 2
-        inner_t, outer_t = toks[:half], toks[half:]
-        pre_in = pre_out = None
-        if prefix is not None:
-            pre = prefix[0]
-            pre_in, pre_out = pre[:half], pre[half:]
-        p_new, v_new, outer_ce = local_grads(
-            cfg, hyper, sq(x_new), y_new[0], inner_t, outer_t,
-            prefix_inner=pre_in, prefix_outer=pre_out)
-        p_new, v_new = un(p_new), v_new[None]
+        def grads_fn(x_new, y_new):
+            # ---- Step 2: local gradients at the new iterate --------------
+            toks = tokens[0]                       # (b, s) this agent
+            # (pods mode: batch-parallelism is induced by the residual-
+            # stream constraint inside features() — constraining the token
+            # *indices* here trips XLA's gather partitioner, see
+            # EXPERIMENTS.md P6.)
+            half = toks.shape[0] // 2
+            inner_t, outer_t = toks[:half], toks[half:]
+            pre_in = pre_out = None
+            if prefix is not None:
+                pre = prefix[0]
+                pre_in, pre_out = pre[:half], pre[half:]
+            p_new, v_new, outer_ce = local_grads(
+                cfg, hyper, sq(x_new), y_new[0], inner_t, outer_t,
+                prefix_inner=pre_in, prefix_outer=pre_out)
+            return un(p_new), v_new[None], outer_ce
 
+        # Steps 1-3 via the shared step-core on the ppermute engine.
         # First iteration: p_prev is zero and u is zero, so Step 3 sets
         # u_1 = p_1 exactly (matches the Algorithm-1 init u_0 = p_0).
-
-        # ---- Step 3: gradient tracking -----------------------------------
-        u_new = jax.tree_util.tree_map(
-            lambda mu, pn, pp: (mu.astype(jnp.float32)
-                                + pn.astype(jnp.float32)
-                                - pp.astype(jnp.float32)).astype(mu.dtype),
-            u_mixed, p_new, state.p_prev)
+        x_new, y_new, u_new, v_new, p_new, outer_ce = (
+            consensus_descent_and_track(
+                engine, state.x, state.y, state.u, state.v, state.p_prev,
+                icfg.alpha, icfg.beta, grads_fn, dp_key=dp_key,
+                agent_index=agent_idx))
 
         # ---- metrics (replicated over agents) ----------------------------
         axis = aentry
@@ -210,19 +262,20 @@ def make_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
         specs_state = jax.tree_util.tree_map(lambda _: P(aentry), state)
         specs_state = specs_state._replace(t=P())
         out_specs = (specs_state, {"outer_ce": P(), "grad_norm": P()})
+        ids = jnp.arange(m, dtype=jnp.int32)
         if prefix is None:
-            fn = jax.shard_map(
-                lambda s, tk: per_agent(s, tk, None), mesh=mesh,
-                in_specs=(specs_state, P(aentry)),
+            fn = shard_map(
+                lambda s, tk, ii: per_agent(s, tk, ii, None), mesh=mesh,
+                in_specs=(specs_state, P(aentry), P(aentry)),
                 out_specs=out_specs, axis_names=set(a_axes),
                 check_vma=False)
-            return fn(state, tokens)
-        fn = jax.shard_map(
+            return fn(state, tokens, ids)
+        fn = shard_map(
             per_agent, mesh=mesh,
-            in_specs=(specs_state, P(aentry), P(aentry)),
+            in_specs=(specs_state, P(aentry), P(aentry), P(aentry)),
             out_specs=out_specs, axis_names=set(a_axes),
-                check_vma=False)
-        return fn(state, tokens, prefix)
+            check_vma=False)
+        return fn(state, tokens, ids, prefix)
 
     return step
 
@@ -231,7 +284,7 @@ def make_eval_step(cfg: ArchConfig, mesh, icfg: InteractConfig):
     """Average outer CE over agents at the current iterate (no update)."""
     a_axes = agent_axes(mesh)
     aentry = _agent_entry(a_axes)
-    hyper = icfg.hyper
+    hyper = icfg.compat_hyper(a_axes, mesh)
 
     def per_agent(state: TrainState, tokens):
         from repro.train.bilevel_lm import outer_loss
@@ -242,10 +295,10 @@ def make_eval_step(cfg: ArchConfig, mesh, icfg: InteractConfig):
     def step(state, tokens):
         specs_state = jax.tree_util.tree_map(lambda _: P(aentry), state)
         specs_state = specs_state._replace(t=P())
-        return jax.shard_map(per_agent, mesh=mesh,
-                             in_specs=(specs_state, P(aentry)),
-                             out_specs=P(),
-                             axis_names=set(a_axes),
-                             check_vma=False)(state, tokens)
+        return shard_map(per_agent, mesh=mesh,
+                         in_specs=(specs_state, P(aentry)),
+                         out_specs=P(),
+                         axis_names=set(a_axes),
+                         check_vma=False)(state, tokens)
 
     return step

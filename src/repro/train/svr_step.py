@@ -25,9 +25,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.consensus import consensus_descent_and_track
 from repro.launch.mesh import agent_axes
 from repro.models.base import ArchConfig
-from repro.sharding.collectives import ring_mix_tree
+from repro.sharding.compat import shard_map
 from repro.train.bilevel_lm import local_grads
 from repro.train.step import InteractConfig, TrainState, _agent_entry
 
@@ -76,47 +77,40 @@ def make_svr_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
     """
     a_axes = ("pod",) if agent_mode == "pods" else agent_axes(mesh)
     aentry = _agent_entry(a_axes)
-    hyper = icfg.hyper
+    hyper = icfg.compat_hyper(a_axes, mesh)
+    m = 1
+    for ax in a_axes:
+        m *= mesh.shape[ax]
+    engine = icfg.consensus_engine(m, a_axes, mesh=mesh)
 
-    def per_agent(state: SvrTrainState, tokens):
+    def per_agent(state: SvrTrainState, tokens, ids):
         sq = lambda t: jax.tree_util.tree_map(lambda l: l[0], t)
         un = lambda t: jax.tree_util.tree_map(lambda l: l[None], t)
 
-        x_mixed = ring_mix_tree(state.x, a_axes, icfg.self_weight)
-        u_mixed = ring_mix_tree(state.u, a_axes, icfg.self_weight)
-        x_new = jax.tree_util.tree_map(
-            lambda mx, uu: (mx.astype(jnp.float32)
-                            - icfg.alpha * uu.astype(jnp.float32)
-                            ).astype(mx.dtype), x_mixed, state.u)
-        y_new = (state.y.astype(jnp.float32)
-                 - icfg.beta * state.v.astype(jnp.float32)
-                 ).astype(state.y.dtype)
-
-        toks = tokens[0]
-        half = toks.shape[0] // 2
-        inner_t, outer_t = toks[:half], toks[half:]
-
-        # gradients at the new iterate (always needed)
-        p_now, v_now, ce = local_grads(cfg, hyper, sq(x_new), y_new[0],
-                                       inner_t, outer_t)
-        # same minibatch at the previous iterate (recursive difference)
-        p_old, v_old, _ = local_grads(cfg, hyper, sq(state.x_prev),
-                                      state.y_prev[0], inner_t, outer_t)
-
         refresh = (state.t + 1) % q == 0
-        pick = lambda full, vr: jax.tree_util.tree_map(
-            lambda a, b: jnp.where(refresh, a, b), full, vr)
-        p_vr = jax.tree_util.tree_map(
-            lambda pp, a, b: pp[0] + a - b, state.p_prev, p_now, p_old)
-        v_vr = state.v[0] + v_now - v_old
-        p_new = un(pick(p_now, p_vr))
-        v_new = pick(v_now, v_vr)[None]
 
-        u_new = jax.tree_util.tree_map(
-            lambda mu, pn, pp: (mu.astype(jnp.float32)
-                                + pn.astype(jnp.float32)
-                                - pp.astype(jnp.float32)).astype(mu.dtype),
-            u_mixed, p_new, state.p_prev)
+        def grads_fn(x_new, y_new):
+            toks = tokens[0]
+            half = toks.shape[0] // 2
+            inner_t, outer_t = toks[:half], toks[half:]
+
+            # gradients at the new iterate (always needed)
+            p_now, v_now, ce = local_grads(cfg, hyper, sq(x_new), y_new[0],
+                                           inner_t, outer_t)
+            # same minibatch at the previous iterate (recursive difference)
+            p_old, v_old, _ = local_grads(cfg, hyper, sq(state.x_prev),
+                                          state.y_prev[0], inner_t, outer_t)
+
+            pick = lambda full, vr: jax.tree_util.tree_map(
+                lambda a, b: jnp.where(refresh, a, b), full, vr)
+            p_vr = jax.tree_util.tree_map(
+                lambda pp, a, b: pp[0] + a - b, state.p_prev, p_now, p_old)
+            v_vr = state.v[0] + v_now - v_old
+            return un(pick(p_now, p_vr)), pick(v_now, v_vr)[None], ce
+
+        x_new, y_new, u_new, v_new, p_new, ce = consensus_descent_and_track(
+            engine, state.x, state.y, state.u, state.v, state.p_prev,
+            icfg.alpha, icfg.beta, grads_fn, agent_index=ids[0])
 
         mean_ce = jax.lax.pmean(ce, aentry)
         new_state = SvrTrainState(
@@ -129,10 +123,11 @@ def make_svr_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
         specs_state = jax.tree_util.tree_map(lambda _: P(aentry), state)
         specs_state = specs_state._replace(t=P())
         out_specs = (specs_state, {"outer_ce": P(), "refresh": P()})
-        fn = jax.shard_map(per_agent, mesh=mesh,
-                           in_specs=(specs_state, P(aentry)),
-                           out_specs=out_specs,
-                           axis_names=set(a_axes), check_vma=False)
-        return fn(state, tokens)
+        ids = jnp.arange(m, dtype=jnp.int32)
+        fn = shard_map(per_agent, mesh=mesh,
+                       in_specs=(specs_state, P(aentry), P(aentry)),
+                       out_specs=out_specs,
+                       axis_names=set(a_axes), check_vma=False)
+        return fn(state, tokens, ids)
 
     return step

@@ -1,0 +1,140 @@
+"""Minimal vendored fallback for the ``hypothesis`` API this suite uses.
+
+The real hypothesis is preferred (``pip install hypothesis``); when it is
+unavailable (offline containers) the test modules fall back to this shim,
+which replays a small deterministic set of examples per test instead of
+true property-based search: the two boundary corners first, then a few
+seeded pseudo-random draws.  Only the API surface the suite touches is
+provided: ``given`` (keyword strategies), ``settings(max_examples=...,
+deadline=...)``, and ``strategies.integers / floats / sampled_from /
+booleans``.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import zlib
+
+_MAX_EXAMPLES_CAP = 5
+
+
+class _Strategy:
+    def low(self):
+        raise NotImplementedError
+
+    def high(self):
+        raise NotImplementedError
+
+    def draw(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value, self.max_value = int(min_value), int(max_value)
+
+    def low(self):
+        return self.min_value
+
+    def high(self):
+        return self.max_value
+
+    def draw(self, rng):
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value, self.max_value = float(min_value), float(max_value)
+
+    def low(self):
+        return self.min_value
+
+    def high(self):
+        return self.max_value
+
+    def draw(self, rng):
+        return rng.uniform(self.min_value, self.max_value)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def low(self):
+        return self.elements[0]
+
+    def high(self):
+        return self.elements[-1]
+
+    def draw(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Booleans(_SampledFrom):
+    def __init__(self):
+        super().__init__([False, True])
+
+
+class _StrategiesNamespace:
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+
+strategies = _StrategiesNamespace()
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    """Records max_examples on the (possibly already given-wrapped) test."""
+    del deadline
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**param_strategies):
+    """Replays a fixed example set: both boundary corners, then seeded
+    pseudo-random draws (deterministic per test name)."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            declared = getattr(wrapper, "_compat_max_examples", None)
+            n = min(declared or _MAX_EXAMPLES_CAP, _MAX_EXAMPLES_CAP)
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for i in range(max(n, 1)):
+                if i == 0:
+                    draws = {k: s.low() for k, s in param_strategies.items()}
+                elif i == 1:
+                    draws = {k: s.high() for k, s in param_strategies.items()}
+                else:
+                    draws = {k: s.draw(rng)
+                             for k, s in param_strategies.items()}
+                fn(*args, **draws, **kwargs)
+
+        # Present a zero-arg signature: the strategy params are filled in
+        # here, not by pytest fixtures (functools.wraps would leak them).
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_compat_shim = True
+        return wrapper
+
+    return deco

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: vendored deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     HypergradConfig,

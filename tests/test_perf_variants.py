@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: vendored deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import layers as L

@@ -10,7 +10,7 @@ from repro.launch.dryrun import parse_collectives
 from repro.models import model as M
 from repro.roofline.analysis import (
     HBM_BW, LINK_BW, PEAK_FLOPS, active_param_count, analytic_param_count,
-    model_flops, roofline_terms)
+    model_flops, normalize_cost_analysis, roofline_terms)
 
 
 def test_xla_counts_scan_body_once():
@@ -22,9 +22,18 @@ def test_xla_counts_scan_body_once():
         params = M.init_params(cfg, jax.random.PRNGKey(0), with_head=True)
         tokens = jnp.zeros((2, 64), jnp.int32)
         fn = jax.jit(lambda p, t: M.forward(cfg, p, t, remat=False)[0])
-        return fn.lower(params, tokens).compile().cost_analysis()["flops"]
+        cost = normalize_cost_analysis(
+            fn.lower(params, tokens).compile().cost_analysis())
+        return cost["flops"]
 
     assert flops_for(4) == flops_for(8)
+
+
+def test_normalize_cost_analysis_handles_both_shapes():
+    assert normalize_cost_analysis({"flops": 1.0}) == {"flops": 1.0}
+    assert normalize_cost_analysis([{"flops": 2.0}]) == {"flops": 2.0}
+    assert normalize_cost_analysis([]) == {}
+    assert normalize_cost_analysis(None) == {}
 
 
 def test_parse_collectives_counts_and_bytes():

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: vendored deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.checkpoint.checkpoint import (
     latest_step, restore_pytree, restore_step, save_pytree, save_step)
