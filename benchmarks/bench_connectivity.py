@@ -10,13 +10,14 @@ from benchmarks.common import Row, make_setup, run_algo
 ITERS = 40
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    iters = 10 if smoke else ITERS
     rows = []
     finals = {}
     for pc in (0.3, 0.5, 0.7):
         s = make_setup(m=5, p_connect=pc)
         for algo in ("interact", "svr-interact"):
-            trace, us, _ = run_algo(s, algo, ITERS)
+            trace, us, _ = run_algo(s, algo, iters)
             finals[(algo, pc)] = trace[-1]
             rows.append(Row(f"fig4_connectivity_pc{pc}_{algo}", us,
                             f"final_metric={trace[-1]:.5f};lambda={s.spec.lam:.3f}"))

@@ -20,7 +20,7 @@ def _time(f, *args, iters=3):
     return 1e6 * (time.time() - t0) / iters
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
 
     # flash attention: FLOPs = 4 * b*h*s^2*hd (qk + pv), causal halves it
@@ -62,11 +62,11 @@ def run() -> list:
                     f"flops={2 * 2 * m * m * d:.3e};"
                     f"bytes={5 * m * d * 4}"))
 
-    rows += run_consensus_backends()
+    rows += run_consensus_backends(smoke=smoke)
     return rows
 
 
-def run_consensus_backends() -> list:
+def run_consensus_backends(smoke: bool = False) -> list:
     """ConsensusEngine backend sweep: dense vs pallas step1_step3 over
     (m, D).  Derived fields carry the structural quantities the roofline
     ingests (flops, HBM bytes, and the ppermute backend's wire bytes for
@@ -77,9 +77,9 @@ def run_consensus_backends() -> list:
     from repro.core import ring_mixing
 
     rows = []
-    for m in (8, 64, 256):
+    for m in (8,) if smoke else (8, 64, 256):
         spec = ring_mixing(m)
-        for d in (4096, 65536):
+        for d in (4096,) if smoke else (4096, 65536):
             ks = jax.random.split(jax.random.PRNGKey(9), 4)
             x = {"w": jax.random.normal(ks[0], (m, d))}
             u = {"w": jax.random.normal(ks[1], (m, d))}

@@ -11,13 +11,14 @@ ITERS = 40
 LRS = (0.5, 0.1, 0.01, 0.001)
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    iters = 10 if smoke else ITERS
     rows = []
     s = make_setup(m=5)
     for algo in ("interact", "svr-interact"):
         finals = []
         for lr in LRS:
-            trace, us, _ = run_algo(s, algo, ITERS, alpha=lr, beta=lr)
+            trace, us, _ = run_algo(s, algo, iters, alpha=lr, beta=lr)
             finals.append(trace[-1])
             rows.append(Row(f"fig5_lr{lr}_{algo}", us,
                             f"final_metric={trace[-1]:.5f}"))

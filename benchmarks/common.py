@@ -1,24 +1,28 @@
 """Shared harness for the paper-reproduction benchmarks.
 
-Each bench_* module exposes ``run() -> list[Row]``; benchmarks/run.py
-aggregates them into the required ``name,us_per_call,derived`` CSV.
+Each bench_* module exposes ``run(smoke=False) -> list[Row]``;
+benchmarks/run.py aggregates them into the required
+``name,us_per_call,derived`` CSV (``--smoke`` shrinks every suite to a
+CI-sized run).
+
+Algorithm construction goes through the unified Solver API
+(``repro.solvers``): ``build`` is a registry lookup — no per-algorithm
+branches — and ``run_algo`` drives the scan-compiled ``solver.run``
+(or the per-step python loop with ``scan=False``), timing the stepping
+separately from the convergence-metric evaluations.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable
 
 import jax
-import numpy as np
 
 from repro.core import (
     HypergradConfig, MLPMetaProblem, convergence_metric,
-    erdos_renyi_adjacency, init_dsgd_state, init_gt_dsgd_state, init_head,
-    init_mlp_backbone, init_state, init_svr_state, laplacian_mixing,
-    make_dsgd_step, make_gt_dsgd_step, make_interact_step,
-    make_svr_interact_step, make_synthetic_agents,
+    erdos_renyi_adjacency, init_head, init_mlp_backbone, laplacian_mixing,
+    make_synthetic_agents,
 )
+from repro.solvers import SolverConfig, make_solver, run_recorded
 
 
 @dataclasses.dataclass
@@ -67,50 +71,33 @@ ALGORITHMS = ("interact", "svr-interact", "gt-dsgd", "d-sgd")
 
 def build(s: Setup, algo: str, alpha: float = 0.3, beta: float = 0.3,
           batch: int | None = None, q: int | None = None, seed: int = 7):
-    """(state, step_fn, samples_per_step) for one algorithm.
+    """(solver, state) via the registry — one code path for every algo.
 
-    samples_per_step = IFO calls per agent per iteration (Definition 1):
-    full gradients cost n, minibatch estimators cost the batch size, the
-    SVR recursive estimator evaluates 2 points per sample.
+    batch/q default to the paper's ceil(sqrt(n)) inside the solver;
+    ``solver.samples_per_step(s.n)`` reports the per-agent IFO cost
+    (Definition 1) that the old ladder hand-computed per branch.
     """
-    q = q or int(np.ceil(np.sqrt(s.n)))
-    batch = batch or q
-    if algo == "interact":
-        st = init_state(s.prob, s.hg, s.x0, s.y0, s.data)
-        fn = make_interact_step(s.prob, s.hg, s.spec, alpha, beta)
-        return st, fn, float(s.n)
-    if algo == "svr-interact":
-        st = init_svr_state(s.prob, s.hg, s.x0, s.y0, s.data,
-                            jax.random.PRNGKey(seed))
-        fn = make_svr_interact_step(s.prob, s.hg, s.spec, alpha, beta, q=q,
-                                    batch_size=batch)
-        # amortized: one full refresh (n) every q steps + 2*batch otherwise
-        return st, fn, float(s.n / q + 2 * batch)
-    if algo == "gt-dsgd":
-        st = init_gt_dsgd_state(s.prob, s.hg, s.x0, s.y0, s.data,
-                                jax.random.PRNGKey(seed), batch)
-        fn = make_gt_dsgd_step(s.prob, s.hg, s.spec, alpha, beta, batch)
-        return st, fn, float(batch)
-    if algo == "d-sgd":
-        st = init_dsgd_state(s.x0, s.y0, s.m, jax.random.PRNGKey(seed))
-        fn = make_dsgd_step(s.prob, s.hg, s.spec, alpha, beta, batch)
-        return st, fn, float(batch)
-    raise ValueError(algo)
+    cfg = SolverConfig(algo=algo, alpha=alpha, beta=beta, batch_size=batch,
+                       q=q, mixing=s.spec, hypergrad=s.hg, seed=seed)
+    solver = make_solver(cfg)
+    state = solver.init(None, s.prob, s.hg, s.x0, s.y0, s.data)
+    return solver, state
 
 
 def run_algo(s: Setup, algo: str, iters: int, record_every: int = 5,
-             **kw) -> tuple[list[float], float, float]:
-    """Returns (metric trace, us_per_step, samples_per_step)."""
-    state, fn, spc = build(s, algo, **kw)
-    trace = []
-    # warmup compile
-    state = fn(state, s.data)
-    t0 = time.time()
-    for t in range(iters):
-        if t % record_every == 0:
-            trace.append(metric_of(s, state))
-        state = fn(state, s.data)
-    jax.block_until_ready(jax.tree_util.tree_leaves(state.x)[0])
-    took = time.time() - t0
-    trace.append(metric_of(s, state))
-    return trace, 1e6 * took / iters, spc
+             scan: bool = True, **kw) -> tuple[list[float], float, float]:
+    """Returns (metric trace, us_per_step, samples_per_step).
+
+    Delegates to the shared ``run_recorded`` runner: stepping runs in
+    ``record_every``-sized chunks through the scan-compiled
+    ``solver.run`` (``scan=False`` falls back to the per-step python
+    loop for comparison), compilation happens before the timer starts,
+    and the convergence metric is evaluated between timed chunks, so
+    ``us_per_step`` measures stepping only.
+    """
+    solver, state = build(s, algo, **kw)
+    _, trace, took = run_recorded(solver, state, s.data, iters,
+                                  record_every,
+                                  metric_fn=lambda st: metric_of(s, st),
+                                  scan=scan)
+    return trace, 1e6 * took / iters, solver.samples_per_step(s.n)

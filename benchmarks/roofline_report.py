@@ -23,7 +23,7 @@ def _trip_correction(arch: str, shape: str) -> float:
     return float(cfg.num_periods())
 
 
-def run(tag: str = "pod") -> list:
+def run(tag: str = "pod", smoke: bool = False) -> list:
     rows = []
     reports = []
     for res in load_dryrun(RESULTS, tag=tag):

@@ -8,14 +8,25 @@ Prints ``name,us_per_call,derived`` CSV rows.
   table1 sample & communication complexity to eps-stationarity
   kernels  Pallas kernel micro-structure
   roofline dry-run derived roofline terms (if dry-run artifacts exist)
+
+``--smoke`` runs every suite at CI-sized iteration counts (used by the
+bench-smoke CI job to keep the harness from rotting against API changes):
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-iteration run of every suite (CI)")
+    args = ap.parse_args()
+
     from benchmarks import (bench_complexity, bench_connectivity,
                             bench_convergence, bench_kernels, bench_lr,
                             roofline_report)
@@ -31,7 +42,7 @@ def main() -> None:
     failures = 0
     for name, fn in suites:
         try:
-            for row in fn():
+            for row in fn(smoke=args.smoke):
                 print(row.csv(), flush=True)
         except Exception:
             failures += 1

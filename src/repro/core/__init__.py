@@ -38,10 +38,13 @@ from repro.core.svr_interact import (
     SvrState,
     init_svr_state,
     make_svr_interact_step,
+    svr_interact_step,
 )
 from repro.core.baselines import (
     DsgdState,
     GtDsgdState,
+    dsgd_step,
+    gt_dsgd_step,
     init_dsgd_state,
     init_gt_dsgd_state,
     make_dsgd_step,

@@ -8,24 +8,34 @@
 
 Both use the stochastic Neumann hypergradient of eq. (22) for the outer
 gradient (the bilevel analogue of a plain stochastic gradient).
+
+Quickstart (the unified Solver API, see docs/SOLVERS.md)::
+
+    from repro.solvers import SolverConfig, make_solver
+    solver = make_solver(SolverConfig(algo="gt-dsgd", batch_size=12))
+    state = solver.init(None, problem, hg_cfg, x0, y0, data)
+    state = solver.run(state, data, 100)   # scan-compiled
+
+``make_gt_dsgd_step`` / ``make_dsgd_step`` remain as deprecated shims.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.consensus import consensus_descent_and_track, make_engine
+from repro.consensus import consensus_descent_and_track
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
 from repro.core.hypergrad import HypergradConfig
 from repro.core.svr_interact import _minibatch_grads
 
 __all__ = [
-    "GtDsgdState", "init_gt_dsgd_state", "make_gt_dsgd_step",
-    "DsgdState", "init_dsgd_state", "make_dsgd_step",
+    "GtDsgdState", "init_gt_dsgd_state", "gt_dsgd_step", "make_gt_dsgd_step",
+    "DsgdState", "init_dsgd_state", "dsgd_step", "make_dsgd_step",
 ]
 
 
@@ -53,36 +63,48 @@ def init_gt_dsgd_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     p, v = jax.vmap(
         partial(_minibatch_grads, problem, hg_cfg,
                 batch_size=batch_size))(x, y, data, keys[1:])
-    return GtDsgdState(x=x, y=y, u=p, v=v, p_prev=p,
+    # p_prev copied: u/p_prev must not alias one buffer (step donation)
+    p_prev = jax.tree_util.tree_map(jnp.array, p)
+    return GtDsgdState(x=x, y=y, u=p, v=v, p_prev=p_prev,
                        t=jnp.zeros((), jnp.int32), key=keys[0])
+
+
+def gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
+                 engine, alpha: float, beta: float, batch_size: int,
+                 state: GtDsgdState, data: AgentData) -> GtDsgdState:
+    """One GT-DSGD iteration (raw body over a built engine)."""
+    m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+    key, k_step = jax.random.split(state.key)
+    agent_keys = jax.random.split(k_step, m)
+
+    def grads_fn(x_new, y_new):
+        p_new, v_new = jax.vmap(
+            partial(_minibatch_grads, problem, hg_cfg,
+                    batch_size=batch_size))(x_new, y_new, data,
+                                            agent_keys)
+        return p_new, v_new, None
+
+    x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
+        engine, state.x, state.y, state.u, state.v, state.p_prev,
+        alpha, beta, grads_fn)
+    return GtDsgdState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
+                       t=state.t + 1, key=key)
 
 
 def make_gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
                       mixing: MixingSpec, alpha: float, beta: float,
                       batch_size: int, backend: str = "dense",
                       **backend_opts):
-    engine = make_engine(backend, mixing, **backend_opts)
-
-    @jax.jit
-    def step(state: GtDsgdState, data: AgentData) -> GtDsgdState:
-        m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
-        key, k_step = jax.random.split(state.key)
-        agent_keys = jax.random.split(k_step, m)
-
-        def grads_fn(x_new, y_new):
-            p_new, v_new = jax.vmap(
-                partial(_minibatch_grads, problem, hg_cfg,
-                        batch_size=batch_size))(x_new, y_new, data,
-                                                agent_keys)
-            return p_new, v_new, None
-
-        x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
-            engine, state.x, state.y, state.u, state.v, state.p_prev,
-            alpha, beta, grads_fn)
-        return GtDsgdState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
-                           t=state.t + 1, key=key)
-
-    return step
+    """Deprecated shim: use ``repro.solvers.make_solver`` instead."""
+    warnings.warn(
+        "make_gt_dsgd_step is deprecated; use repro.solvers."
+        "make_solver(SolverConfig(algo='gt-dsgd', ...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.solvers import SolverConfig, make_solver
+    cfg = SolverConfig(algo="gt-dsgd", alpha=alpha, beta=beta,
+                       batch_size=batch_size, mixing=mixing,
+                       backend=backend, backend_opts=backend_opts)
+    return make_solver(cfg).build(problem, hg_cfg).step
 
 
 class DsgdState(NamedTuple):
@@ -97,28 +119,38 @@ def init_dsgd_state(x0, y0, m: int, key: jax.Array) -> DsgdState:
                      t=jnp.zeros((), jnp.int32), key=key)
 
 
+def dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
+              engine, alpha: float, beta: float, batch_size: int,
+              state: DsgdState, data: AgentData) -> DsgdState:
+    """One D-SGD iteration (raw body over a built engine)."""
+    m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+    key, k_step = jax.random.split(state.key)
+    agent_keys = jax.random.split(k_step, m)
+
+    p, v = jax.vmap(
+        partial(_minibatch_grads, problem, hg_cfg,
+                batch_size=batch_size))(state.x, state.y, data, agent_keys)
+
+    # No tracking: descend the raw stochastic hypergradient after the
+    # consensus combine.
+    x_new = jax.tree_util.tree_map(
+        lambda mx, g: mx - alpha * g, engine.mix(state.x), p)
+    y_new = jax.tree_util.tree_map(
+        lambda y, g: y - beta * g, state.y, v)
+    return DsgdState(x=x_new, y=y_new, t=state.t + 1, key=key)
+
+
 def make_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
                    mixing: MixingSpec, alpha: float, beta: float,
                    batch_size: int, backend: str = "dense",
                    **backend_opts):
-    engine = make_engine(backend, mixing, **backend_opts)
-
-    @jax.jit
-    def step(state: DsgdState, data: AgentData) -> DsgdState:
-        m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
-        key, k_step = jax.random.split(state.key)
-        agent_keys = jax.random.split(k_step, m)
-
-        p, v = jax.vmap(
-            partial(_minibatch_grads, problem, hg_cfg,
-                    batch_size=batch_size))(state.x, state.y, data, agent_keys)
-
-        # No tracking: descend the raw stochastic hypergradient after the
-        # consensus combine.
-        x_new = jax.tree_util.tree_map(
-            lambda mx, g: mx - alpha * g, engine.mix(state.x), p)
-        y_new = jax.tree_util.tree_map(
-            lambda y, g: y - beta * g, state.y, v)
-        return DsgdState(x=x_new, y=y_new, t=state.t + 1, key=key)
-
-    return step
+    """Deprecated shim: use ``repro.solvers.make_solver`` instead."""
+    warnings.warn(
+        "make_dsgd_step is deprecated; use repro.solvers."
+        "make_solver(SolverConfig(algo='d-sgd', ...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.solvers import SolverConfig, make_solver
+    cfg = SolverConfig(algo="d-sgd", alpha=alpha, beta=beta,
+                       batch_size=batch_size, mixing=mixing,
+                       backend=backend, backend_opts=backend_opts)
+    return make_solver(cfg).build(problem, hg_cfg).step

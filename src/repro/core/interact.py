@@ -13,22 +13,34 @@ per agent.  Steps 1 and 3 are delegated to a pluggable
 ``ConsensusEngine`` (repro/consensus) through the shared
 ``consensus_descent_and_track`` step-core — the same skeleton drives
 SVR-INTERACT, the Section-6 baselines, and the distributed LM train step.
-``make_interact_step(..., backend=...)`` selects the combine
-implementation: ``"dense"`` (matmul reference), ``"pallas"`` (the fused
-consensus+tracking kernel on the simulator hot loop), or ``"ppermute"``
-(device-mesh collectives, used by repro/train).  Step sizes must satisfy
-the Theorem-1 bounds, exposed by ``theorem1_step_sizes``.
+Step sizes must satisfy the Theorem-1 bounds, exposed by
+``theorem1_step_sizes``.
+
+Quickstart (the unified Solver API, see docs/SOLVERS.md)::
+
+    from repro.solvers import SolverConfig, make_solver
+    solver = make_solver(SolverConfig(algo="interact", alpha=0.3,
+                                      backend="dense"))
+    state = solver.init(None, problem, hg_cfg, x0, y0, data)
+    state = solver.run(state, data, 100)   # scan-compiled multi-step
+
+``backend`` selects the combine implementation: ``"dense"`` (matmul
+reference), ``"pallas"`` (the fused consensus+tracking kernel on the
+simulator hot loop), or ``"ppermute"`` (device-mesh collectives, used by
+repro/train).  ``make_interact_step`` remains as a deprecated shim over
+the solver path.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.consensus import as_engine, consensus_descent_and_track, make_engine
+from repro.consensus import as_engine, consensus_descent_and_track
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
 from repro.core.hypergrad import HypergradConfig, hypergradient
@@ -85,7 +97,10 @@ def init_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
         partial(_agent_gradients, problem, hg_cfg)
     )(x, y, inner_b, outer_b)
     p, v = grads
-    return InteractState(x=x, y=y, u=p, v=v, p_prev=p,
+    # p_prev is a copy of p: u and p_prev must not alias the same buffer
+    # or the donating step closures cannot donate the state.
+    p_prev = jax.tree_util.tree_map(jnp.array, p)
+    return InteractState(x=x, y=y, u=p, v=v, p_prev=p_prev,
                          t=jnp.zeros((), jnp.int32))
 
 
@@ -124,19 +139,20 @@ def interact_step(
 def make_interact_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
                        mixing: MixingSpec, alpha: float, beta: float,
                        backend: str = "dense", **backend_opts):
-    """jit-compiled step closure over static configuration.
+    """Deprecated shim: use ``repro.solvers.make_solver`` instead.
 
-    ``backend`` selects the consensus implementation ("dense" matmul
-    reference or "pallas" fused kernel on the single-host simulator).
+    Returns the registry solver's jitted step closure (state donated),
+    preserving the legacy positional signature.
     """
-    engine = make_engine(backend, mixing, **backend_opts)
-
-    @jax.jit
-    def step(state: InteractState, data: AgentData) -> InteractState:
-        return interact_step(problem, hg_cfg, engine, alpha, beta, state,
-                             data)
-
-    return step
+    warnings.warn(
+        "make_interact_step is deprecated; use repro.solvers."
+        "make_solver(SolverConfig(algo='interact', ...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.solvers import SolverConfig, make_solver
+    cfg = SolverConfig(algo="interact", alpha=alpha, beta=beta,
+                       mixing=mixing, backend=backend,
+                       backend_opts=backend_opts)
+    return make_solver(cfg).build(problem, hg_cfg).step
 
 
 def theorem1_step_sizes(

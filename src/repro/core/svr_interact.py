@@ -12,22 +12,32 @@ full-gradient pass every q iterations:
 with the K-term stochastic Neumann hypergradient of eq. (22) on minibatch
 samples.  The paper sets |S| = q = ceil(sqrt(n)) which yields the
 O(sqrt(n) eps^-1) sample complexity of Corollary 4.
+
+Quickstart (the unified Solver API, see docs/SOLVERS.md)::
+
+    from repro.solvers import SolverConfig, make_solver
+    solver = make_solver(SolverConfig(algo="svr-interact", q=25))
+    state = solver.init(None, problem, hg_cfg, x0, y0, data)
+    state = solver.run(state, data, 100)   # scan-compiled
+
+``make_svr_interact_step`` remains as a deprecated shim over that path.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.consensus import consensus_descent_and_track, make_engine
+from repro.consensus import consensus_descent_and_track
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
 from repro.core.hypergrad import HypergradConfig, hypergradient
 
-__all__ = ["SvrState", "init_svr_state", "make_svr_interact_step"]
+__all__ = ["SvrState", "init_svr_state", "svr_interact_step",
+           "make_svr_interact_step"]
 
 
 class SvrState(NamedTuple):
@@ -75,29 +85,30 @@ def init_svr_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     keys = jax.random.split(key, m + 1)
     p, v = jax.vmap(partial(_full_grads, problem, hg_cfg))(
         x, y, data, keys[1:])
-    return SvrState(x=x, y=y, u=p, v=v, p_prev=p, x_prev=x, y_prev=y,
-                    t=jnp.zeros((), jnp.int32), key=keys[0])
+    # copies: no two state leaves may alias one buffer (step donation)
+    copy = lambda tree: jax.tree_util.tree_map(jnp.array, tree)
+    return SvrState(x=x, y=y, u=p, v=v, p_prev=copy(p), x_prev=copy(x),
+                    y_prev=copy(y), t=jnp.zeros((), jnp.int32), key=keys[0])
 
 
-def make_svr_interact_step(
+def svr_interact_step(
     problem: BilevelProblem,
     hg_cfg: HypergradConfig,
-    mixing: MixingSpec,
+    engine,
     alpha: float,
     beta: float,
     q: int,
-    batch_size: int | None = None,
-    backend: str = "dense",
-    **backend_opts,
-):
-    """jit'd SVR-INTERACT step.  batch_size defaults to q (paper: |S|=q).
+    batch_size: int,
+    state: SvrState,
+    data: AgentData,
+) -> SvrState:
+    """One SVR-INTERACT iteration (raw body over a built engine).
 
-    Consensus Steps 1/3 run through the shared step-core on the selected
-    ``ConsensusEngine`` backend; only Step 2 (the SPIDER estimator)
-    differs from Algorithm 1.
+    Consensus Steps 1/3 run through the shared step-core; only Step 2
+    (the SPIDER estimator, full refresh every q steps) differs from
+    Algorithm 1.
     """
-    engine = make_engine(backend, mixing, **backend_opts)
-    bs = batch_size if batch_size is not None else q
+    bs = batch_size
 
     def _vr_grads(x, y, x_prev, y_prev, v_prev, p_prev, data, key):
         """Per-agent recursive estimators (23)-(24) at minibatch bs."""
@@ -113,30 +124,53 @@ def make_svr_interact_step(
                                    v_prev, v_now, v_old)
         return p, v
 
-    @jax.jit
-    def step(state: SvrState, data: AgentData) -> SvrState:
-        m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
-        key, k_step = jax.random.split(state.key)
-        agent_keys = jax.random.split(k_step, m)
+    m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+    key, k_step = jax.random.split(state.key)
+    agent_keys = jax.random.split(k_step, m)
 
-        def grads_fn(x_new, y_new):
-            # Step 2: full refresh every q steps, recursive otherwise.
-            full_p, full_v = jax.vmap(partial(_full_grads, problem, hg_cfg))(
-                x_new, y_new, data, agent_keys)
-            vr_p, vr_v = jax.vmap(_vr_grads)(
-                x_new, y_new, state.x, state.y, state.v, state.p_prev,
-                data, agent_keys)
-            refresh = (state.t + 1) % q == 0
-            pick = lambda a, b: jax.tree_util.tree_map(
-                lambda ai, bi: jnp.where(refresh, ai, bi), a, b)
-            return pick(full_p, vr_p), pick(full_v, vr_v), None
+    def grads_fn(x_new, y_new):
+        # Step 2: full refresh every q steps, recursive otherwise.
+        full_p, full_v = jax.vmap(partial(_full_grads, problem, hg_cfg))(
+            x_new, y_new, data, agent_keys)
+        vr_p, vr_v = jax.vmap(_vr_grads)(
+            x_new, y_new, state.x, state.y, state.v, state.p_prev,
+            data, agent_keys)
+        refresh = (state.t + 1) % q == 0
+        pick = lambda a, b: jax.tree_util.tree_map(
+            lambda ai, bi: jnp.where(refresh, ai, bi), a, b)
+        return pick(full_p, vr_p), pick(full_v, vr_v), None
 
-        x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
-            engine, state.x, state.y, state.u, state.v, state.p_prev,
-            alpha, beta, grads_fn)
+    x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
+        engine, state.x, state.y, state.u, state.v, state.p_prev,
+        alpha, beta, grads_fn)
 
-        return SvrState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
-                        x_prev=state.x, y_prev=state.y,
-                        t=state.t + 1, key=key)
+    return SvrState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
+                    x_prev=state.x, y_prev=state.y,
+                    t=state.t + 1, key=key)
 
-    return step
+
+def make_svr_interact_step(
+    problem: BilevelProblem,
+    hg_cfg: HypergradConfig,
+    mixing: MixingSpec,
+    alpha: float,
+    beta: float,
+    q: int,
+    batch_size: int | None = None,
+    backend: str = "dense",
+    **backend_opts,
+):
+    """Deprecated shim: use ``repro.solvers.make_solver`` instead.
+
+    Returns the registry solver's jitted step closure (state donated),
+    preserving the legacy signature.  batch_size defaults to q (|S| = q).
+    """
+    warnings.warn(
+        "make_svr_interact_step is deprecated; use repro.solvers."
+        "make_solver(SolverConfig(algo='svr-interact', ...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.solvers import SolverConfig, make_solver
+    cfg = SolverConfig(algo="svr-interact", alpha=alpha, beta=beta, q=q,
+                       batch_size=batch_size, mixing=mixing,
+                       backend=backend, backend_opts=backend_opts)
+    return make_solver(cfg).build(problem, hg_cfg).step

@@ -1,0 +1,47 @@
+"""Unified Solver API: one registry, one config, one runner.
+
+The paper's Section-6 experiments are head-to-head sweeps of INTERACT,
+SVR-INTERACT, GT-DSGD and D-SGD; this package gives all four (and any
+future algorithm) a single surface:
+
+    from repro.solvers import SolverConfig, make_solver, solve
+
+    solver = make_solver(SolverConfig(algo="interact", alpha=0.3))
+    state  = solver.init(None, problem, hg_cfg, x0, y0, data)
+    state  = solver.run(state, data, 100)        # lax.scan, one dispatch
+
+    # or the whole Section-6 experiment in one call:
+    result = solve(SolverConfig(algo="svr-interact"), 100, record_every=5)
+
+See docs/SOLVERS.md for the protocol, the registry, and how to add a
+fifth algorithm as a drop-in entry.
+"""
+from repro.solvers.api import (
+    SolveResult,
+    Solver,
+    SolverBase,
+    available_solvers,
+    make_solver,
+    register_solver,
+    run_recorded,
+    solve,
+)
+from repro.solvers.config import SolverConfig, TopologyConfig
+
+# Importing the implementation modules populates the registry.
+from repro.solvers import baselines as _baselines    # noqa: F401
+from repro.solvers import interact as _interact      # noqa: F401
+from repro.solvers import svr_interact as _svr       # noqa: F401
+
+__all__ = [
+    "SolveResult",
+    "Solver",
+    "SolverBase",
+    "SolverConfig",
+    "TopologyConfig",
+    "available_solvers",
+    "make_solver",
+    "register_solver",
+    "run_recorded",
+    "solve",
+]

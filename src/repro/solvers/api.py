@@ -1,0 +1,295 @@
+"""The `Solver` protocol, registry, and scan-compiled experiment runner.
+
+One API surface drives every Section-6 algorithm:
+
+    from repro.solvers import SolverConfig, make_solver
+
+    solver = make_solver(SolverConfig(algo="interact", alpha=0.3, beta=0.3))
+    state  = solver.init(None, problem, hg_cfg, x0, y0, data)
+    state  = solver.step(state, data)            # one jitted iteration
+    state  = solver.run(state, data, 100)        # lax.scan, compiled once
+
+``make_solver`` looks the algorithm up in the ``@register_solver``
+registry — adding a fifth algorithm is one decorated class, not a new
+copy of the init/step/build triple (see docs/SOLVERS.md).
+
+The step and run closures are jitted with ``donate_argnums=0``: the
+incoming state buffers are donated to the outputs, so the simulator hot
+loop updates in place instead of allocating a fresh state per call.
+``run`` wraps the *same* step body in ``lax.scan`` (static ``num_steps``)
+so a multi-step experiment dispatches one XLA computation instead of one
+Python call per iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.consensus import make_engine
+from repro.solvers.config import SolverConfig
+
+__all__ = [
+    "Solver",
+    "SolverBase",
+    "SolveResult",
+    "available_solvers",
+    "make_solver",
+    "register_solver",
+    "run_recorded",
+    "solve",
+]
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_solver(name: str) -> Callable[[type], type]:
+    """Class decorator: register a Solver implementation under ``name``."""
+
+    def deco(cls: type) -> type:
+        existing = _REGISTRY.get(name)
+        if existing is not None and existing is not cls:
+            raise ValueError(f"solver {name!r} already registered "
+                             f"({existing.__name__})")
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def available_solvers() -> tuple[str, ...]:
+    """Registered algorithm names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def make_solver(config: SolverConfig) -> "Solver":
+    """Instantiate the registered solver for ``config.algo``."""
+    try:
+        cls = _REGISTRY[config.algo]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {config.algo!r}; "
+            f"choose from {available_solvers()}") from None
+    return cls(config)
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """What every registry algorithm exposes.
+
+    ``init`` binds the problem instance (building the consensus engine and
+    compiling the step/run closures) and returns the initial state;
+    ``step`` advances one iteration; ``run`` advances ``num_steps``
+    iterations inside one ``lax.scan``.  ``samples_per_step(n)`` is the
+    per-agent IFO cost of one iteration (Definition 1) on an n-sample
+    local dataset; ``communications_per_step`` the consensus rounds per
+    iteration (Definition 2).
+    """
+
+    config: SolverConfig
+    communications_per_step: int
+
+    def init(self, key, problem, hg_cfg, x0, y0, data) -> Any: ...
+
+    def step(self, state, data) -> Any: ...
+
+    def run(self, state, data, num_steps: int) -> Any: ...
+
+    def samples_per_step(self, n: int) -> float: ...
+
+
+class SolverBase:
+    """Shared plumbing: engine construction, jit + donation, scan runner.
+
+    Subclasses implement ``_init_state`` and ``_make_step`` (returning the
+    raw python step body over a bound ``ConsensusEngine``); everything
+    else — registry construction, closure compilation, the scan runner,
+    warmup — lives here once.
+    """
+
+    communications_per_step = 2  # Steps 1 and 3 each mix once
+
+    def __init__(self, config: SolverConfig):
+        self.config = config
+        self._step_fn = None
+        self._run_fn = None
+
+    # -- subclass hooks ---------------------------------------------------
+    def _init_state(self, key, problem, hg_cfg, x0, y0, data):
+        raise NotImplementedError
+
+    def _make_step(self, problem, hg_cfg, engine, n: int | None):
+        """Return the raw (non-jitted) ``step(state, data) -> state``."""
+        raise NotImplementedError
+
+    # -- construction -----------------------------------------------------
+    def build(self, problem, hg_cfg=None, *, m: int | None = None,
+              n: int | None = None) -> "SolverBase":
+        """Bind the problem + network and compile the step/run closures.
+
+        ``init`` calls this automatically (deriving m, n from the data);
+        call it directly only when constructing a step function without
+        data in hand (the legacy ``make_*_step`` shims do).
+        """
+        hg_cfg = hg_cfg if hg_cfg is not None else self.config.hypergrad
+        spec = self.config.mixing_spec(m)
+        engine = make_engine(self.config.backend, spec,
+                             **dict(self.config.backend_opts))
+        raw = self._make_step(problem, hg_cfg, engine, n)
+        self._step_fn = jax.jit(raw, donate_argnums=0)
+
+        def scan_run(state, data, num_steps):
+            def body(s, _):
+                return raw(s, data), None
+
+            out, _ = jax.lax.scan(body, state, xs=None, length=num_steps)
+            return out
+
+        self._run_fn = jax.jit(scan_run, static_argnums=2, donate_argnums=0)
+        self._problem, self._hg_cfg = problem, hg_cfg
+        return self
+
+    def init(self, key, problem, hg_cfg, x0, y0, data):
+        """Build the solver for this problem and return the initial state.
+
+        ``key=None`` derives the sampling key from ``config.seed``;
+        ``hg_cfg=None`` falls back to ``config.hypergrad``.
+        """
+        m = data.inner_x.shape[0]
+        # n is the full per-agent dataset (inner + outer splits): the
+        # paper's q = |S| = ceil(sqrt(n)) defaults are taken against it.
+        n = data.inner_x.shape[1] + data.outer_x.shape[1]
+        self.build(problem, hg_cfg, m=m, n=n)
+        if key is None:
+            key = jax.random.PRNGKey(self.config.seed)
+        return self._init_state(key, self._problem, self._hg_cfg, x0, y0,
+                                data)
+
+    # -- stepping ---------------------------------------------------------
+    def step(self, state, data):
+        """One jitted iteration (state buffers donated)."""
+        if self._step_fn is None:
+            raise RuntimeError("call init()/build() before step()")
+        return self._step_fn(state, data)
+
+    def run(self, state, data, num_steps: int):
+        """``num_steps`` iterations under one jitted ``lax.scan``."""
+        if self._run_fn is None:
+            raise RuntimeError("call init()/build() before run()")
+        return self._run_fn(state, data, num_steps)
+
+    def warmup(self, state, data, num_steps: int | None = None) -> None:
+        """Compile ``step`` (or ``run`` at ``num_steps``) without consuming
+        ``state``: the donated argument is a copy, the result discarded."""
+        copy = jax.tree_util.tree_map(jnp.array, state)
+        out = (self.step(copy, data) if num_steps is None
+               else self.run(copy, data, num_steps))
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+
+    def samples_per_step(self, n: int) -> float:
+        raise NotImplementedError
+
+
+def run_recorded(solver, state, data, num_steps: int, record_every: int = 0,
+                 metric_fn=None, scan: bool = True):
+    """Chunked timed runner shared by ``solve`` and the bench harness.
+
+    Advances ``num_steps`` iterations in ``record_every``-sized chunks —
+    through the scan-compiled ``solver.run`` (one compile per distinct
+    chunk length), or the per-step python loop with ``scan=False``.
+    Compilation happens on a throwaway state copy before the timer
+    starts, and ``metric_fn(state) -> float`` (if given) is evaluated
+    *between* timed chunks, so the returned seconds measure stepping
+    only.  Returns ``(state, trace, seconds)``.
+    """
+    chunk = record_every if record_every else num_steps
+    lengths = [chunk] * (num_steps // chunk)
+    if num_steps % chunk:
+        lengths.append(num_steps % chunk)
+    if scan:
+        for length in sorted(set(lengths)):
+            solver.warmup(state, data, length)
+    else:
+        solver.warmup(state, data)
+
+    trace, took = [], 0.0
+    for length in lengths:
+        if metric_fn is not None:
+            trace.append(metric_fn(state))
+        t0 = time.perf_counter()
+        if scan:
+            state = solver.run(state, data, length)
+        else:
+            for _ in range(length):
+                state = solver.step(state, data)
+        jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+        took += time.perf_counter() - t0
+    if metric_fn is not None:
+        trace.append(metric_fn(state))
+    return state, trace, took
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """What ``solve`` returns: final state plus the experiment record."""
+
+    state: Any
+    trace: list[float]          # convergence metric every record_every steps
+    us_per_step: float          # stepping time only (metrics excluded)
+    samples_per_step: float     # per-agent IFO cost (Definition 1)
+    communications_per_step: int
+
+
+def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
+          *, problem=None, hg_cfg=None, x0=None, y0=None, data=None,
+          num_agents: int = 5, n_per_agent: int = 600,
+          metric_fn=None) -> SolveResult:
+    """End-to-end experiment: build, init, scan-run, record.
+
+    With only ``(config, num_steps, record_every)`` this reproduces the
+    paper's Section-6 synthetic meta-learning setup (m agents, n samples
+    per agent, the MLP problem, the eq.-11 convergence metric); pass
+    ``problem``/``x0``/``y0``/``data`` to run on your own instance, and
+    ``metric_fn(state) -> float`` to record a custom metric.
+
+    Stepping runs through ``solver.run`` in ``record_every``-sized chunks
+    (one compile per distinct chunk length); metric evaluation happens
+    outside the timed window.
+    """
+    if problem is None or data is None or x0 is None or y0 is None:
+        from repro.core import (HypergradConfig, MLPMetaProblem,
+                                init_head, init_mlp_backbone,
+                                make_synthetic_agents)
+        key = jax.random.PRNGKey(config.seed)
+        d_in, hidden, classes = 16, 20, 5
+        data = make_synthetic_agents(key, num_agents=num_agents,
+                                     n_per_agent=n_per_agent, d_in=d_in,
+                                     num_classes=classes)
+        problem = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+        x0 = init_mlp_backbone(jax.random.PRNGKey(config.seed + 1), d_in,
+                               hidden=hidden)
+        y0 = init_head(jax.random.PRNGKey(config.seed + 2), hidden, classes)
+
+    solver = make_solver(config)
+    state = solver.init(None, problem, hg_cfg, x0, y0, data)
+
+    if metric_fn is None and record_every:
+        from repro.core import convergence_metric
+
+        def metric_fn(st):
+            rep = convergence_metric(solver._problem, solver._hg_cfg,
+                                     st.x, st.y, 300, 0.5, data)
+            return float(rep.total)
+
+    state, trace, took = run_recorded(solver, state, data, num_steps,
+                                      record_every, metric_fn)
+
+    n = data.inner_x.shape[1] + data.outer_x.shape[1]
+    return SolveResult(state=state, trace=trace,
+                       us_per_step=1e6 * took / max(num_steps, 1),
+                       samples_per_step=solver.samples_per_step(n),
+                       communications_per_step=solver.communications_per_step)

@@ -1,0 +1,67 @@
+"""Registry entries for the Section-6 baselines: GT-DSGD and D-SGD.
+
+GT-DSGD keeps INTERACT's tracking skeleton (two consensus rounds) on
+plain minibatch gradients; D-SGD additionally drops tracking, so it
+communicates once per iteration (Definition 2's cheapest row) but pays
+for it in convergence (Fig. 2).
+"""
+from __future__ import annotations
+
+from repro.core.baselines import (
+    dsgd_step,
+    gt_dsgd_step,
+    init_dsgd_state,
+    init_gt_dsgd_state,
+)
+from repro.solvers.api import SolverBase, register_solver
+
+__all__ = ["DsgdSolver", "GtDsgdSolver"]
+
+
+@register_solver("gt-dsgd")
+class GtDsgdSolver(SolverBase):
+    """Gradient-tracked decentralized SGD (stripped-down INTERACT)."""
+
+    def _init_state(self, key, problem, hg_cfg, x0, y0, data):
+        # full per-agent dataset, matching the n SolverBase.init resolves
+        # q/batch against — init and step must use the same batch size
+        n = data.inner_x.shape[1] + data.outer_x.shape[1]
+        return init_gt_dsgd_state(problem, hg_cfg, x0, y0, data, key,
+                                  self.config.resolve_batch(n))
+
+    def _make_step(self, problem, hg_cfg, engine, n):
+        alpha, beta = self.config.alpha, self.config.beta
+        bs = self.config.resolve_batch(n)
+
+        def step(state, data):
+            return gt_dsgd_step(problem, hg_cfg, engine, alpha, beta, bs,
+                                state, data)
+
+        return step
+
+    def samples_per_step(self, n: int) -> float:
+        return float(self.config.resolve_batch(n))
+
+
+@register_solver("d-sgd")
+class DsgdSolver(SolverBase):
+    """Decentralized SGD without gradient tracking (one mix per step)."""
+
+    communications_per_step = 1  # only x is mixed; no tracker exchange
+
+    def _init_state(self, key, problem, hg_cfg, x0, y0, data):
+        m = data.inner_x.shape[0]
+        return init_dsgd_state(x0, y0, m, key)
+
+    def _make_step(self, problem, hg_cfg, engine, n):
+        alpha, beta = self.config.alpha, self.config.beta
+        bs = self.config.resolve_batch(n)
+
+        def step(state, data):
+            return dsgd_step(problem, hg_cfg, engine, alpha, beta, bs,
+                             state, data)
+
+        return step
+
+    def samples_per_step(self, n: int) -> float:
+        return float(self.config.resolve_batch(n))

@@ -1,0 +1,119 @@
+"""`SolverConfig`: the one configuration object behind every algorithm.
+
+Everything the four Section-6 algorithms used to take positionally —
+algorithm name, step sizes, minibatch / refresh period, consensus backend
+plus backend options, network topology, hypergradient configuration, and
+the RNG seed — lives in a single frozen dataclass consumed by
+``repro.solvers.make_solver`` (single-host simulator) and accepted by
+``repro.train.make_train_step`` / ``make_svr_train_step`` (distributed LM
+runtime), so one config drives both paths.
+
+``TopologyConfig`` describes the communication graph declaratively
+(kind + parameters); it materialises into a ``MixingSpec`` once the agent
+count is known.  A pre-built ``MixingSpec`` can be supplied instead via
+``SolverConfig.mixing`` — it wins over ``topology`` when set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping
+
+from repro.core.consensus import (
+    MixingSpec,
+    erdos_renyi_adjacency,
+    laplacian_mixing,
+    ring_mixing,
+    torus_mixing,
+)
+from repro.core.hypergrad import HypergradConfig
+
+__all__ = ["SolverConfig", "TopologyConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyConfig:
+    """Declarative communication graph: realised per agent count m.
+
+    kind:       "ring" | "erdos-renyi" | "torus".
+    p_connect:  ER edge probability.
+    seed:       ER graph sample seed.
+    self_weight: ring mixing w0 (lambda then analytic).
+    """
+
+    kind: str = "erdos-renyi"
+    p_connect: float = 0.5
+    seed: int = 0
+    self_weight: float = 1.0 / 3.0
+
+    def mixing_spec(self, m: int) -> MixingSpec:
+        """The configured topology's mixing matrix for ``m`` agents."""
+        if self.kind == "ring":
+            return ring_mixing(m, self_weight=self.self_weight)
+        if self.kind == "erdos-renyi":
+            return laplacian_mixing(
+                erdos_renyi_adjacency(m, self.p_connect, self.seed))
+        if self.kind == "torus":
+            rows = int(m ** 0.5)
+            while rows > 1 and m % rows:
+                rows -= 1
+            return torus_mixing(rows, m // rows)
+        raise ValueError(f"unknown topology {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Unified configuration for all registry solvers.
+
+    Attributes:
+      algo: registry name — "interact" | "svr-interact" | "gt-dsgd" |
+        "d-sgd" (see ``repro.solvers.available_solvers()``).
+      alpha / beta: outer / inner step sizes (Theorem-1 bounds apply).
+      batch_size: minibatch size |S| for the stochastic algorithms;
+        ``None`` defaults to the paper's ceil(sqrt(n)) at init time.
+      q: SVR-INTERACT full-refresh period; ``None`` -> ceil(sqrt(n)).
+      mixing: explicit ``MixingSpec``; overrides ``topology`` when set.
+      topology: declarative graph, realised once m is known.
+      backend: consensus backend — "dense" | "pallas" | "ppermute".
+      backend_opts: extra kwargs for ``repro.consensus.make_engine``
+        (e.g. ``interpret`` for pallas, ``compress``/``dp_sigma`` for
+        ppermute).
+      hypergrad: how the inner-Hessian inverse is applied (eq. 5 / 22).
+      seed: PRNG seed for the stochastic solvers' sampling streams.
+    """
+
+    algo: str = "interact"
+    alpha: float = 0.3
+    beta: float = 0.3
+    batch_size: int | None = None
+    q: int | None = None
+    mixing: MixingSpec | None = None
+    topology: TopologyConfig = TopologyConfig()
+    backend: str = "dense"
+    backend_opts: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    hypergrad: HypergradConfig = HypergradConfig()
+    seed: int = 0
+
+    def mixing_spec(self, m: int | None = None) -> MixingSpec:
+        """The mixing matrix: explicit ``mixing`` if set, else topology(m)."""
+        if self.mixing is not None:
+            return self.mixing
+        if m is None:
+            raise ValueError(
+                "SolverConfig has no explicit mixing; the agent count m is "
+                "required to realise the declarative topology")
+        return self.topology.mixing_spec(m)
+
+    def resolve_q(self, n: int | None = None) -> int:
+        """Refresh period: explicit ``q`` or the paper's ceil(sqrt(n))."""
+        if self.q is not None:
+            return self.q
+        if n is None:
+            raise ValueError("q unset and per-agent sample count n unknown")
+        return int(math.ceil(math.sqrt(n)))
+
+    def resolve_batch(self, n: int | None = None) -> int:
+        """Minibatch size: explicit ``batch_size`` or |S| = q (paper)."""
+        if self.batch_size is not None:
+            return self.batch_size
+        return self.resolve_q(n)

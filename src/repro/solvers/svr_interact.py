@@ -1,0 +1,38 @@
+"""Registry entry for SVR-INTERACT (Algorithm 2).
+
+SPIDER-style recursive estimators with a full refresh every q steps.
+Amortized per-agent IFO cost: one n-sample refresh every q iterations
+plus two batch-size evaluations per recursive step (Corollary 4's
+O(sqrt(n)) regime at the paper's q = |S| = ceil(sqrt(n)) defaults).
+"""
+from __future__ import annotations
+
+from repro.core.svr_interact import init_svr_state, svr_interact_step
+from repro.solvers.api import SolverBase, register_solver
+
+__all__ = ["SvrInteractSolver"]
+
+
+@register_solver("svr-interact")
+class SvrInteractSolver(SolverBase):
+    """Variance-reduced INTERACT (eqs. 23-24 estimators)."""
+
+    def _init_state(self, key, problem, hg_cfg, x0, y0, data):
+        return init_svr_state(problem, hg_cfg, x0, y0, data, key)
+
+    def _make_step(self, problem, hg_cfg, engine, n):
+        alpha, beta = self.config.alpha, self.config.beta
+        q = self.config.resolve_q(n)
+        bs = self.config.resolve_batch(n)
+
+        def step(state, data):
+            return svr_interact_step(problem, hg_cfg, engine, alpha, beta,
+                                     q, bs, state, data)
+
+        return step
+
+    def samples_per_step(self, n: int) -> float:
+        # amortized: one full refresh (n) every q steps + 2*batch otherwise
+        q = self.config.resolve_q(n)
+        bs = self.config.resolve_batch(n)
+        return float(n / q + 2 * bs)

@@ -33,9 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.consensus import consensus_descent_and_track, make_engine
-from repro.core.consensus import (
-    MixingSpec, erdos_renyi_adjacency, laplacian_mixing, ring_mixing,
-    torus_mixing)
+from repro.core.consensus import MixingSpec
 from repro.launch.mesh import agent_axes, agent_count
 from repro.models import model as M
 from repro.models.base import ArchConfig
@@ -71,20 +69,65 @@ class InteractConfig:
     # paper future-work extensions (conclusion, both opt-in):
     consensus_compress: str | None = None  # "int8" compressed consensus
     dp_sigma: float = 0.0                  # local-DP noise on shared x
+    # SVR refresh period (used by make_svr_train_step when q not given)
+    q: int | None = None
+
+    def topology_config(self):
+        """The declarative graph shared with ``repro.solvers``."""
+        from repro.solvers.config import TopologyConfig
+        return TopologyConfig(kind=self.topology, p_connect=self.p_connect,
+                              seed=self.topology_seed,
+                              self_weight=self.self_weight)
 
     def mixing_spec(self, m: int) -> MixingSpec:
         """The configured topology's mixing matrix for m agents."""
-        if self.topology == "ring":
-            return ring_mixing(m, self_weight=self.self_weight)
-        if self.topology == "erdos-renyi":
-            return laplacian_mixing(
-                erdos_renyi_adjacency(m, self.p_connect, self.topology_seed))
-        if self.topology == "torus":
-            rows = int(m ** 0.5)
-            while rows > 1 and m % rows:
-                rows -= 1
-            return torus_mixing(rows, m // rows)
-        raise ValueError(f"unknown topology {self.topology!r}")
+        return self.topology_config().mixing_spec(m)
+
+    def solver_config(self, algo: str = "interact"):
+        """The equivalent unified ``SolverConfig`` (docs/SOLVERS.md)."""
+        from repro.solvers.config import SolverConfig
+        opts = {}
+        if self.consensus_compress is not None:
+            opts["compress"] = self.consensus_compress
+        if self.dp_sigma:
+            opts["dp_sigma"] = self.dp_sigma
+        return SolverConfig(algo=algo, alpha=self.alpha, beta=self.beta,
+                            q=self.q, topology=self.topology_config(),
+                            backend=self.consensus_backend,
+                            backend_opts=opts)
+
+    @classmethod
+    def from_solver_config(cls, scfg, hyper: BilevelHyper | None = None):
+        """Build the LM-runtime config from a unified ``SolverConfig``.
+
+        ``hyper`` (the LM-specific ``BilevelHyper``) has no SolverConfig
+        counterpart and defaults to ``BilevelHyper()``; ``scfg.hypergrad``
+        and ``scfg.seed`` play no role on the LM path (the train step uses
+        BilevelHyper's Neumann settings and deterministic token streams).
+        """
+        if scfg.mixing is not None:
+            raise ValueError(
+                "SolverConfig.mixing (an explicit MixingSpec) cannot drive "
+                "the distributed runtime — the mesh realises the graph from "
+                "the declarative topology; set SolverConfig.topology instead")
+        opts = dict(scfg.backend_opts)
+        return cls(alpha=scfg.alpha, beta=scfg.beta,
+                   self_weight=scfg.topology.self_weight,
+                   hyper=hyper if hyper is not None else BilevelHyper(),
+                   consensus_backend=scfg.backend,
+                   topology=scfg.topology.kind,
+                   p_connect=scfg.topology.p_connect,
+                   topology_seed=scfg.topology.seed,
+                   consensus_compress=opts.get("compress"),
+                   dp_sigma=opts.get("dp_sigma", 0.0),
+                   q=scfg.q)
+
+    @classmethod
+    def coerce(cls, cfg, hyper: BilevelHyper | None = None):
+        """Accept either an InteractConfig or a unified SolverConfig."""
+        if isinstance(cfg, cls):
+            return cfg
+        return cls.from_solver_config(cfg, hyper=hyper)
 
     def compat_hyper(self, a_axes, mesh) -> BilevelHyper:
         """The hyper config adjusted for the shard_map body: on old-JAX
@@ -189,6 +232,10 @@ def make_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
                     *, with_prefix: bool = False, agent_mode: str = "rows"):
     """Returns step(state, tokens[, prefix]) -> (state, metrics).
 
+    ``icfg`` may be an ``InteractConfig`` or a unified
+    ``repro.solvers.SolverConfig`` (coerced via ``from_solver_config``),
+    so the same config object drives the simulator and the LM runtime.
+
     tokens: (m, per_agent_batch, seq) int32 — first half of the batch is
     the inner split, second half the outer split.
 
@@ -197,6 +244,7 @@ def make_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
     batch-parallel over its pod's data rows and its parameters live
     FSDP-sharded over them (see train_state_specs).
     """
+    icfg = InteractConfig.coerce(icfg)
     if agent_mode == "pods":
         a_axes = ("pod",)
     else:
@@ -282,6 +330,7 @@ def make_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
 
 def make_eval_step(cfg: ArchConfig, mesh, icfg: InteractConfig):
     """Average outer CE over agents at the current iterate (no update)."""
+    icfg = InteractConfig.coerce(icfg)
     a_axes = agent_axes(mesh)
     aentry = _agent_entry(a_axes)
     hyper = icfg.compat_hyper(a_axes, mesh)

@@ -68,13 +68,23 @@ def svr_train_state_specs(state_shapes: SvrTrainState, mesh,
 
 
 def make_svr_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
-                        q: int, agent_mode: str = "rows"):
+                        q: int | None = None, agent_mode: str = "rows"):
     """step(state, tokens) -> (state, metrics); refresh every q steps.
+
+    ``icfg`` may be an ``InteractConfig`` or a unified
+    ``repro.solvers.SolverConfig``; ``q=None`` reads the refresh period
+    from the config (``InteractConfig.q`` / ``SolverConfig.q``).
 
     ``tokens``: (m, b, s) — the same batch plays the role of the refresh
     set on refresh steps and of S on recursive steps (deterministic
     streams make S fresh each call).
     """
+    icfg = InteractConfig.coerce(icfg)
+    if q is None:
+        if icfg.q is None:
+            raise ValueError("refresh period q not given and not set on "
+                             "the config")
+        q = icfg.q
     a_axes = ("pod",) if agent_mode == "pods" else agent_axes(mesh)
     aentry = _agent_entry(a_axes)
     hyper = icfg.compat_hyper(a_axes, mesh)

@@ -108,7 +108,10 @@ def test_full_interact_step_agrees_across_backends():
     spec = laplacian_mixing(erdos_renyi_adjacency(m, 0.6, seed=3))
     hg = HypergradConfig(method="cg", cg_iters=16)
 
-    st_d = st_p = init_state(prob, hg, x0, y0, data)
+    # two independent (identical) states: the solver step closures donate
+    # their input buffers, so the trajectories must not share storage
+    st_d = init_state(prob, hg, x0, y0, data)
+    st_p = init_state(prob, hg, x0, y0, data)
     step_d = make_interact_step(prob, hg, spec, 0.3, 0.3, backend="dense")
     step_p = make_interact_step(prob, hg, spec, 0.3, 0.3, backend="pallas")
     for _ in range(3):

@@ -1,0 +1,231 @@
+"""Unified Solver API: registry construction, legacy parity, shims.
+
+Parity contract: each registry solver reproduces its legacy
+``init_*_state`` + ``make_*_step`` trajectory bit-for-bit over 5 steps —
+both through the per-step ``solver.step`` and the scan-compiled
+``solver.run`` — and the deprecated ``make_*_step`` shims still work but
+emit ``DeprecationWarning``.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HypergradConfig,
+    MLPMetaProblem,
+    erdos_renyi_adjacency,
+    init_dsgd_state,
+    init_gt_dsgd_state,
+    init_head,
+    init_mlp_backbone,
+    init_state,
+    init_svr_state,
+    laplacian_mixing,
+    make_dsgd_step,
+    make_gt_dsgd_step,
+    make_interact_step,
+    make_svr_interact_step,
+    make_synthetic_agents,
+)
+from repro.solvers import (
+    Solver,
+    SolverConfig,
+    TopologyConfig,
+    available_solvers,
+    make_solver,
+)
+
+M, N, BATCH, Q, SEED = 4, 80, 6, 5, 7
+STEPS = 5
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    data = make_synthetic_agents(key, num_agents=M, n_per_agent=N,
+                                 d_in=8, num_classes=3)
+    prob = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(1), 8, hidden=8)
+    y0 = init_head(jax.random.PRNGKey(2), 8, 3)
+    spec = laplacian_mixing(erdos_renyi_adjacency(M, 0.5, seed=3))
+    hg = HypergradConfig(method="cg", cg_iters=8)
+    return data, prob, x0, y0, spec, hg
+
+
+def _config(setup, algo):
+    _, _, _, _, spec, hg = setup
+    return SolverConfig(algo=algo, alpha=0.1, beta=0.1, batch_size=BATCH,
+                        q=Q, mixing=spec, hypergrad=hg, seed=SEED)
+
+
+def _legacy(setup, algo):
+    """(initial state, step_fn) via the deprecated entry points."""
+    data, prob, x0, y0, spec, hg = setup
+    key = jax.random.PRNGKey(SEED)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        if algo == "interact":
+            return (init_state(prob, hg, x0, y0, data),
+                    make_interact_step(prob, hg, spec, 0.1, 0.1))
+        if algo == "svr-interact":
+            return (init_svr_state(prob, hg, x0, y0, data, key),
+                    make_svr_interact_step(prob, hg, spec, 0.1, 0.1, q=Q,
+                                           batch_size=BATCH))
+        if algo == "gt-dsgd":
+            return (init_gt_dsgd_state(prob, hg, x0, y0, data, key, BATCH),
+                    make_gt_dsgd_step(prob, hg, spec, 0.1, 0.1, BATCH))
+        if algo == "d-sgd":
+            return (init_dsgd_state(x0, y0, M, key),
+                    make_dsgd_step(prob, hg, spec, 0.1, 0.1, BATCH))
+    raise ValueError(algo)
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_all_four_algorithms_registered():
+    assert set(available_solvers()) == {
+        "interact", "svr-interact", "gt-dsgd", "d-sgd"}
+
+
+def test_all_four_constructible_and_protocol_shaped(setup):
+    data, prob, x0, y0, _, hg = setup
+    for algo in available_solvers():
+        solver = make_solver(_config(setup, algo))
+        assert isinstance(solver, Solver)
+        state = solver.init(None, prob, hg, x0, y0, data)
+        state = solver.step(state, data)
+        assert int(state.t) == 1
+        assert solver.samples_per_step(N) > 0
+        assert solver.communications_per_step in (1, 2)
+
+
+def test_unknown_algorithm_raises():
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        make_solver(SolverConfig(algo="nope"))
+
+
+@pytest.mark.parametrize("algo",
+                         ["interact", "svr-interact", "gt-dsgd", "d-sgd"])
+def test_registry_matches_legacy_bit_for_bit(setup, algo):
+    data, prob, x0, y0, _, hg = setup
+    legacy_state, legacy_fn = _legacy(setup, algo)
+    for _ in range(STEPS):
+        legacy_state = legacy_fn(legacy_state, data)
+
+    solver = make_solver(_config(setup, algo))
+    state = solver.init(None, prob, hg, x0, y0, data)
+    for _ in range(STEPS):
+        state = solver.step(state, data)
+    _assert_trees_equal(legacy_state, state)
+
+
+@pytest.mark.parametrize("algo",
+                         ["interact", "svr-interact", "gt-dsgd", "d-sgd"])
+def test_scan_run_matches_step_loop(setup, algo):
+    data, prob, x0, y0, _, hg = setup
+    solver = make_solver(_config(setup, algo))
+    looped = solver.init(None, prob, hg, x0, y0, data)
+    for _ in range(STEPS):
+        looped = solver.step(looped, data)
+
+    scanned = solver.init(None, prob, hg, x0, y0, data)
+    scanned = solver.run(scanned, data, STEPS)
+    _assert_trees_equal(looped, scanned)
+
+
+def test_warmup_does_not_consume_state(setup):
+    data, prob, x0, y0, _, hg = setup
+    solver = make_solver(_config(setup, "interact"))
+    state = solver.init(None, prob, hg, x0, y0, data)
+    solver.warmup(state, data, 2)
+    # state must still be usable (donation took a copy, not the original)
+    state = solver.run(state, data, 2)
+    assert int(state.t) == 2
+
+
+def test_deprecated_shims_warn(setup):
+    data, prob, x0, y0, spec, hg = setup
+    with pytest.warns(DeprecationWarning):
+        make_interact_step(prob, hg, spec, 0.1, 0.1)
+    with pytest.warns(DeprecationWarning):
+        make_svr_interact_step(prob, hg, spec, 0.1, 0.1, q=Q)
+    with pytest.warns(DeprecationWarning):
+        make_gt_dsgd_step(prob, hg, spec, 0.1, 0.1, BATCH)
+    with pytest.warns(DeprecationWarning):
+        make_dsgd_step(prob, hg, spec, 0.1, 0.1, BATCH)
+
+
+def test_sample_and_communication_accounting(setup):
+    per = {
+        "interact": (float(N), 2),
+        "svr-interact": (N / Q + 2 * BATCH, 2),
+        "gt-dsgd": (float(BATCH), 2),
+        "d-sgd": (float(BATCH), 1),
+    }
+    for algo, (samples, comms) in per.items():
+        solver = make_solver(_config(setup, algo))
+        assert solver.samples_per_step(N) == pytest.approx(samples)
+        assert solver.communications_per_step == comms
+
+
+def test_config_defaults_follow_paper():
+    cfg = SolverConfig(algo="svr-interact")
+    # q = |S| = ceil(sqrt(n)) (Corollary 4)
+    assert cfg.resolve_q(600) == 25
+    assert cfg.resolve_batch(600) == 25
+    assert SolverConfig(q=10).resolve_batch(600) == 10
+
+
+def test_topology_config_realises_all_kinds():
+    for kind in ("ring", "erdos-renyi", "torus"):
+        spec = TopologyConfig(kind=kind).mixing_spec(8)
+        assert spec.matrix.shape == (8, 8)
+        np.testing.assert_allclose(spec.matrix.sum(axis=0), 1.0, atol=1e-9)
+    with pytest.raises(ValueError):
+        TopologyConfig(kind="star").mixing_spec(8)
+
+
+def test_train_config_roundtrips_through_solver_config():
+    from repro.train.step import InteractConfig
+    ic = InteractConfig(alpha=0.05, beta=0.3, topology="erdos-renyi",
+                        p_connect=0.4, consensus_compress="int8",
+                        dp_sigma=0.1, q=7)
+    back = InteractConfig.from_solver_config(ic.solver_config())
+    assert back.alpha == ic.alpha and back.beta == ic.beta
+    assert back.topology == ic.topology and back.p_connect == ic.p_connect
+    assert back.consensus_compress == "int8" and back.dp_sigma == 0.1
+    assert back.q == 7
+    np.testing.assert_allclose(ic.mixing_spec(5).matrix,
+                               back.mixing_spec(5).matrix)
+
+
+def test_train_config_rejects_explicit_mixing(setup):
+    """An explicit MixingSpec cannot drive the mesh runtime: the LM path
+    realises the graph from the declarative topology, so silently
+    ignoring ``mixing`` would train over the wrong network."""
+    from repro.train.step import InteractConfig
+    _, _, _, _, spec, _ = setup
+    with pytest.raises(ValueError, match="mixing"):
+        InteractConfig.from_solver_config(SolverConfig(mixing=spec))
+
+
+def test_gt_dsgd_default_batch_consistent_between_init_and_step(setup):
+    """Regression: with batch_size=None the initial tracker gradients and
+    the step closure must resolve the same ceil(sqrt(n)) batch size."""
+    data, prob, x0, y0, spec, hg = setup
+    n = data.inner_x.shape[1] + data.outer_x.shape[1]
+    cfg = SolverConfig(algo="gt-dsgd", alpha=0.1, beta=0.1, mixing=spec,
+                       hypergrad=hg, seed=SEED)
+    solver = make_solver(cfg)
+    state = solver.init(None, prob, hg, x0, y0, data)
+    legacy = init_gt_dsgd_state(prob, hg, x0, y0, data,
+                                jax.random.PRNGKey(SEED),
+                                cfg.resolve_batch(n))
+    _assert_trees_equal(legacy, state)

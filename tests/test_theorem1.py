@@ -1,0 +1,67 @@
+"""Property tests for the Theorem-1 admissible step sizes.
+
+``theorem1_step_sizes`` computes conservative (alpha, beta) from the
+problem constants (mu_g, L_g, lambda, m).  The theorem's bounds are all
+strictly positive for valid constants, shrink under a ``safety`` factor,
+and the ``one_minus = max(1 - lam, 1e-3)`` clamp keeps them finite as
+the network approaches disconnection (lam -> 1).
+"""
+import itertools
+import math
+
+import pytest
+
+from repro.core import theorem1_step_sizes
+
+GRID = list(itertools.product(
+    (0.1, 0.5, 2.0),          # mu_g
+    (1.0, 4.0, 32.0),         # L_g (>= mu_g enforced per-case below)
+    (0.05, 0.5, 0.9, 0.999),  # lam
+    (2, 5, 64),               # m
+))
+
+
+@pytest.mark.parametrize("mu_g,L_g,lam,m", GRID)
+def test_alpha_beta_positive_and_finite(mu_g, L_g, lam, m):
+    if L_g < mu_g:
+        pytest.skip("L_g >= mu_g required for a valid problem")
+    alpha, beta = theorem1_step_sizes(mu_g, L_g, lam, m)
+    assert math.isfinite(alpha) and math.isfinite(beta)
+    assert alpha > 0 and beta > 0
+    assert alpha <= 1.0  # the explicit cap in the bound list
+
+
+@pytest.mark.parametrize("safety", [0.9, 0.5, 0.1])
+def test_safety_shrinks_both_monotonically(safety):
+    a1, b1 = theorem1_step_sizes(0.5, 4.0, 0.9, 5, safety=1.0)
+    a2, b2 = theorem1_step_sizes(0.5, 4.0, 0.9, 5, safety=safety)
+    assert 0 < a2 < a1 and 0 < b2 < b1
+    # beta scales linearly in safety; alpha only monotonically (safety
+    # also shrinks beta's contraction rate r inside alpha's bounds)
+    assert b2 == pytest.approx(safety * b1, rel=1e-9)
+
+
+def test_safety_ordering_across_levels():
+    alphas, betas = zip(*(theorem1_step_sizes(0.5, 4.0, 0.9, 5, safety=s)
+                          for s in (1.0, 0.75, 0.5, 0.25, 0.1)))
+    assert all(a1 > a2 for a1, a2 in zip(alphas, alphas[1:]))
+    assert all(b1 > b2 for b1, b2 in zip(betas, betas[1:]))
+
+
+@pytest.mark.parametrize("lam", [1.0 - 1e-4, 1.0 - 1e-9, 1.0])
+def test_lam_to_one_guard_never_nonfinite(lam):
+    """one_minus is clamped at 1e-3: a (nearly) disconnected network
+    must degrade the step sizes, not blow them up to 0/inf/nan."""
+    alpha, beta = theorem1_step_sizes(0.5, 4.0, lam, 5)
+    assert math.isfinite(alpha) and math.isfinite(beta)
+    assert alpha > 0 and beta > 0
+    # the clamp makes lam -> 1 equivalent to one_minus = 1e-3 exactly
+    a_clamped, _ = theorem1_step_sizes(0.5, 4.0, 1.0 - 1e-3, 5)
+    assert alpha == pytest.approx(a_clamped, rel=1e-6)
+
+
+def test_denser_network_admits_larger_alpha():
+    # Remark 1: smaller lambda (better connectivity) -> larger alpha
+    a_dense, _ = theorem1_step_sizes(0.5, 4.0, 0.2, 5)
+    a_sparse, _ = theorem1_step_sizes(0.5, 4.0, 0.95, 5)
+    assert a_dense >= a_sparse
