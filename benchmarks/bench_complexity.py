@@ -2,18 +2,37 @@
 eps-stationary point.
 
 Measures, for each algorithm, the number of communication rounds and the
-per-agent IFO calls needed to drive the metric M below eps; validates
-Corollaries 2/4: SVR-INTERACT needs ~sqrt(n)/n the samples of INTERACT at
-the same communication complexity.  Rounds are counted as iterations x
-``solver.communications_per_step`` (Definition 2: D-SGD mixes once per
-iteration, the tracking algorithms twice).
+per-agent evaluation counts needed to drive the metric M below eps;
+validates Corollaries 2/4: SVR-INTERACT needs ~sqrt(n)/n the samples of
+INTERACT at the same communication complexity.  Rounds are counted as
+iterations x ``solver.communications_per_step`` (Definition 2: D-SGD
+mixes once per iteration, the tracking algorithms twice).
+
+Per-step evaluation counts are *measured*, not inferred: one counted
+hypergradient call (``repro.hypergrad.measure_counts``) yields the
+HVP/gradient evaluations the engine actually executed — including
+data-dependent trip counts such as the early-exit CG — and
+``solver.hypergrad_calls_per_step`` amortizes it over the algorithm's
+estimator calls.  The per-sample oracle count charges each evaluation
+for the batch it actually touches: HVP/Hessian evaluations and the
+eq.-(9) inner-gradient pass run on the *inner* batch only, gradient
+evaluations on the inner+outer pair (an upper bound for the grad side:
+the grad_{x,y} f pass sees only the outer split, the linearization
+primal only the inner).
 """
 from __future__ import annotations
 
 from benchmarks.common import ALGORITHMS, Row, build, make_setup, metric_of
+from repro.hypergrad import measure_problem_counts
 
 EPS = 0.05
 MAX_ITERS = 120
+
+
+def _per_call_evals(s) -> tuple[int, int, int]:
+    """Measured (hvp, grad, hess) counts of one hypergradient call."""
+    st = measure_problem_counts(s.prob, s.hg, s.x0, s.y0, s.data)
+    return st.hvp_count, st.grad_count, st.hess_count
 
 
 def run(smoke: bool = False) -> list:
@@ -33,10 +52,34 @@ def run(smoke: bool = False) -> list:
             rows.append(Row(f"table1_{algo}", 0.0,
                             f"eps={EPS};comm_rounds=>{cap};samples=NA"))
             continue
-        samples = iters * solver.samples_per_step(s.n)
+        hvp, grad, hess = _per_call_evals(s)
+        calls = solver.hypergrad_calls_per_step(s.n)
+        hvp_evals = iters * calls * hvp
+        grad_evals = iters * calls * (grad + 1)   # +1: the eq.-(9) v pass
+        # per-sample oracle cost: HVP/Hessian/v evaluations touch the
+        # inner batch of their call, gradient evaluations the inner+outer
+        # pair; a call is full-batch or a bs-sized minibatch per split.
+        inner_n, outer_n = s.data.inner_x.shape[1], s.data.outer_x.shape[1]
+
+        def call_samples(isz, osz):
+            return (hvp + hess + 1) * isz + grad * (isz + osz)
+
+        if algo == "interact":
+            per_step = call_samples(inner_n, outer_n)
+        elif algo == "svr-interact":
+            q = solver.config.resolve_q(s.n)
+            bs = solver.config.resolve_batch(s.n)
+            per_step = (call_samples(inner_n, outer_n) / q
+                        + 2 * (q - 1) / q * call_samples(bs, bs))
+        else:
+            bs = solver.config.resolve_batch(s.n)
+            per_step = call_samples(bs, bs)
+        samples = iters * per_step
         rounds = iters * solver.communications_per_step
         rows.append(Row(f"table1_{algo}", 0.0,
                         f"eps={EPS};comm_rounds={rounds};"
+                        f"hvp_evals={hvp_evals:.0f};"
+                        f"grad_evals={grad_evals:.0f};"
                         f"samples_per_agent={samples:.0f}"))
     return rows
 

@@ -1,0 +1,171 @@
+"""Hypergradient engine sweep: backend x head-dim x agents x solver budget.
+
+Times one jitted, vmapped hypergradient call (all m agents, post-warmup)
+per cell of the grid on the Section-6 meta-learning instance, and
+records measured evaluation counts (``HypergradStats``) next to the
+wall-clock:
+
+  * ``cg`` reference rows at each cg_iters budget (the frozen fixed-trip
+    loop executes every matvec — its hvp count IS the budget);
+  * ``cg-linearized`` rows per budget cap (early exit means the cap is a
+    ceiling, not a cost — the hvp count shows where it actually stopped);
+  * one ``cholesky`` row per (head, agents) with speedups against every
+    reference budget (``speedup_vs_cg{it}``): the direct solve is exact,
+    so the tight-budget references are its accuracy-matched comparisons
+    (CG's exactness guarantee needs up to d_y iterations);
+  * a ``neumann`` / ``neumann-linearized`` pair per (head, agents, K).
+
+Besides the CSV rows, the sweep is dumped as ``BENCH_hypergrad.json``
+(into ``$BENCH_JSON_DIR`` or the cwd) so CI can archive the perf
+trajectory across PRs (the bench-smoke job uploads ``BENCH_*.json`` as a
+workflow artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core import (MLPMetaProblem, init_head, init_mlp_backbone,
+                        make_synthetic_agents)
+from repro.hypergrad import (HypergradConfig, hypergradient,
+                             measure_problem_counts)
+
+N_PER_AGENT = 600
+HIDDEN = 20
+D_IN = 16
+
+
+def _time(fn, *args, iters: int) -> float:
+    """Median per-call wall time (robust to CI noise), post-warmup."""
+    out = fn(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return 1e6 * samples[len(samples) // 2]
+
+
+def _setup(classes: int, m: int):
+    key = jax.random.PRNGKey(0)
+    data = make_synthetic_agents(key, num_agents=m, n_per_agent=N_PER_AGENT,
+                                 d_in=D_IN, num_classes=classes)
+    prob = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(1), D_IN, hidden=HIDDEN)
+    y0 = init_head(jax.random.PRNGKey(2), HIDDEN, classes)
+    bcast = lambda t: jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (m,) + l.shape), t)
+    return prob, bcast(x0), bcast(y0), data
+
+
+def _call(prob, cfg: HypergradConfig):
+    """One jitted hypergradient evaluation vmapped over the agent axis."""
+
+    def per_agent(x, y, ib_x, ib_y, ob_x, ob_y):
+        return hypergradient(prob.outer, prob.inner, x, y, cfg,
+                             f_args=((ob_x, ob_y),),
+                             g_args=((ib_x, ib_y),),
+                             inner_hess_yy=prob.inner_hess_yy)
+
+    return jax.jit(jax.vmap(per_agent))
+
+
+def _counts(prob, cfg: HypergradConfig, x, y, data) -> dict:
+    one = lambda t: jax.tree_util.tree_map(lambda l: l[0], t)
+    st = measure_problem_counts(prob, cfg, one(x), one(y), data)
+    return {"hvp": st.hvp_count, "grad": st.grad_count,
+            "hess": st.hess_count}
+
+
+def _json_path() -> str:
+    return os.path.join(os.environ.get("BENCH_JSON_DIR", os.getcwd()),
+                        "BENCH_hypergrad.json")
+
+
+def run(smoke: bool = False) -> list:
+    classes_sweep = (5,) if smoke else (5, 10)
+    agents_sweep = (1,) if smoke else (1, 5)
+    iters_sweep = (32, 256) if smoke else (32, 256, 512)
+    k_sweep = (8,) if smoke else (8, 64)
+    timing_iters = 5 if smoke else 20
+
+    rows: list[Row] = []
+    records: list[dict] = []
+
+    def emit(name, us, **fields):
+        derived = ";".join(f"{k}={v}" for k, v in fields.items())
+        rows.append(Row(name, us, derived))
+        records.append({"name": name, "us_per_call": us, **fields})
+
+    for classes in classes_sweep:
+        d_y = HIDDEN * classes + classes
+        for m in agents_sweep:
+            prob, x, y, data = _setup(classes, m)
+            args = (x, y, data.inner_x, data.inner_y,
+                    data.outer_x, data.outer_y)
+
+            refs = {}
+            for it in iters_sweep:
+                cfg = HypergradConfig(method="cg", cg_iters=it)
+                us = _time(_call(prob, cfg), *args, iters=timing_iters)
+                refs[it] = us
+                emit(f"hypergrad_cg_d{d_y}_m{m}_it{it}", us,
+                     backend="cg", d_y=d_y, m=m, cg_iters=it,
+                     speedup_vs_cg=1.0,
+                     **_counts(prob, cfg, x, y, data))
+
+            for it in iters_sweep:
+                cfg = HypergradConfig(backend="cg-linearized", cg_iters=it)
+                us = _time(_call(prob, cfg), *args, iters=timing_iters)
+                emit(f"hypergrad_cg-linearized_d{d_y}_m{m}_it{it}", us,
+                     backend="cg-linearized", d_y=d_y, m=m, cg_iters=it,
+                     speedup_vs_cg=round(refs[it] / us, 2),
+                     **_counts(prob, cfg, x, y, data))
+
+            cfg = HypergradConfig(backend="cholesky")
+            us = _time(_call(prob, cfg), *args, iters=timing_iters)
+            speedups = {f"speedup_vs_cg{it}": round(refs[it] / us, 2)
+                        for it in iters_sweep}
+            emit(f"hypergrad_cholesky_d{d_y}_m{m}", us,
+                 backend="cholesky", d_y=d_y, m=m, **speedups,
+                 **_counts(prob, cfg, x, y, data))
+
+            for k in k_sweep:
+                cfg = HypergradConfig(method="neumann", neumann_k=k,
+                                      lipschitz_g=4.0)
+                us_ref = _time(_call(prob, cfg), *args, iters=timing_iters)
+                emit(f"hypergrad_neumann_d{d_y}_m{m}_K{k}", us_ref,
+                     backend="neumann", d_y=d_y, m=m, neumann_k=k,
+                     speedup_vs_neumann=1.0,
+                     **_counts(prob, cfg, x, y, data))
+                cfg = HypergradConfig(backend="neumann-linearized",
+                                      neumann_k=k, lipschitz_g=4.0)
+                us = _time(_call(prob, cfg), *args, iters=timing_iters)
+                emit(f"hypergrad_neumann-linearized_d{d_y}_m{m}_K{k}", us,
+                     backend="neumann-linearized", d_y=d_y, m=m,
+                     neumann_k=k,
+                     speedup_vs_neumann=round(us_ref / us, 2),
+                     **_counts(prob, cfg, x, y, data))
+
+    payload = {"bench": "hypergrad", "smoke": smoke,
+               "jax": jax.__version__,
+               "n_per_agent": N_PER_AGENT, "rows": records}
+    try:
+        with open(_json_path(), "w") as fh:
+            json.dump(payload, fh, indent=1)
+    except OSError:
+        pass  # read-only workdir: CSV rows still carry everything
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(smoke=os.environ.get("SMOKE", "") == "1"):
+        print(r.csv())

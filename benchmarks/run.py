@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig4  edge-connectivity sensitivity
   fig5  learning-rate sensitivity
   table1 sample & communication complexity to eps-stationarity
+  hypergrad  HypergradEngine backend sweep (+ BENCH_hypergrad.json dump)
   kernels  Pallas kernel micro-structure
   roofline dry-run derived roofline terms (if dry-run artifacts exist)
 
@@ -28,13 +29,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_complexity, bench_connectivity,
-                            bench_convergence, bench_kernels, bench_lr,
-                            roofline_report)
+                            bench_convergence, bench_hypergrad,
+                            bench_kernels, bench_lr, roofline_report)
     suites = [
         ("fig2", bench_convergence.run),
         ("fig4", bench_connectivity.run),
         ("fig5", bench_lr.run),
         ("table1", bench_complexity.run),
+        ("hypergrad", bench_hypergrad.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline_report.run),
     ]

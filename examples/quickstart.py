@@ -16,6 +16,7 @@ from repro.core import (
     erdos_renyi_adjacency, init_head, init_mlp_backbone, laplacian_mixing,
     make_synthetic_agents, theorem1_step_sizes,
 )
+from repro.hypergrad import measure_problem_counts
 from repro.solvers import SolverConfig, make_solver
 
 
@@ -37,14 +38,20 @@ def main() -> None:
     print(f"Theorem-1 admissible step sizes: alpha<={alpha_max:.2e}, "
           f"beta<={beta_max:.2e} (paper uses 0.5 empirically)")
 
-    hg = HypergradConfig(method="cg", cg_iters=24)
+    # cg-linearized: linearize-once matvecs + early-exit CG — the engine
+    # registry's fast path (docs/HYPERGRAD.md); "cg" is the seed oracle.
+    hg = HypergradConfig(method="cg", cg_iters=24, backend="cg-linearized")
     cfg = SolverConfig(algo="interact", alpha=0.3, beta=0.3,
                        mixing=mixing, hypergrad=hg)
     solver = make_solver(cfg)
     state = solver.init(None, problem, hg, x0, y0, data)
+    counts = measure_problem_counts(problem, hg, x0, y0, data)
     print(f"solver: {cfg.algo}; {solver.samples_per_step(600):.0f} IFO "
           f"calls/agent/iter, {solver.communications_per_step} consensus "
           "rounds/iter")
+    print(f"hypergrad backend {hg.resolve_backend()!r}: measured "
+          f"{counts.hvp_count} HVPs + {counts.grad_count} grads per call "
+          f"(the fixed-budget cg oracle would run {hg.cg_iters + 1})")
 
     chunk = 10
     for t in range(0, 51, chunk):

@@ -19,7 +19,13 @@ from repro.core.consensus import (
     torus_mixing,
     validate_mixing,
 )
-from repro.core.hypergrad import (
+# Hypergradient estimation lives in repro.hypergrad (the engine package);
+# these canonical re-exports keep `from repro.core import ...` working
+# without routing through the repro.core.hypergrad deprecation shim.
+# They carry the canonical defaults — in particular cg_solve's residual
+# test is now relative (tol * ||b||); the repro.core.hypergrad shim keeps
+# the historical absolute test bit-for-bit (rel_tol=False).
+from repro.hypergrad import (
     HypergradConfig,
     cg_solve,
     hvp_xy,

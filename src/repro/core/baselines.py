@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.consensus import consensus_descent_and_track
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
-from repro.core.hypergrad import HypergradConfig
+from repro.hypergrad import HypergradConfig
 from repro.core.svr_interact import _minibatch_grads
 
 __all__ = [

@@ -49,12 +49,20 @@ class BilevelProblem:
 
     batch is an arbitrary pytree; for full-gradient algorithms pass the
     whole agent dataset, for stochastic ones pass a minibatch.
+
+    ``inner_hess_yy`` is an optional closed form for the flat inner
+    Hessian: ``inner_hess_yy(x, y, batch) -> (d_y, d_y)`` in
+    ``ravel_pytree(y)`` ordering, ridge included.  The ``cholesky``
+    hypergradient backend uses it instead of materialising H_yy through
+    d_y automatic-differentiation HVPs (see docs/HYPERGRAD.md); every
+    other backend ignores it, so it is purely an opt-in fast path.
     """
 
     outer: Callable  # f(x, y, (inputs, labels)) -> scalar
     inner: Callable  # g(x, y, (inputs, labels)) -> scalar
     mu_g: float      # strong-convexity modulus of g in y
     lipschitz_g: float  # gradient-Lipschitz bound L_g for the Neumann scale
+    inner_hess_yy: Callable | None = None  # optional closed-form flat H_yy
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +86,15 @@ def MLPMetaProblem(mu_g: float = 0.1, lipschitz_g: float = 4.0) -> BilevelProble
 
     g(x, y) = CE(head(features(x, inner_x)), inner_y) + mu/2 ||y||^2
     f(x, y) = CE(head(features(x, outer_x)), outer_y)
+
+    The inner problem is a linear head under softmax CE + ridge, so its
+    Hessian wrt y has the closed form
+
+        H[(i,c),(j,d)] = (1/n) sum_s phi_si phi_sj A_s[c,d] + mu I,
+        A_s = diag(p_s) - p_s p_s^T,   phi_s = [features_s, 1],
+
+    which ``inner_hess_yy`` materialises with two batched contractions —
+    the ``cholesky`` hypergradient backend's small-head fast path.
     """
 
     def outer(x, y, batch):
@@ -94,8 +111,34 @@ def MLPMetaProblem(mu_g: float = 0.1, lipschitz_g: float = 4.0) -> BilevelProble
         reg = 0.5 * mu_g * (jnp.sum(w * w) + jnp.sum(b * b))
         return ce + reg
 
+    def inner_hess_yy(x, y, batch):
+        inputs, _labels = batch
+        feats = _mlp_features(x, inputs)
+        w, b = y
+        p = jax.nn.softmax(feats @ w + b, axis=-1)        # (n, C)
+        n, C = p.shape
+        # phi rows [features, 1]: index i*C+c matches ravel_pytree((w, b))
+        # = [w.ravel(), b] with the bias as the trailing phi column.
+        phi = jnp.concatenate([feats, jnp.ones((n, 1), feats.dtype)],
+                              axis=1)                      # (n, hd+1)
+        hd1 = phi.shape[1]
+        d = hd1 * C
+        # A_s = diag(p_s) - p_s p_s^T split into its two contractions:
+        # rank-one part as a gram of R[s,(i,c)] = phi_si p_sc, diagonal
+        # part as C feature grams weighted by p[:, c].
+        R = (phi[:, :, None] * p[:, None, :]).reshape(n, d)
+        G = jnp.einsum('sc,si,sj->cij', p, phi, phi)       # (C, hd+1, hd+1)
+        H = -(R.T @ R)
+        H = H.reshape(hd1, C, hd1, C)
+        # diagonal (c == d) blocks via a broadcast against eye — a scatter
+        # here lowers poorly under vmap on CPU
+        H = H + (G.transpose(1, 0, 2)[:, :, :, None]
+                 * jnp.eye(C)[None, :, None, :])
+        return H.reshape(d, d) / n + mu_g * jnp.eye(d)
+
     return BilevelProblem(outer=outer, inner=inner, mu_g=mu_g,
-                          lipschitz_g=lipschitz_g)
+                          lipschitz_g=lipschitz_g,
+                          inner_hess_yy=inner_hess_yy)
 
 
 def init_mlp_backbone(key: jax.Array, d_in: int, hidden: int = 20,

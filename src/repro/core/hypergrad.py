@@ -1,33 +1,29 @@
-"""Hypergradient estimators for nonconvex-strongly-convex bilevel problems.
+"""Deprecated shim: hypergradient estimation moved to ``repro.hypergrad``.
 
-Implements the approximate gradient of eq. (5),
+This module keeps the historical entry points importable and
+bit-compatible — same signatures, same numerics (``cg_solve`` keeps its
+absolute-tolerance default here; the canonical function switched to a
+relative test) — while emitting a ``DeprecationWarning`` on first use.
+``HypergradConfig`` is re-exported unchanged (it is the same class).
 
-    grad_bar f(x, y) = grad_x f(x, y)
-        - H_xy(g)(x, y) [H_yy(g)(x, y)]^{-1} grad_y f(x, y),
+Use instead::
 
-without ever materialising a Hessian: both Hessian blocks act through
-Hessian-vector products (HVPs) computed by automatic differentiation.
+    from repro.hypergrad import (HypergradConfig, hypergradient,
+                                 cg_solve, hvp_yy, hvp_xy,
+                                 neumann_inverse_apply)
 
-Two inverse approximations:
-
-* ``cg``     — conjugate gradients on H_yy z = grad_y f.  Used by the
-               deterministic INTERACT reference (the paper's exact-inverse
-               eq. (5) up to solver tolerance).
-* ``neumann``— the paper's stochastic K-term Neumann estimator, eq. (22):
-               z = (k+1)/L_g * prod_{j<=k} (I - H_yy/L_g) grad_y f with
-               k ~ U{0..K-1} (unbiased telescoping form), or the full
-               deterministic K-term truncated sum.
-
-Both operate on arbitrary pytrees for x and y.
+which adds the backend registry ("cg-linearized", "cholesky", ...) and
+measured evaluation counts (``hypergradient_with_stats``).  See
+docs/HYPERGRAD.md.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Callable, Literal
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.hypergrad import HypergradConfig          # noqa: F401 (canonical)
+from repro.hypergrad import cg as _cg
+from repro.hypergrad import engine as _engine
+from repro.hypergrad import neumann as _neumann
 
 __all__ = [
     "HypergradConfig",
@@ -38,170 +34,53 @@ __all__ = [
     "hypergradient",
 ]
 
-Scalar = jax.Array
-TreeDef = object
+_warned: set[str] = set()
 
 
-@dataclasses.dataclass(frozen=True)
-class HypergradConfig:
-    """How to apply the inner-Hessian inverse.
-
-    Attributes:
-      method: "cg" (deterministic solve) or "neumann" (paper eq. 22).
-      cg_iters / cg_tol: CG budget for the deterministic path.
-      neumann_k: K, the truncation order of eq. (22).
-      lipschitz_g: L_g, the gradient-Lipschitz constant of g used to scale
-        the Neumann series ((I - H/L_g) must be a contraction).
-      stochastic_k: if True, draw k ~ U{0..K-1} and use the unbiased
-        (K/L_g)-scaled single product of eq. (22); if False use the full
-        truncated sum (deterministic bias (1 - mu/L)^K, Lemma 3).
-    """
-
-    method: Literal["cg", "neumann"] = "cg"
-    cg_iters: int = 32
-    cg_tol: float = 1e-8
-    neumann_k: int = 8
-    lipschitz_g: float = 1.0
-    stochastic_k: bool = False
+def _warn(name: str) -> None:
+    if name in _warned:
+        return
+    _warned.add(name)
+    warnings.warn(
+        f"repro.core.hypergrad.{name} is deprecated; import it from "
+        "repro.hypergrad (the HypergradEngine package)",
+        DeprecationWarning, stacklevel=3)
 
 
-def _flat_dot(a, b) -> Scalar:
-    leaves_a = jax.tree_util.tree_leaves(a)
-    leaves_b = jax.tree_util.tree_leaves(b)
-    return sum(jnp.vdot(la, lb) for la, lb in zip(leaves_a, leaves_b))
+def hvp_yy(g, x, y, v, *args):
+    """Deprecated alias of ``repro.hypergrad.hvp_yy``."""
+    _warn("hvp_yy")
+    return _engine.hvp_yy(g, x, y, v, *args)
 
 
-def _axpy(alpha, x, y):
-    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+def hvp_xy(g, x, y, v, *args):
+    """Deprecated alias of ``repro.hypergrad.hvp_xy``."""
+    _warn("hvp_xy")
+    return _engine.hvp_xy(g, x, y, v, *args)
 
 
-def _scale(alpha, x):
-    return jax.tree_util.tree_map(lambda xi: alpha * xi, x)
+def cg_solve(matvec, b, iters: int, tol: float):
+    """Deprecated: ``repro.hypergrad.cg_solve`` (note: the canonical
+    function defaults to a *relative* residual test; this shim pins
+    ``rel_tol=False`` to preserve the historical absolute semantics
+    bit-for-bit)."""
+    _warn("cg_solve")
+    return _cg.cg_solve(matvec, b, iters, tol, rel_tol=False)
 
 
-def _sub(x, y):
-    return jax.tree_util.tree_map(lambda xi, yi: xi - yi, x, y)
+def neumann_inverse_apply(g, x, y, b, *args, k_terms: int,
+                          lipschitz_g: float, stochastic_k: bool = False,
+                          key=None):
+    """Deprecated alias of ``repro.hypergrad.neumann_inverse_apply``."""
+    _warn("neumann_inverse_apply")
+    return _neumann.neumann_inverse_apply(
+        g, x, y, b, *args, k_terms=k_terms, lipschitz_g=lipschitz_g,
+        stochastic_k=stochastic_k, key=key)
 
 
-def hvp_yy(g: Callable, x, y, v, *args):
-    """H_yy(g)(x, y) @ v via forward-over-reverse."""
-    grad_y = lambda yy: jax.grad(g, argnums=1)(x, yy, *args)
-    return jax.jvp(grad_y, (y,), (v,))[1]
-
-
-def hvp_xy(g: Callable, x, y, v, *args):
-    """H_xy(g)(x, y) @ v  =  grad_x <grad_y g(x, y), v>."""
-    def inner(xx):
-        gy = jax.grad(g, argnums=1)(xx, y, *args)
-        return _flat_dot(gy, v)
-
-    return jax.grad(inner)(x)
-
-
-def cg_solve(matvec: Callable, b, iters: int, tol: float):
-    """Conjugate gradients for SPD ``matvec`` on pytrees.
-
-    Runs a fixed ``iters``-step lax loop (jit-friendly); ``tol`` freezes the
-    iterate once the residual norm is small (no early exit, deterministic
-    cost — appropriate for lowering on TPU).
-    """
-    x0 = jax.tree_util.tree_map(jnp.zeros_like, b)
-
-    def body(_, carry):
-        x, r, p, rs = carry
-        ap = matvec(p)
-        denom = _flat_dot(p, ap)
-        alpha = jnp.where(denom > 0, rs / jnp.maximum(denom, 1e-30), 0.0)
-        active = jnp.sqrt(rs) > tol
-        alpha = jnp.where(active, alpha, 0.0)
-        x = _axpy(alpha, p, x)
-        r = _axpy(-alpha, ap, r)
-        rs_new = _flat_dot(r, r)
-        beta = jnp.where(active, rs_new / jnp.maximum(rs, 1e-30), 0.0)
-        p = _axpy(beta, p, r)
-        rs = jnp.where(active, rs_new, rs)
-        return x, r, p, rs
-
-    r0 = b
-    rs0 = _flat_dot(b, b)
-    x, _, _, _ = jax.lax.fori_loop(0, iters, body, (x0, r0, b, rs0))
-    return x
-
-
-def neumann_inverse_apply(
-    g: Callable,
-    x,
-    y,
-    b,
-    *args,
-    k_terms: int,
-    lipschitz_g: float,
-    stochastic_k: bool = False,
-    key: jax.Array | None = None,
-):
-    """Approximate [H_yy g]^{-1} b with the Neumann series of eq. (22).
-
-    Deterministic form:   (1/L) sum_{j=0}^{K-1} (I - H/L)^j b
-    Stochastic form:      (K/L) (I - H/L)^k b,  k ~ U{0..K-1}
-    """
-    L = lipschitz_g
-
-    def step(v):
-        return _sub(v, _scale(1.0 / L, hvp_yy(g, x, y, v, *args)))
-
-    if stochastic_k:
-        if key is None:
-            raise ValueError("stochastic_k requires a PRNG key")
-        k = jax.random.randint(key, (), 0, k_terms)
-
-        def body(i, v):
-            return jax.tree_util.tree_map(
-                lambda vi, si: jnp.where(i < k, si, vi), v, step(v)
-            )
-
-        v = jax.lax.fori_loop(0, k_terms, body, b)
-        return _scale(float(k_terms) / L, v)
-
-    def body(_, carry):
-        v, acc = carry
-        acc = jax.tree_util.tree_map(jnp.add, acc, v)
-        return step(v), acc
-
-    zero = jax.tree_util.tree_map(jnp.zeros_like, b)
-    _, acc = jax.lax.fori_loop(0, k_terms, body, (b, zero))
-    return _scale(1.0 / L, acc)
-
-
-def hypergradient(
-    f: Callable,
-    g: Callable,
-    x,
-    y,
-    cfg: HypergradConfig,
-    f_args: tuple = (),
-    g_args: tuple = (),
-    key: jax.Array | None = None,
-):
-    """The approximate hypergradient grad_bar f(x, y) of eq. (5)/(22).
-
-    ``f(x, y, *f_args)`` is the outer loss, ``g(x, y, *g_args)`` the inner
-    (mu_g-strongly-convex in y).  Returns a pytree like x.
-    """
-    gx, gy = jax.grad(f, argnums=(0, 1))(x, y, *f_args)
-
-    if cfg.method == "cg":
-        matvec = lambda v: hvp_yy(g, x, y, v, *g_args)
-        z = cg_solve(matvec, gy, cfg.cg_iters, cfg.cg_tol)
-    elif cfg.method == "neumann":
-        z = neumann_inverse_apply(
-            g, x, y, gy, *g_args,
-            k_terms=cfg.neumann_k,
-            lipschitz_g=cfg.lipschitz_g,
-            stochastic_k=cfg.stochastic_k,
-            key=key,
-        )
-    else:
-        raise ValueError(f"unknown hypergradient method {cfg.method!r}")
-
-    correction = hvp_xy(g, x, y, z, *g_args)
-    return _sub(gx, correction)
+def hypergradient(f, g, x, y, cfg: HypergradConfig, f_args: tuple = (),
+                  g_args: tuple = (), key=None):
+    """Deprecated alias of ``repro.hypergrad.hypergradient``."""
+    _warn("hypergradient")
+    return _engine.hypergradient(f, g, x, y, cfg, f_args=f_args,
+                                 g_args=g_args, key=key)

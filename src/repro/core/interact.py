@@ -43,7 +43,7 @@ import jax.numpy as jnp
 from repro.consensus import as_engine, consensus_descent_and_track
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
-from repro.core.hypergrad import HypergradConfig, hypergradient
+from repro.hypergrad import HypergradConfig, hypergradient
 
 __all__ = [
     "InteractState",
@@ -75,6 +75,7 @@ def _agent_gradients(problem: BilevelProblem, hg_cfg: HypergradConfig,
     p = hypergradient(
         problem.outer, problem.inner, x, y, hg_cfg,
         f_args=(outer_batch,), g_args=(inner_batch,), key=key,
+        inner_hess_yy=problem.inner_hess_yy,
     )
     v = jax.grad(problem.inner, argnums=1)(x, y, inner_batch)
     return p, v

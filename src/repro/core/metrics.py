@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bilevel import AgentData, BilevelProblem
-from repro.core.hypergrad import HypergradConfig, hypergradient
+from repro.hypergrad import HypergradConfig, hypergradient
 
 __all__ = ["MetricReport", "solve_inner", "convergence_metric"]
 
@@ -81,7 +81,8 @@ def convergence_metric(problem: BilevelProblem, hg_cfg: HypergradConfig,
         y_star = solve_inner(problem, x_bar, y_i, inner_b,
                              inner_steps, inner_lr)
         p = hypergradient(problem.outer, problem.inner, x_bar, y_star,
-                          hg_cfg, f_args=(outer_b,), g_args=(inner_b,))
+                          hg_cfg, f_args=(outer_b,), g_args=(inner_b,),
+                          inner_hess_yy=problem.inner_hess_yy)
         f_val = problem.outer(x_bar, y_star, outer_b)
         return p, f_val
 

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.consensus import consensus_descent_and_track
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
-from repro.core.hypergrad import HypergradConfig, hypergradient
+from repro.hypergrad import HypergradConfig, hypergradient
 
 __all__ = ["SvrState", "init_svr_state", "svr_interact_step",
            "make_svr_interact_step"]
@@ -61,7 +61,8 @@ def _full_grads(problem, hg_cfg, x, y, data: AgentData, key):
     inner_b = (data.inner_x, data.inner_y)
     outer_b = (data.outer_x, data.outer_y)
     p = hypergradient(problem.outer, problem.inner, x, y, hg_cfg,
-                      f_args=(outer_b,), g_args=(inner_b,), key=key)
+                      f_args=(outer_b,), g_args=(inner_b,), key=key,
+                      inner_hess_yy=problem.inner_hess_yy)
     v = jax.grad(problem.inner, argnums=1)(x, y, inner_b)
     return p, v
 
@@ -71,7 +72,8 @@ def _minibatch_grads(problem, hg_cfg, x, y, data: AgentData, key, batch_size):
     inner_b = _sample_batch(k_in, data.inner_x, data.inner_y, batch_size)
     outer_b = _sample_batch(k_out, data.outer_x, data.outer_y, batch_size)
     p = hypergradient(problem.outer, problem.inner, x, y, hg_cfg,
-                      f_args=(outer_b,), g_args=(inner_b,), key=k_neu)
+                      f_args=(outer_b,), g_args=(inner_b,), key=k_neu,
+                      inner_hess_yy=problem.inner_hess_yy)
     v = jax.grad(problem.inner, argnums=1)(x, y, inner_b)
     return p, v
 

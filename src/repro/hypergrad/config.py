@@ -1,0 +1,82 @@
+"""`HypergradConfig`: how the inner-Hessian inverse of eq. (5)/(22) is applied.
+
+The canonical home of the config that used to live in
+``repro.core.hypergrad`` (still importable from there, and from
+``repro.core``, unchanged).  New in the engine refactor:
+
+* ``backend`` — the ``HypergradEngine`` registry name.  ``None`` keeps the
+  legacy behaviour of deriving the backend from ``method`` ("cg" /
+  "neumann"), so every existing config keeps meaning exactly what it
+  meant.  Set it to ``"cg-linearized"`` / ``"neumann-linearized"`` /
+  ``"cholesky"`` to opt into the fast paths (see docs/HYPERGRAD.md).
+* ``cg_rel_tol`` — the CG freeze/stop test compares ``sqrt(rs)`` against
+  ``tol * ||b||`` instead of the legacy absolute ``tol``.  Defaults to
+  ``False`` so the ``cg`` reference backend stays bit-compatible with the
+  seed implementation (it is the cross-backend correctness oracle); the
+  standalone ``repro.hypergrad.cg_solve`` function defaults to the
+  relative test.
+* ``cholesky_jitter`` — optional diagonal regulariser added to the
+  materialised ``H_yy`` before factorisation (0 by default: the inner
+  problem is mu_g-strongly convex so H is PD on its own).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["HypergradConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HypergradConfig:
+    """How to apply the inner-Hessian inverse.
+
+    Attributes:
+      method: "cg" (deterministic solve) or "neumann" (paper eq. 22).
+        Legacy selector, kept for compatibility; ``backend`` wins when set.
+      cg_iters / cg_tol: CG budget for the deterministic path.  For the
+        reference ``cg`` backend this is the fixed trip count (the
+        tolerance only freezes the iterate); for ``cg-linearized`` it is
+        the iteration *cap* of the early-exit loop.
+      neumann_k: K, the truncation order of eq. (22).
+      lipschitz_g: L_g, the gradient-Lipschitz constant of g used to scale
+        the Neumann series ((I - H/L_g) must be a contraction).
+      stochastic_k: if True, draw k ~ U{0..K-1} and use the unbiased
+        (K/L_g)-scaled single product of eq. (22); if False use the full
+        truncated sum (deterministic bias (1 - mu/L)^K, Lemma 3).
+      backend: ``HypergradEngine`` registry name ("cg", "cg-linearized",
+        "neumann", "neumann-linearized", "cholesky").  ``None`` derives
+        the name from ``method``.  Validated against the registry by
+        ``resolve_backend()``.
+      cg_rel_tol: relative (``tol * ||b||``) instead of absolute CG
+        residual test, honored by both the ``cg`` freeze test and the
+        ``cg-linearized`` early exit (so swapping backends changes cost,
+        not solve quality).  False preserves the seed numerics of the
+        ``cg`` oracle backend.
+      cholesky_jitter: diagonal added to H_yy before ``cho_factor``.
+    """
+
+    method: Literal["cg", "neumann"] = "cg"
+    cg_iters: int = 32
+    cg_tol: float = 1e-8
+    neumann_k: int = 8
+    lipschitz_g: float = 1.0
+    stochastic_k: bool = False
+    backend: str | None = None
+    cg_rel_tol: bool = False
+    cholesky_jitter: float = 0.0
+
+    def resolve_backend(self) -> str:
+        """The registry name this config selects, validated.
+
+        Raises ``ValueError`` (listing the registered backends) when
+        ``backend`` — or the legacy ``method`` fallback — is unknown, so
+        misconfiguration fails at solver build time, not mid-trace.
+        """
+        from repro.hypergrad.engine import available_backends
+        name = self.backend if self.backend is not None else self.method
+        if name not in available_backends():
+            raise ValueError(
+                f"unknown hypergradient backend {name!r}; "
+                f"choose from {available_backends()}")
+        return name

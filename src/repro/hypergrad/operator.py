@@ -1,0 +1,106 @@
+"""`LinearOperator`: the counted matvec every backend's solve flows through.
+
+The paper states its complexity results (Theorems 1-2, Corollaries 2/4)
+in *gradient and Hessian-vector evaluations*, so the engines measure them
+instead of inferring them: a ``LinearOperator`` wraps a matvec and
+threads an evaluation counter through the solver loop carries.  Because
+the counter lives *inside* the traced computation it is exact even when
+the trip count is data-dependent (the early-exit CG of ``cg-linearized``,
+the stochastic-k Neumann chain) and even under ``vmap`` over agents
+(each lane counts its own evaluations).
+
+Shared pytree arithmetic helpers live here too — one copy, used by every
+backend (they were module-private in the old ``core/hypergrad.py``).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "HypergradStats",
+    "LinearOperator",
+    "as_operator",
+    "flat_dot",
+    "tree_axpy",
+    "tree_scale",
+    "tree_sub",
+]
+
+
+class HypergradStats(NamedTuple):
+    """Measured evaluation counts of one hypergradient call.
+
+    hvp_count:  Hessian-vector products against the inner loss g — both
+                the H_yy solve matvecs and the single H_xy cross term.
+    grad_count: first-order gradient evaluations (the joint grad_{x,y} f
+                counts once; a linearization primal pass counts one
+                grad_y g).
+    hess_count: full H_yy materialisations (the cholesky backend's
+                structured closed form; 0 everywhere else).
+
+    All three are int32 scalars traced through the computation (per-lane
+    under vmap), so they report what actually executed.
+    """
+
+    hvp_count: jax.Array
+    grad_count: jax.Array
+    hess_count: jax.Array
+
+    @classmethod
+    def zero(cls) -> "HypergradStats":
+        z = jnp.zeros((), jnp.int32)
+        return cls(hvp_count=z, grad_count=z, hess_count=z)
+
+
+class LinearOperator:
+    """A linear map with evaluation accounting.
+
+    ``op(v)`` applies the map; ``op.apply_counted(v, count)`` returns
+    ``(A v, count + cost)`` for threading through ``fori_loop`` /
+    ``while_loop`` carries; ``op.apply_basis(V, count)`` applies the map
+    to a stacked basis (rows of ``V``) via ``vmap`` and charges one
+    evaluation per row — the cholesky backend's batched identity HVP.
+    """
+
+    def __init__(self, matvec: Callable, cost: int = 1):
+        self.matvec = matvec
+        self.cost = cost
+
+    def __call__(self, v):
+        return self.matvec(v)
+
+    def apply_counted(self, v, count: jax.Array):
+        return self.matvec(v), count + jnp.int32(self.cost)
+
+    def apply_basis(self, basis: jax.Array, count: jax.Array):
+        rows = jax.vmap(self.matvec)(basis)
+        return rows, count + jnp.int32(self.cost * basis.shape[0])
+
+
+def as_operator(matvec) -> LinearOperator:
+    """Coerce a bare matvec callable to a unit-cost ``LinearOperator``."""
+    if isinstance(matvec, LinearOperator):
+        return matvec
+    return LinearOperator(matvec)
+
+
+def flat_dot(a, b) -> jax.Array:
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return sum(jnp.vdot(la, lb) for la, lb in zip(leaves_a, leaves_b))
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leaf-wise."""
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_scale(alpha, x):
+    return jax.tree_util.tree_map(lambda xi: alpha * xi, x)
+
+
+def tree_sub(x, y):
+    return jax.tree_util.tree_map(lambda xi, yi: xi - yi, x, y)

@@ -101,6 +101,8 @@ class Solver(Protocol):
 
     def samples_per_step(self, n: int) -> float: ...
 
+    def hypergrad_calls_per_step(self, n: int) -> float: ...
+
 
 class SolverBase:
     """Shared plumbing: engine construction, jit + donation, scan runner.
@@ -136,6 +138,7 @@ class SolverBase:
         data in hand (the legacy ``make_*_step`` shims do).
         """
         hg_cfg = hg_cfg if hg_cfg is not None else self.config.hypergrad
+        hg_cfg.resolve_backend()   # fail fast on unknown engine names
         spec = self.config.mixing_spec(m)
         engine = make_engine(self.config.backend, spec,
                              **dict(self.config.backend_opts))
@@ -193,6 +196,14 @@ class SolverBase:
     def samples_per_step(self, n: int) -> float:
         raise NotImplementedError
 
+    # Hypergradient evaluations per iteration (amortized): how many times
+    # the algorithm invokes the eq.-(5)/(22) estimator per agent per step.
+    # Multiplied by the engine's *measured* per-call HypergradStats this
+    # yields the per-step hvp/grad counts that `solve` and the bench
+    # harness report (Theorem-1/2 accounting, see docs/HYPERGRAD.md).
+    def hypergrad_calls_per_step(self, n: int) -> float:
+        return 1.0
+
 
 def run_recorded(solver, state, data, num_steps: int, record_every: int = 0,
                  metric_fn=None, scan: bool = True):
@@ -242,12 +253,19 @@ class SolveResult:
     us_per_step: float          # stepping time only (metrics excluded)
     samples_per_step: float     # per-agent IFO cost (Definition 1)
     communications_per_step: int
+    # measured per-agent hypergradient accounting (one step, amortized):
+    # the engine's counted per-call HypergradStats at the initial iterate
+    # times the algorithm's hypergrad calls per step — what Theorems 1-2
+    # charge for, measured instead of inferred (docs/HYPERGRAD.md).
+    hvp_per_step: float = 0.0
+    grad_per_step: float = 0.0
+    hess_per_step: float = 0.0
 
 
 def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
           *, problem=None, hg_cfg=None, x0=None, y0=None, data=None,
           num_agents: int = 5, n_per_agent: int = 600,
-          metric_fn=None) -> SolveResult:
+          metric_fn=None, measure_hypergrad: bool = True) -> SolveResult:
     """End-to-end experiment: build, init, scan-run, record.
 
     With only ``(config, num_steps, record_every)`` this reproduces the
@@ -259,6 +277,16 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
     Stepping runs through ``solver.run`` in ``record_every``-sized chunks
     (one compile per distinct chunk length); metric evaluation happens
     outside the timed window.
+
+    Besides timing and the Definition-1/2 sample/communication costs,
+    the result carries *measured* per-step hypergradient accounting
+    (``hvp_per_step`` / ``grad_per_step`` / ``hess_per_step``): one
+    counted engine call (``repro.hypergrad.measure_counts``) at the
+    initial iterate times the algorithm's amortized estimator calls per
+    step — see docs/HYPERGRAD.md.  The measurement is one eager
+    estimator evaluation (a small fixed key set for stochastic-k
+    configs); pass ``measure_hypergrad=False`` in tight sweep loops to
+    skip it (the count fields then stay 0).
     """
     if problem is None or data is None or x0 is None or y0 is None:
         from repro.core import (HypergradConfig, MLPMetaProblem,
@@ -289,7 +317,17 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
                                       record_every, metric_fn)
 
     n = data.inner_x.shape[1] + data.outer_x.shape[1]
+    counts = {}
+    if measure_hypergrad:
+        from repro.hypergrad import measure_problem_counts
+        per_call = measure_problem_counts(problem, solver._hg_cfg, x0, y0,
+                                          data)
+        calls = solver.hypergrad_calls_per_step(n)
+        counts = dict(hvp_per_step=per_call.hvp_count * calls,
+                      grad_per_step=per_call.grad_count * calls,
+                      hess_per_step=per_call.hess_count * calls)
     return SolveResult(state=state, trace=trace,
                        us_per_step=1e6 * took / max(num_steps, 1),
                        samples_per_step=solver.samples_per_step(n),
-                       communications_per_step=solver.communications_per_step)
+                       communications_per_step=solver.communications_per_step,
+                       **counts)

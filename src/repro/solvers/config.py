@@ -26,7 +26,7 @@ from repro.core.consensus import (
     ring_mixing,
     torus_mixing,
 )
-from repro.core.hypergrad import HypergradConfig
+from repro.hypergrad import HypergradConfig
 
 __all__ = ["SolverConfig", "TopologyConfig"]
 
@@ -78,7 +78,11 @@ class SolverConfig:
       backend_opts: extra kwargs for ``repro.consensus.make_engine``
         (e.g. ``interpret`` for pallas, ``compress``/``dp_sigma`` for
         ppermute).
-      hypergrad: how the inner-Hessian inverse is applied (eq. 5 / 22).
+      hypergrad: how the inner-Hessian inverse is applied (eq. 5 / 22);
+        its ``backend`` field selects the ``HypergradEngine`` ("cg",
+        "cg-linearized", "neumann", "neumann-linearized", "cholesky" —
+        validated against the registry at solver build time, see
+        docs/HYPERGRAD.md).
       seed: PRNG seed for the stochastic solvers' sampling streams.
     """
 

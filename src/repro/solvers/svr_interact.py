@@ -36,3 +36,9 @@ class SvrInteractSolver(SolverBase):
         q = self.config.resolve_q(n)
         bs = self.config.resolve_batch(n)
         return float(n / q + 2 * bs)
+
+    def hypergrad_calls_per_step(self, n: int) -> float:
+        # amortized exactly: a refresh step makes one full-batch estimator
+        # call, every other step the two minibatch evaluations of the
+        # recursive difference (eq. 23): (1 + 2(q-1)) / q = 2 - 1/q
+        return 2.0 - 1.0 / self.config.resolve_q(n)

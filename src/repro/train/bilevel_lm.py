@@ -28,6 +28,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.hypergrad.neumann import neumann_truncated_apply
 from repro.models import model as M
 from repro.models.base import ArchConfig
 
@@ -139,29 +140,22 @@ def _head_loss_on_feats(cfg: ArchConfig, hyper: BilevelHyper, y, feats,
 
 
 def _neumann_head(cfg, hyper: BilevelHyper, y, feats, labels, b):
-    """[H_yy g]^{-1} b via the K-term Neumann series in head space."""
-    L = hyper.lipschitz_g
+    """[H_yy g]^{-1} b via the K-term Neumann series in head space.
+
+    The head-space HVP is linearized once (``jax.linearize`` on the head
+    gradient at the cached features) and the K-term chain of eq. (22)
+    replays the stored tangent through the shared
+    ``repro.hypergrad.neumann_truncated_apply`` — the engine package's
+    linearize-once discipline applied to the LM fast path, with the
+    chain's final (discarded) HVP skipped.
+    """
     grad_fn = jax.grad(
         lambda yy: _head_loss_on_feats(cfg, hyper, yy, feats, labels))
-
-    def hvp(v):
-        return jax.jvp(grad_fn, (y,), (v,))[1]
-
-    def body(_, carry):
-        v, acc = carry
-        acc = acc + v
-        v = v - hvp(v) / L
-        return v, acc
-
-    if hyper.unroll_scans:
-        v, acc = b, jnp.zeros_like(b)
-        for _i in range(hyper.neumann_k):
-            v, acc = body(_i, (v, acc))
-    else:
-        v, acc = jax.lax.fori_loop(
-            0, hyper.neumann_k, body, (b, jnp.zeros_like(b)))
-    del v
-    return acc / L
+    _, hvp_lin = jax.linearize(grad_fn, y)
+    z, _count = neumann_truncated_apply(
+        hvp_lin, b, hyper.neumann_k, hyper.lipschitz_g,
+        unroll=hyper.unroll_scans, skip_last=True)
+    return z
 
 
 def _accum_grads(loss_of_tokens, args, tokens, k, argnums):

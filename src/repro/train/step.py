@@ -84,26 +84,38 @@ class InteractConfig:
         return self.topology_config().mixing_spec(m)
 
     def solver_config(self, algo: str = "interact"):
-        """The equivalent unified ``SolverConfig`` (docs/SOLVERS.md)."""
+        """The equivalent unified ``SolverConfig`` (docs/SOLVERS.md).
+
+        The LM path's hypergradient is the head-space Neumann series on
+        cached features — the linearize-once replay of eq. (22) — so the
+        exported ``HypergradConfig`` records it as the
+        ``neumann-linearized`` backend with BilevelHyper's K and L_g
+        (round-tripped back by ``from_solver_config``).
+        """
+        from repro.hypergrad import HypergradConfig
         from repro.solvers.config import SolverConfig
         opts = {}
         if self.consensus_compress is not None:
             opts["compress"] = self.consensus_compress
         if self.dp_sigma:
             opts["dp_sigma"] = self.dp_sigma
+        hg = HypergradConfig(method="neumann", backend="neumann-linearized",
+                             neumann_k=self.hyper.neumann_k,
+                             lipschitz_g=self.hyper.lipschitz_g)
         return SolverConfig(algo=algo, alpha=self.alpha, beta=self.beta,
                             q=self.q, topology=self.topology_config(),
                             backend=self.consensus_backend,
-                            backend_opts=opts)
+                            backend_opts=opts, hypergrad=hg)
 
     @classmethod
     def from_solver_config(cls, scfg, hyper: BilevelHyper | None = None):
         """Build the LM-runtime config from a unified ``SolverConfig``.
 
-        ``hyper`` (the LM-specific ``BilevelHyper``) has no SolverConfig
-        counterpart and defaults to ``BilevelHyper()``; ``scfg.hypergrad``
-        and ``scfg.seed`` play no role on the LM path (the train step uses
-        BilevelHyper's Neumann settings and deterministic token streams).
+        ``hyper`` (the LM-specific ``BilevelHyper``) defaults to
+        ``BilevelHyper()``, with the Neumann settings (K, L_g) imported
+        from ``scfg.hypergrad`` when it selects a Neumann estimator —
+        the only eq.-(22) knobs with an LM counterpart.  ``scfg.seed``
+        plays no role on the LM path (deterministic token streams).
         """
         if scfg.mixing is not None:
             raise ValueError(
@@ -111,9 +123,15 @@ class InteractConfig:
                 "the distributed runtime — the mesh realises the graph from "
                 "the declarative topology; set SolverConfig.topology instead")
         opts = dict(scfg.backend_opts)
+        if hyper is None:
+            hyper = BilevelHyper()
+            if scfg.hypergrad.resolve_backend().startswith("neumann"):
+                hyper = dataclasses.replace(
+                    hyper, neumann_k=scfg.hypergrad.neumann_k,
+                    lipschitz_g=scfg.hypergrad.lipschitz_g)
         return cls(alpha=scfg.alpha, beta=scfg.beta,
                    self_weight=scfg.topology.self_weight,
-                   hyper=hyper if hyper is not None else BilevelHyper(),
+                   hyper=hyper,
                    consensus_backend=scfg.backend,
                    topology=scfg.topology.kind,
                    p_connect=scfg.topology.p_connect,

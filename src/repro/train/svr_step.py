@@ -9,6 +9,12 @@ gradients use the SPIDER-style recursive estimator (eqs. 23-24):
 with the *same* minibatch S evaluated at both iterates (the correlated
 difference that makes the estimator variance-reduced).
 
+Each ``local_grads`` call prices out as one eq.-(22) hypergradient —
+K-1 head-space HVPs on the linearize-once tangent plus one backbone
+cross term (see repro/hypergrad and docs/HYPERGRAD.md); the recursive
+step pays it twice (new and previous iterate), matching the
+``hypergrad_calls_per_step`` accounting of the simulator's SVR solver.
+
 Cost note (documented design decision): the recursive estimator requires
 the previous iterate (x_{t-1}, y_{t-1}) in state — two extra parameter
 copies per agent on top of INTERACT's three.  At 100B+ scale that pushes

@@ -1,0 +1,290 @@
+"""HypergradEngine backends: cross-backend equivalence, counting, shims.
+
+Covers the ISSUE-3 contract:
+  * cg-linearized vs cg on the analytic quadratic and the MLP meta
+    instance;
+  * cholesky vs the analytic inverse on the quadratic, and its
+    closed-form (``inner_hess_yy``) path vs the batched-identity AD path;
+  * 5-step solver-trajectory parity per algorithm when *only* the
+    hypergradient backend changes (1e-4);
+  * the stochastic-Neumann dynamic trip count (measured HVP counter == k,
+    expected (K-1)/2) and its bit-compatibility with the masked form;
+  * the relative/absolute cg_solve tolerance flag + surfaced residual;
+  * legacy ``repro.core.hypergrad`` entry points: DeprecationWarning and
+    bit-compatibility.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+import repro.core.hypergrad as legacy_hg
+from repro.core import (
+    HypergradConfig,
+    MLPMetaProblem,
+    init_head,
+    init_mlp_backbone,
+    laplacian_mixing,
+    erdos_renyi_adjacency,
+    make_synthetic_agents,
+)
+from repro.hypergrad import (
+    CgInfo,
+    HypergradStats,
+    available_backends,
+    cg_solve,
+    hvp_yy,
+    hypergradient,
+    hypergradient_with_stats,
+    measure_counts,
+    neumann_stochastic_apply,
+)
+from repro.solvers import SolverConfig, make_solver
+
+from test_hypergrad import quad_problem
+
+
+def _leaves_close(a, b, rtol=1e-5, atol=1e-6):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.fixture(scope="module")
+def mlp_setup():
+    key = jax.random.PRNGKey(0)
+    data = make_synthetic_agents(key, num_agents=4, n_per_agent=120,
+                                 d_in=8, num_classes=4)
+    prob = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(1), 8, hidden=10)
+    y0 = init_head(jax.random.PRNGKey(2), 10, 4)
+    return prob, x0, y0, data
+
+
+def _agent0(data):
+    return ((data.inner_x[0], data.inner_y[0]),
+            (data.outer_x[0], data.outer_y[0]))
+
+
+def test_registry_has_all_five_backends():
+    assert set(available_backends()) == {
+        "cg", "cg-linearized", "neumann", "neumann-linearized", "cholesky"}
+
+
+def test_unknown_backend_raises_with_listing():
+    cfg = HypergradConfig(backend="qr")
+    with pytest.raises(ValueError, match="cg-linearized"):
+        cfg.resolve_backend()
+
+
+def test_cg_linearized_matches_cg_on_quadratic():
+    f, g, A, B, truth = quad_problem(jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (5,))
+    y = jax.random.normal(jax.random.PRNGKey(5), (4,))
+    ref = hypergradient(f, g, x, y,
+                        HypergradConfig(method="cg", cg_iters=64,
+                                        cg_tol=1e-12))
+    lin = hypergradient(f, g, x, y,
+                        HypergradConfig(backend="cg-linearized",
+                                        cg_iters=64, cg_tol=1e-12))
+    _leaves_close(ref, lin, rtol=1e-6, atol=1e-7)
+
+
+def test_cg_linearized_matches_cg_on_mlp(mlp_setup):
+    prob, x0, y0, data = mlp_setup
+    ib, ob = _agent0(data)
+    ref = hypergradient(prob.outer, prob.inner, x0, y0,
+                        HypergradConfig(method="cg", cg_iters=64,
+                                        cg_tol=1e-10),
+                        f_args=(ob,), g_args=(ib,))
+    lin = hypergradient(prob.outer, prob.inner, x0, y0,
+                        HypergradConfig(backend="cg-linearized",
+                                        cg_iters=64, cg_tol=1e-10),
+                        f_args=(ob,), g_args=(ib,))
+    _leaves_close(ref, lin, rtol=1e-5, atol=1e-6)
+
+
+def test_cholesky_matches_analytic_inverse_on_quadratic():
+    f, g, A, B, truth = quad_problem(jax.random.PRNGKey(6))
+    x = jax.random.normal(jax.random.PRNGKey(7), (5,))
+    y = jax.random.normal(jax.random.PRNGKey(8), (4,))
+    # the quadratic's H_yy is the constant matrix A: cholesky solves it
+    # exactly, so the full hypergradient equals the exact-inverse eq. (5)
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y)
+    z = jnp.linalg.solve(A, gy)
+    expected = gx - B @ z
+    got = hypergradient(f, g, x, y, HypergradConfig(backend="cholesky"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cholesky_closed_form_matches_batched_identity(mlp_setup):
+    prob, x0, y0, data = mlp_setup
+    ib, ob = _agent0(data)
+    cfg = HypergradConfig(backend="cholesky")
+    with_cf, st_cf = hypergradient_with_stats(
+        prob.outer, prob.inner, x0, y0, cfg, f_args=(ob,), g_args=(ib,),
+        inner_hess_yy=prob.inner_hess_yy)
+    generic, st_ad = hypergradient_with_stats(
+        prob.outer, prob.inner, x0, y0, cfg, f_args=(ob,), g_args=(ib,))
+    _leaves_close(with_cf, generic, rtol=1e-4, atol=1e-5)
+    d_y = ravel_pytree(y0)[0].shape[0]
+    assert int(st_cf.hess_count) == 1 and int(st_cf.hvp_count) == 1
+    assert int(st_ad.hess_count) == 0
+    assert int(st_ad.hvp_count) == d_y + 1   # identity basis + cross term
+
+
+@pytest.mark.parametrize("algo",
+                         ["interact", "svr-interact", "gt-dsgd", "d-sgd"])
+@pytest.mark.parametrize("backend", ["cg-linearized", "cholesky"])
+def test_solver_trajectory_parity_across_backends(mlp_setup, algo, backend):
+    """5 steps with only the hypergrad backend changed stay within 1e-4."""
+    prob, x0, y0, data = mlp_setup
+    spec = laplacian_mixing(erdos_renyi_adjacency(4, 0.5, seed=3))
+
+    def run_with(hg):
+        cfg = SolverConfig(algo=algo, alpha=0.1, beta=0.1, batch_size=6,
+                           q=3, mixing=spec, hypergrad=hg, seed=7)
+        solver = make_solver(cfg)
+        state = solver.init(None, prob, hg, x0, y0, data)
+        for _ in range(5):
+            state = solver.step(state, data)
+        return state
+
+    ref = run_with(HypergradConfig(method="cg", cg_iters=32, cg_tol=1e-10))
+    alt = run_with(HypergradConfig(backend=backend, cg_iters=32,
+                                   cg_tol=1e-10))
+    for la, lb in zip(jax.tree_util.tree_leaves(ref),
+                      jax.tree_util.tree_leaves(alt)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_stochastic_neumann_counter_is_dynamic():
+    """The chain executes exactly the sampled k HVPs (satellite 1)."""
+    _, g, A, _, _ = quad_problem(jax.random.PRNGKey(9))
+    b = jax.random.normal(jax.random.PRNGKey(10), (4,))
+    x, y = jnp.zeros((5,)), jnp.zeros((4,))
+    L = float(jnp.linalg.eigvalsh(A)[-1]) * 1.1
+    K = 8
+    matvec = lambda v: hvp_yy(g, x, y, v)
+    counts = []
+    for s in range(40):
+        key = jax.random.PRNGKey(s)
+        v, count = neumann_stochastic_apply(matvec, b, K, L, key)
+        k = int(jax.random.randint(key, (), 0, K))
+        assert int(count) == k
+        counts.append(int(count))
+        # value bit-identical to the legacy masked chain
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            v_legacy = legacy_hg.neumann_inverse_apply(
+                g, x, y, b, k_terms=K, lipschitz_g=L, stochastic_k=True,
+                key=key)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(v_legacy))
+    mean = sum(counts) / len(counts)
+    assert abs(mean - (K - 1) / 2) < 1.5   # expected cost (K-1)/2
+
+
+def test_neumann_k0_matches_reference_empty_sum():
+    """skip_last must not add a phantom term when the sum is empty."""
+    from repro.hypergrad import neumann_truncated_apply
+    _, g, A, _, _ = quad_problem(jax.random.PRNGKey(20))
+    b = jax.random.normal(jax.random.PRNGKey(21), (4,))
+    x, y = jnp.zeros((5,)), jnp.zeros((4,))
+    mv = lambda v: hvp_yy(g, x, y, v)
+    for skip in (False, True):
+        v, count = neumann_truncated_apply(mv, b, 0, 2.0, skip_last=skip)
+        np.testing.assert_array_equal(np.asarray(v), np.zeros(4))
+        assert int(count) == 0
+
+
+def test_cg_solve_relative_vs_absolute_flag():
+    _, g, A, _, _ = quad_problem(jax.random.PRNGKey(11))
+    b = 1e-3 * jax.random.normal(jax.random.PRNGKey(12), (4,))
+    x, y = jnp.zeros((5,)), jnp.zeros((4,))
+    mv = lambda v: hvp_yy(g, x, y, v)
+    # relative keeps iterating on a tiny rhs where absolute froze
+    z_rel, info_rel = cg_solve(mv, b, 50, 1e-4, rel_tol=True,
+                               return_info=True)
+    z_abs, info_abs = cg_solve(mv, b, 50, 1e-4, rel_tol=False,
+                               return_info=True)
+    assert isinstance(info_rel, CgInfo)
+    assert float(info_rel.residual_norm) <= 1e-4 * float(jnp.linalg.norm(b))
+    assert int(info_abs.iterations) < int(info_rel.iterations)
+    assert int(info_rel.matvecs) == 50   # frozen loop still runs the budget
+    np.testing.assert_allclose(np.asarray(z_rel),
+                               np.asarray(jnp.linalg.solve(A, b)),
+                               rtol=1e-4)
+
+
+def test_measured_counts_per_backend(mlp_setup):
+    prob, x0, y0, data = mlp_setup
+    ib, ob = _agent0(data)
+    counts = {}
+    for be in available_backends():
+        cfg = HypergradConfig(backend=be, cg_iters=24, cg_tol=1e-10,
+                              neumann_k=8, lipschitz_g=4.0)
+        st = measure_counts(prob.outer, prob.inner, x0, y0, cfg,
+                            f_args=(ob,), g_args=(ib,),
+                            inner_hess_yy=prob.inner_hess_yy)
+        assert isinstance(st, HypergradStats)
+        counts[be] = st
+    assert counts["cg"].hvp_count == 24 + 1        # frozen trip + cross
+    assert counts["cg-linearized"].hvp_count < counts["cg"].hvp_count
+    assert counts["neumann"].hvp_count == 8 + 1
+    assert counts["neumann-linearized"].hvp_count == 7 + 1  # skips last
+    assert counts["cholesky"].hess_count == 1      # closed form engaged
+    for st in counts.values():
+        assert st.grad_count >= 1
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim contract: importable, warning, bit-compatible.
+# ---------------------------------------------------------------------------
+
+def test_legacy_entry_points_importable():
+    for name in ("HypergradConfig", "hvp_yy", "hvp_xy", "cg_solve",
+                 "neumann_inverse_apply", "hypergradient"):
+        assert hasattr(legacy_hg, name)
+    assert legacy_hg.HypergradConfig is HypergradConfig
+
+
+def test_legacy_shims_warn_and_match(mlp_setup):
+    prob, x0, y0, data = mlp_setup
+    ib, ob = _agent0(data)
+    cfg = HypergradConfig(method="cg", cg_iters=16)
+    legacy_hg._warned.clear()
+    with pytest.warns(DeprecationWarning):
+        p_old = legacy_hg.hypergradient(prob.outer, prob.inner, x0, y0,
+                                        cfg, f_args=(ob,), g_args=(ib,))
+    p_new = hypergradient(prob.outer, prob.inner, x0, y0, cfg,
+                          f_args=(ob,), g_args=(ib,))
+    for la, lb in zip(jax.tree_util.tree_leaves(p_old),
+                      jax.tree_util.tree_leaves(p_new)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_legacy_cg_solve_warns_and_keeps_absolute_semantics():
+    _, g, A, _, _ = quad_problem(jax.random.PRNGKey(13))
+    b = jax.random.normal(jax.random.PRNGKey(14), (4,))
+    x, y = jnp.zeros((5,)), jnp.zeros((4,))
+    mv = lambda v: hvp_yy(g, x, y, v)
+    legacy_hg._warned.clear()
+    with pytest.warns(DeprecationWarning):
+        z_old = legacy_hg.cg_solve(mv, b, 40, 1e-6)
+    z_new = cg_solve(mv, b, 40, 1e-6, rel_tol=False)
+    np.testing.assert_array_equal(np.asarray(z_old), np.asarray(z_new))
+
+
+def test_legacy_neumann_warns():
+    _, g, A, _, _ = quad_problem(jax.random.PRNGKey(15))
+    b = jax.random.normal(jax.random.PRNGKey(16), (4,))
+    legacy_hg._warned.clear()
+    with pytest.warns(DeprecationWarning):
+        legacy_hg.neumann_inverse_apply(g, jnp.zeros((5,)), jnp.zeros((4,)),
+                                        b, k_terms=4, lipschitz_g=8.0)
