@@ -1,39 +1,185 @@
 """Paper Fig. 2 / Fig. 3: convergence of the four algorithms on the
-meta-learning task, 5-agent and 10-agent networks.
+meta-learning task, 5-agent and 10-agent networks — run as a *batched
+sweep*: seeds x algorithms dispatch one compiled XLA program per
+algorithm (``repro.solvers.sweep``), with the convergence metric
+recorded in-scan instead of through the legacy chunked host loop.
 
 Claims validated:
-* INTERACT and SVR-INTERACT reach a lower convergence metric M than
-  GT-DSGD / D-SGD at equal iteration count.
+* INTERACT and SVR-INTERACT reach a lower convergence metric M (mean
+  over seeds) than GT-DSGD / D-SGD at equal iteration count.
+* The batched sweep engine beats the legacy sequential per-seed loop —
+  the pre-engine grid walk that rebuilt the solver per cell (per-cell
+  jit retrace), init'd eagerly and chunked through ``run_recorded``
+  with eager metric round-trips: ``vmap_speedup`` >= 1 is asserted by
+  CI.  A fully-warmed variant (``vmap_speedup_warm``, compile excluded
+  on both sides) is reported next to it so compile noise can't mask a
+  batching regression.
 * The scan-compiled ``solver.run`` steps faster than the per-step python
-  loop at equal iteration count (``us_loop`` / ``scan_speedup`` columns).
+  loop from the same built solver and initial state (``us_loop`` /
+  ``scan_speedup`` columns — one build, one init, both timings).
+* ``run_traced``'s on-device trace is bitwise identical to the legacy
+  ``run_recorded`` trace for every algorithm (``trace_bitwise_match``).
 """
 from __future__ import annotations
 
-from benchmarks.common import ALGORITHMS, Row, make_setup, run_algo
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (ALGORITHMS, Row, build, make_setup,
+                               metric_fn_of, metric_of,
+                               record_sweep_section)
+from repro.solvers import SolverConfig, expand_grid, run_recorded, sweep
 
 ITERS = 40
+SEEDS = 8
+TIMING_ITERS = 40   # scan-vs-loop stepping comparison (metric-free)
+TIMING_REPS = 3
+
+
+def _legacy_sequential_seconds(s, algo, seeds, iters, record_every,
+                               warm: bool) -> float:
+    """The pre-sweep grid walk: one config at a time, eager init, chunked
+    ``run_recorded`` with the eager convergence metric.
+
+    ``warm=False`` is the *faithful* pre-engine path — exactly what
+    ``run_algo`` did for every grid cell before the sweep engine: build
+    a fresh solver per seed (new jit closures, so XLA retraces per
+    cell) and pay the compiles the engine was built to eliminate.
+    ``warm=True`` is the generous variant: one solver, every program
+    (step, scan, metric) compiled outside the clock, so the timed loop
+    pays only the irreducible host work — per-seed eager init compute,
+    chunked per-record dispatches, host syncs, eager metric round-trips,
+    and ``run_recorded``'s per-call warmup executions.  The warm ratio
+    can hover near 1.0 on CPU for trivial-init algorithms (d-sgd); it
+    exists so batching regressions can't hide behind compile noise."""
+    metric = lambda st_: metric_of(s, st_)
+    if warm:
+        solver, state = build(s, algo, seed=seeds[0])
+        run_recorded(solver, jax.tree_util.tree_map(jnp.copy, state),
+                     s.data, iters, record_every, metric_fn=metric)
+    total = 0.0
+    for seed in seeds:
+        t0 = time.perf_counter()
+        if warm:
+            st = solver._init_state(jax.random.PRNGKey(seed), s.prob,
+                                    s.hg, s.x0, s.y0, s.data)
+        else:
+            solver, st = build(s, algo, seed=seed)  # pre-PR per-cell build
+        run_recorded(solver, st, s.data, iters, record_every,
+                     metric_fn=metric)
+        total += time.perf_counter() - t0
+    return total
+
+
+def _scan_vs_loop(s, algo) -> tuple[float, float]:
+    """(us_scan, us_loop) per step from ONE built solver and ONE initial
+    state — only the stepping differs between the timed runs, so the
+    ratio compares dispatch, not construction/init/metric noise.
+    Best-of-``TIMING_REPS`` wall-clock, no metric evaluations."""
+    solver, state = build(s, algo)
+
+    def timed(scan: bool) -> float:
+        best = float("inf")
+        for _ in range(TIMING_REPS):
+            st = jax.tree_util.tree_map(jnp.copy, state)
+            _, _, took = run_recorded(solver, st, s.data, TIMING_ITERS, 0,
+                                      metric_fn=None, scan=scan)
+            best = min(best, took)
+        return 1e6 * best / TIMING_ITERS
+
+    return timed(True), timed(False)
+
+
+def _traced_matches_recorded(s, algo, iters, record_every) -> bool:
+    """One seed per algorithm: in-scan trace vs legacy chunked trace."""
+    solver, state = build(s, algo)
+    copy = jax.tree_util.tree_map(jnp.copy, state)
+    _, legacy, _ = run_recorded(solver, copy, s.data, iters, record_every,
+                                metric_fn=lambda st: metric_of(s, st))
+    _, traced = solver.run_traced(state, s.data, iters, record_every,
+                                  metric_fn_of(s))
+    return bool(np.array_equal(np.asarray(legacy, np.asarray(traced).dtype),
+                               np.asarray(traced)))
 
 
 def run(smoke: bool = False) -> list:
     iters = 10 if smoke else ITERS
+    rec = 5
     sizes = (5,) if smoke else (5, 10)
-    rows = []
+    seeds = tuple(range(SEEDS))
+    rows, records = [], []
+    speedups, scan_speedups, bitwise_all = [], [], True
     for m in sizes:
         s = make_setup(m=m)
+        configs = expand_grid(
+            SolverConfig(mixing=s.spec, hypergrad=s.hg),
+            algo=ALGORITHMS, seed=seeds)
+        res = sweep(configs, iters, rec, problem=s.prob, x0=s.x0, y0=s.y0,
+                    data=s.data, metric_fn=metric_fn_of(s), measure=True)
+
         finals = {}
-        for algo in ALGORITHMS:
-            trace, us_scan, _ = run_algo(s, algo, iters)
-            _, us_loop, _ = run_algo(s, algo, iters, scan=False)
-            finals[algo] = trace[-1]
+        for group in res.groups:
+            algo = group.config.algo
+            traces = res.group_traces(group)          # (seeds, records)
+            mean, std = traces.mean(axis=0), traces.std(axis=0)
+            finals[algo] = float(mean[-1])
+            us_batched = 1e6 * group.seconds / (len(seeds) * iters)
+
+            seq = _legacy_sequential_seconds(s, algo, seeds, iters, rec,
+                                             warm=False)
+            seq_warm = _legacy_sequential_seconds(s, algo, seeds, iters,
+                                                  rec, warm=True)
+            vmap_speedup = seq / max(group.seconds, 1e-12)
+            vmap_speedup_warm = seq_warm / max(group.seconds, 1e-12)
+            speedups.append(vmap_speedup)
+
+            us_scan, us_loop = _scan_vs_loop(s, algo)
+            scan_speedup = us_loop / max(us_scan, 1e-9)
+            scan_speedups.append(scan_speedup)
+
+            bitwise = _traced_matches_recorded(s, algo, iters, rec)
+            bitwise_all &= bitwise
+
             rows.append(Row(
-                f"fig2_convergence_m{m}_{algo}", us_scan,
-                f"final_metric={trace[-1]:.5f};us_loop={us_loop:.1f};"
-                f"scan_speedup={us_loop / max(us_scan, 1e-9):.2f}"))
+                f"fig2_convergence_m{m}_{algo}", us_batched,
+                f"final_metric={mean[-1]:.5f};final_std={std[-1]:.5f};"
+                f"seeds={len(seeds)};vmap_speedup={vmap_speedup:.2f};"
+                f"vmap_speedup_warm={vmap_speedup_warm:.2f};"
+                f"us_loop={us_loop:.1f};scan_speedup={scan_speedup:.2f};"
+                f"trace_bitwise={bitwise}"))
+            records.append({
+                "name": f"fig2_m{m}_{algo}", "m": m, "algo": algo,
+                "seeds": len(seeds), "iters": iters,
+                "record_every": rec,
+                "us_per_step_batched": us_batched,
+                "seconds_batched": group.seconds,
+                "seconds_sequential": seq,
+                "seconds_sequential_warm": seq_warm,
+                "vmap_speedup": vmap_speedup,
+                "vmap_speedup_warm": vmap_speedup_warm,
+                "us_scan": us_scan, "us_loop": us_loop,
+                "scan_speedup": scan_speedup,
+                "trace_bitwise_match": bitwise,
+                "trace_mean": mean.tolist(), "trace_std": std.tolist()})
+
         ok = (finals["interact"] < finals["gt-dsgd"]
               and finals["interact"] < finals["d-sgd"]
               and finals["svr-interact"] < finals["gt-dsgd"])
         rows.append(Row(f"fig2_claim_m{m}_interact_beats_baselines", 0.0,
                         f"holds={ok}"))
+
+    record_sweep_section(
+        "convergence", records, smoke=smoke,
+        vmap_speedup=min(speedups),
+        scan_speedup=min(scan_speedups),
+        trace_bitwise_match=bitwise_all)
+    rows.append(Row("fig2_sweep_engine", 0.0,
+                    f"min_vmap_speedup={min(speedups):.2f};"
+                    f"min_scan_speedup={min(scan_speedups):.2f};"
+                    f"trace_bitwise_match={bitwise_all}"))
     return rows
 
 

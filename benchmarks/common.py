@@ -9,18 +9,24 @@ Algorithm construction goes through the unified Solver API
 (``repro.solvers``): ``build`` is a registry lookup — no per-algorithm
 branches — and ``run_algo`` drives the scan-compiled ``solver.run``
 (or the per-step python loop with ``scan=False``), timing the stepping
-separately from the convergence-metric evaluations.
+separately from the convergence-metric evaluations.  The figure suites
+(fig2/fig4/fig5) run their grids through the batched sweep engine
+(``repro.solvers.sweep``, see docs/SWEEPS.md) and share one
+``BENCH_sweep.json`` dump via ``record_sweep_section``.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import (
     HypergradConfig, MLPMetaProblem, convergence_metric,
-    erdos_renyi_adjacency, init_head, init_mlp_backbone, laplacian_mixing,
-    make_synthetic_agents,
+    convergence_metric_fn, erdos_renyi_adjacency, init_head,
+    init_mlp_backbone, laplacian_mixing, make_synthetic_agents,
 )
 from repro.solvers import SolverConfig, make_solver, run_recorded
 
@@ -66,6 +72,11 @@ def metric_of(s: Setup, state) -> float:
     return float(rep.total)
 
 
+def metric_fn_of(s: Setup):
+    """The traceable in-scan counterpart of ``metric_of`` (same values)."""
+    return convergence_metric_fn(s.prob, s.hg, s.data)
+
+
 ALGORITHMS = ("interact", "svr-interact", "gt-dsgd", "d-sgd")
 
 
@@ -85,7 +96,8 @@ def build(s: Setup, algo: str, alpha: float = 0.3, beta: float = 0.3,
 
 
 def run_algo(s: Setup, algo: str, iters: int, record_every: int = 5,
-             scan: bool = True, **kw) -> tuple[list[float], float, float]:
+             scan: bool = True, solver_state=None,
+             **kw) -> tuple[list[float], float, float]:
     """Returns (metric trace, us_per_step, samples_per_step).
 
     Delegates to the shared ``run_recorded`` runner: stepping runs in
@@ -94,10 +106,49 @@ def run_algo(s: Setup, algo: str, iters: int, record_every: int = 5,
     loop for comparison), compilation happens before the timer starts,
     and the convergence metric is evaluated between timed chunks, so
     ``us_per_step`` measures stepping only.
+
+    Pass ``solver_state=(solver, state)`` to reuse one built solver and
+    one initial state across several timed runs (the state is copied
+    here, never consumed) — e.g. the scan-vs-loop comparison must time
+    the *same* compiled solver stepping from the *same* point, or
+    ``scan_speedup`` would compare construction/init noise instead of
+    stepping.
     """
-    solver, state = build(s, algo, **kw)
+    if solver_state is None:
+        solver_state = build(s, algo, **kw)
+    solver, state = solver_state
+    state = jax.tree_util.tree_map(jnp.copy, state)
     _, trace, took = run_recorded(solver, state, s.data, iters,
                                   record_every,
                                   metric_fn=lambda st: metric_of(s, st),
                                   scan=scan)
     return trace, 1e6 * took / iters, solver.samples_per_step(s.n)
+
+
+# -- BENCH_sweep.json: one dump shared by the fig2/fig4/fig5 suites ------
+#
+# The three figure suites each contribute a section; the file is
+# rewritten after every contribution so the dump is complete whatever
+# subset of suites ran (and in whatever order).  Headline fields
+# (vmap_speedup / scan_speedup / trace_bitwise_match) come from the fig2
+# section — CI asserts on them (see .github/workflows/ci.yml).
+
+_SWEEP_DUMP: dict = {"bench": "sweep", "jax": jax.__version__,
+                     "sections": {}}
+
+
+def sweep_json_path() -> str:
+    return os.path.join(os.environ.get("BENCH_JSON_DIR", os.getcwd()),
+                        "BENCH_sweep.json")
+
+
+def record_sweep_section(section: str, records: list[dict],
+                         **headline) -> None:
+    """Merge one suite's records (+ optional headline fields) and dump."""
+    _SWEEP_DUMP["sections"][section] = records
+    _SWEEP_DUMP.update(headline)
+    try:
+        with open(sweep_json_path(), "w") as fh:
+            json.dump(_SWEEP_DUMP, fh, indent=1)
+    except OSError:
+        pass  # read-only workdir: CSV rows still carry everything

@@ -10,6 +10,13 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kernels  Pallas kernel micro-structure
   roofline dry-run derived roofline terms (if dry-run artifacts exist)
 
+The figure suites (fig2/fig4/fig5) run their seed x config grids through
+the batched sweep engine (``repro.solvers.sweep``, docs/SWEEPS.md) —
+one compiled vmapped program per algo/topology group — and share one
+``BENCH_sweep.json`` dump (``$BENCH_JSON_DIR`` or cwd) whose headline
+``vmap_speedup`` / ``scan_speedup`` / ``trace_bitwise_match`` fields the
+bench-smoke CI job asserts on, so batching regressions fail the build.
+
 ``--smoke`` runs every suite at CI-sized iteration counts (used by the
 bench-smoke CI job to keep the harness from rotting against API changes):
 

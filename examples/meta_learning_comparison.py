@@ -2,9 +2,11 @@
 
 Reproduces the Fig. 2 comparison (INTERACT, SVR-INTERACT, GT-DSGD, D-SGD)
 on the synthetic meta-learning task and prints an ASCII convergence plot
-plus the measured sample counts per agent (Table-1 style).  Every
-algorithm is built through the ``repro.solvers`` registry and stepped via
-the scan-compiled ``solver.run`` (see benchmarks/common.py).
+(mean over seeds) plus the measured sample counts per agent (Table-1
+style).  The whole seeds x algorithms grid runs through the batched
+sweep engine (``repro.solvers.sweep``, docs/SWEEPS.md): one compiled
+``init -> run_traced`` program per algorithm, metric recorded in-scan —
+4 XLA dispatches for the 4 x len(SEEDS) grid.
 
     PYTHONPATH=src python examples/meta_learning_comparison.py
 """
@@ -14,10 +16,11 @@ import sys
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.common import ALGORITHMS, make_setup, run_algo
+from benchmarks.common import ALGORITHMS, make_setup, metric_fn_of
 
 ITERS = 40
 RECORD = 5
+SEEDS = (0, 1, 2, 3)
 
 
 def ascii_plot(traces: dict, width: int = 60, height: int = 14) -> str:
@@ -41,18 +44,30 @@ def ascii_plot(traces: dict, width: int = 60, height: int = 14) -> str:
 
 
 def main() -> None:
-    from repro.solvers import SolverConfig, make_solver
+    from repro.solvers import SolverConfig, expand_grid, make_solver, sweep
 
     s = make_setup(m=5, n=600)
+    configs = expand_grid(SolverConfig(mixing=s.spec, hypergrad=s.hg),
+                          algo=ALGORITHMS, seed=SEEDS)
+    res = sweep(configs, ITERS, RECORD, problem=s.prob, x0=s.x0, y0=s.y0,
+                data=s.data, metric_fn=metric_fn_of(s))
+    print(f"{len(configs)} experiments ({len(ALGORITHMS)} algorithms x "
+          f"{len(SEEDS)} seeds) in {res.num_dispatches} XLA dispatches, "
+          f"{res.seconds:.1f}s batched wall-clock (incl. compile)")
+
     traces, samples, comms = {}, {}, {}
-    for algo in ALGORITHMS:
-        trace, us, spc = run_algo(s, algo, ITERS, record_every=RECORD)
-        traces[algo] = trace
-        samples[algo] = spc
-        comms[algo] = make_solver(
-            SolverConfig(algo=algo)).communications_per_step
-        print(f"{algo:14s} final M = {trace[-1]:.5f}   "
-              f"({us / 1e3:.1f} ms/iter, {spc:.0f} IFO calls/agent/iter)")
+    for group in res.groups:
+        algo = group.config.algo
+        mean = res.group_traces(group).mean(axis=0)
+        std = res.group_traces(group).std(axis=0)
+        traces[algo] = mean.tolist()
+        solver = make_solver(SolverConfig(algo=algo))
+        samples[algo] = solver.samples_per_step(s.n)
+        comms[algo] = solver.communications_per_step
+        us = 1e6 * group.seconds / (len(SEEDS) * ITERS)
+        print(f"{algo:14s} final M = {mean[-1]:.5f} +- {std[-1]:.5f}   "
+              f"({us / 1e3:.1f} ms/iter, {samples[algo]:.0f} IFO "
+              "calls/agent/iter)")
 
     print("\n" + ascii_plot(traces) + "\n")
 

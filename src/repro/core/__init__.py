@@ -56,6 +56,7 @@ from repro.core.baselines import (
     make_dsgd_step,
     make_gt_dsgd_step,
 )
-from repro.core.metrics import MetricReport, convergence_metric, solve_inner
+from repro.core.metrics import (MetricReport, convergence_metric,
+                                convergence_metric_fn, solve_inner)
 
 __all__ = [name for name in dir() if not name.startswith("_")]

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.hypergrad import HypergradConfig, hypergradient
 
-__all__ = ["MetricReport", "solve_inner", "convergence_metric"]
+__all__ = ["MetricReport", "solve_inner", "convergence_metric",
+           "convergence_metric_fn"]
 
 
 class MetricReport(NamedTuple):
@@ -97,3 +98,29 @@ def convergence_metric(problem: BilevelProblem, hg_cfg: HypergradConfig,
     return MetricReport(total=total, stationarity=stationarity,
                         consensus_error=consensus_error,
                         inner_error=inner_error, outer_loss=outer_loss)
+
+
+def convergence_metric_fn(problem: BilevelProblem, hg_cfg: HypergradConfig,
+                          data: AgentData, inner_steps: int = 300,
+                          inner_lr: float = 0.5):
+    """A traceable ``state -> M_t`` closure for in-scan recording.
+
+    ``convergence_metric`` itself is jitted and typically called eagerly
+    (state in, Python float out) — that forces a host round-trip per
+    record point.  The closure returned here stays abstract: it reads
+    ``state.x`` / ``state.y`` and returns the scalar ``M_t`` as a traced
+    value, so it can run inside ``lax.scan`` / ``lax.cond`` bodies
+    (``Solver.run_traced``) and under ``jax.vmap`` (the sweep engine)
+    while reusing the same hypergradient engine as the eager path —
+    values are identical, only the dispatch boundary moves.
+
+    The closure is a stable object: pass the *same* instance to repeated
+    ``run_traced`` calls (it is a static jit argument there).
+    """
+
+    def metric(state):
+        rep = convergence_metric(problem, hg_cfg, state.x, state.y,
+                                 inner_steps, inner_lr, data)
+        return rep.total
+
+    return metric

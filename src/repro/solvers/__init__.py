@@ -13,20 +13,27 @@ future algorithm) a single surface:
     # or the whole Section-6 experiment in one call:
     result = solve(SolverConfig(algo="svr-interact"), 100, record_every=5)
 
+    # or a whole seeds x step-sizes grid as one vmapped XLA program:
+    result = sweep(expand_grid(SolverConfig(), seed=range(8)), 100,
+                   record_every=5)
+
 See docs/SOLVERS.md for the protocol, the registry, and how to add a
-fifth algorithm as a drop-in entry.
+fifth algorithm as a drop-in entry; docs/SWEEPS.md for the batched
+sweep engine (vmap grouping, in-scan recording cost model).
 """
 from repro.solvers.api import (
     SolveResult,
     Solver,
     SolverBase,
     available_solvers,
+    default_setup,
     make_solver,
     register_solver,
     run_recorded,
     solve,
 )
 from repro.solvers.config import SolverConfig, TopologyConfig
+from repro.solvers.sweep import SweepGroup, SweepResult, expand_grid, sweep
 
 # Importing the implementation modules populates the registry.
 from repro.solvers import baselines as _baselines    # noqa: F401
@@ -38,10 +45,15 @@ __all__ = [
     "Solver",
     "SolverBase",
     "SolverConfig",
+    "SweepGroup",
+    "SweepResult",
     "TopologyConfig",
     "available_solvers",
+    "default_setup",
+    "expand_grid",
     "make_solver",
     "register_solver",
     "run_recorded",
     "solve",
+    "sweep",
 ]

@@ -18,7 +18,11 @@ incoming state buffers are donated to the outputs, so the simulator hot
 loop updates in place instead of allocating a fresh state per call.
 ``run`` wraps the *same* step body in ``lax.scan`` (static ``num_steps``)
 so a multi-step experiment dispatches one XLA computation instead of one
-Python call per iteration.
+Python call per iteration, and ``run_traced`` additionally folds metric
+recording into that scan (``lax.cond`` every ``record_every`` steps) so
+a whole recorded experiment is a single program — the batched sweep
+engine (``repro.solvers.sweep``, docs/SWEEPS.md) vmaps it over config
+grids.
 """
 from __future__ import annotations
 
@@ -37,11 +41,57 @@ __all__ = [
     "SolverBase",
     "SolveResult",
     "available_solvers",
+    "default_setup",
     "make_solver",
     "register_solver",
     "run_recorded",
     "solve",
 ]
+
+
+def _traced_scan(param_step, state, data, num_steps: int, record_every: int,
+                 metric_fn, alpha, beta):
+    """One ``lax.scan`` that steps the solver *and* records the metric.
+
+    The carry is the solver state; the stacked scan output is the
+    per-step metric, computed every ``record_every`` steps through
+    ``lax.cond`` (so off-boundary steps pay nothing) and ``NaN``-padded
+    otherwise.  After the scan the padded column is compacted **on
+    device** to the legacy ``run_recorded`` layout — metric before steps
+    ``0, record_every, 2*record_every, ...`` plus the final iterate — so
+    the whole experiment (stepping + recording) is a single XLA program
+    with no host round-trips.
+
+    ``param_step(state, data, alpha, beta)`` is the raw parameterised
+    step body; ``alpha`` / ``beta`` may be traced scalars, which is what
+    lets ``sweep`` vmap experiments over step sizes.
+
+    Returns ``(final_state, trace)``; ``trace`` is an empty array when
+    ``metric_fn`` is None.
+    """
+    chunk = record_every if record_every else num_steps
+
+    if metric_fn is None:
+        def body(s, _):
+            return param_step(s, data, alpha, beta), None
+
+        state, _ = jax.lax.scan(body, state, xs=None, length=num_steps)
+        return state, jnp.zeros((0,), jnp.float32)
+
+    aval = jax.eval_shape(metric_fn, state)
+    dtype = aval.dtype
+
+    def body(s, i):
+        val = jax.lax.cond(
+            (i % chunk) == 0,
+            lambda st: jnp.asarray(metric_fn(st), dtype),
+            lambda st: jnp.asarray(jnp.nan, dtype), s)
+        return param_step(s, data, alpha, beta), val
+
+    state, padded = jax.lax.scan(body, state, xs=jnp.arange(num_steps))
+    final = jnp.asarray(metric_fn(state), dtype)
+    trace = jnp.concatenate([padded[::chunk], final[None]])
+    return state, trace
 
 _REGISTRY: dict[str, type] = {}
 
@@ -99,6 +149,9 @@ class Solver(Protocol):
 
     def run(self, state, data, num_steps: int) -> Any: ...
 
+    def run_traced(self, state, data, num_steps: int, record_every: int = 0,
+                   metric_fn=None) -> Any: ...
+
     def samples_per_step(self, n: int) -> float: ...
 
     def hypergrad_calls_per_step(self, n: int) -> float: ...
@@ -119,14 +172,40 @@ class SolverBase:
         self.config = config
         self._step_fn = None
         self._run_fn = None
+        self._traced_fn = None
+        self._param_step = None
 
     # -- subclass hooks ---------------------------------------------------
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
         raise NotImplementedError
 
-    def _make_step(self, problem, hg_cfg, engine, n: int | None):
-        """Return the raw (non-jitted) ``step(state, data) -> state``."""
+    def _make_param_step(self, problem, hg_cfg, engine, n: int | None):
+        """Return the raw ``step(state, data, alpha, beta) -> state``.
+
+        The registry solvers implement this form: alpha/beta enter the
+        body as (possibly traced) scalars instead of baked-in closure
+        constants, so the sweep engine can ``vmap`` one compiled step
+        over a batch of step sizes.  Solvers that predate the hook may
+        override ``_make_step`` instead; they then lose only the
+        step-size batch axis (``sweep`` keys their groups on alpha/beta).
+        """
         raise NotImplementedError
+
+    def _make_step(self, problem, hg_cfg, engine, n: int | None):
+        """Return the raw (non-jitted) ``step(state, data) -> state``.
+
+        Default: bind ``config.alpha`` / ``config.beta`` into the
+        parameterised body from ``_make_param_step`` (reusing the one
+        ``build`` already constructed for this engine when available).
+        """
+        param = (self._param_step if self._param_step is not None
+                 else self._make_param_step(problem, hg_cfg, engine, n))
+        alpha, beta = self.config.alpha, self.config.beta
+
+        def step(state, data):
+            return param(state, data, alpha, beta)
+
+        return step
 
     # -- construction -----------------------------------------------------
     def build(self, problem, hg_cfg=None, *, m: int | None = None,
@@ -142,7 +221,13 @@ class SolverBase:
         spec = self.config.mixing_spec(m)
         engine = make_engine(self.config.backend, spec,
                              **dict(self.config.backend_opts))
+        try:
+            self._param_step = self._make_param_step(problem, hg_cfg,
+                                                     engine, n)
+        except NotImplementedError:
+            self._param_step = None
         raw = self._make_step(problem, hg_cfg, engine, n)
+        self._raw_step = raw
         self._step_fn = jax.jit(raw, donate_argnums=0)
 
         def scan_run(state, data, num_steps):
@@ -153,6 +238,17 @@ class SolverBase:
             return out
 
         self._run_fn = jax.jit(scan_run, static_argnums=2, donate_argnums=0)
+
+        def traced_run(state, data, num_steps, record_every, metric_fn):
+            def param(s, d, _a, _b):
+                return raw(s, d)
+
+            return _traced_scan(param, state, data, num_steps, record_every,
+                                metric_fn, self.config.alpha,
+                                self.config.beta)
+
+        self._traced_fn = jax.jit(traced_run, static_argnums=(2, 3, 4),
+                                  donate_argnums=0)
         self._problem, self._hg_cfg = problem, hg_cfg
         return self
 
@@ -185,10 +281,37 @@ class SolverBase:
             raise RuntimeError("call init()/build() before run()")
         return self._run_fn(state, data, num_steps)
 
+    def run_traced(self, state, data, num_steps: int, record_every: int = 0,
+                   metric_fn=None):
+        """``num_steps`` iterations with the metric recorded *in-scan*.
+
+        One jitted XLA program (state donated) steps the solver and
+        evaluates ``metric_fn(state) -> scalar`` every ``record_every``
+        steps (plus the final iterate) on device — no per-chunk host
+        loop, no intermediate ``block_until_ready``, no recompiles for
+        remainder chunk lengths.  ``metric_fn`` must be traceable (see
+        ``repro.core.convergence_metric_fn``) and is a static jit
+        argument: pass a stable closure, not a fresh lambda per call.
+
+        Returns ``(state, trace)`` where ``trace`` is a device array
+        laid out exactly like the legacy ``run_recorded`` list — metric
+        before steps ``0, record_every, ...`` then after the last step —
+        or an empty array when ``metric_fn`` is None.
+        """
+        if self._traced_fn is None:
+            raise RuntimeError("call init()/build() before run_traced()")
+        return self._traced_fn(state, data, num_steps, record_every,
+                               metric_fn)
+
     def warmup(self, state, data, num_steps: int | None = None) -> None:
         """Compile ``step`` (or ``run`` at ``num_steps``) without consuming
-        ``state``: the donated argument is a copy, the result discarded."""
-        copy = jax.tree_util.tree_map(jnp.array, state)
+        ``state``: the donated argument is a copy, the result discarded.
+
+        The copy is an explicit ``jnp.copy`` — ``jnp.array`` may return
+        the input buffer unchanged on some JAX versions, and an aliased
+        "copy" would let donation invalidate the caller's state.
+        """
+        copy = jax.tree_util.tree_map(jnp.copy, state)
         out = (self.step(copy, data) if num_steps is None
                else self.run(copy, data, num_steps))
         jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
@@ -262,10 +385,30 @@ class SolveResult:
     hess_per_step: float = 0.0
 
 
+def default_setup(seed: int = 0, num_agents: int = 5, n_per_agent: int = 600,
+                  d_in: int = 16, hidden: int = 20, classes: int = 5):
+    """The paper's Section-6 synthetic meta-learning instance.
+
+    Returns ``(problem, x0, y0, data)`` — the default experiment that
+    ``solve`` and ``sweep`` fall back to when no problem is supplied.
+    """
+    from repro.core import (MLPMetaProblem, init_head, init_mlp_backbone,
+                            make_synthetic_agents)
+    key = jax.random.PRNGKey(seed)
+    data = make_synthetic_agents(key, num_agents=num_agents,
+                                 n_per_agent=n_per_agent, d_in=d_in,
+                                 num_classes=classes)
+    problem = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(seed + 1), d_in, hidden=hidden)
+    y0 = init_head(jax.random.PRNGKey(seed + 2), hidden, classes)
+    return problem, x0, y0, data
+
+
 def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
           *, problem=None, hg_cfg=None, x0=None, y0=None, data=None,
           num_agents: int = 5, n_per_agent: int = 600,
-          metric_fn=None, measure_hypergrad: bool = True) -> SolveResult:
+          metric_fn=None, measure_hypergrad: bool | None = None
+          ) -> SolveResult:
     """End-to-end experiment: build, init, scan-run, record.
 
     With only ``(config, num_steps, record_every)`` this reproduces the
@@ -285,22 +428,17 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
     initial iterate times the algorithm's amortized estimator calls per
     step — see docs/HYPERGRAD.md.  The measurement is one eager
     estimator evaluation (a small fixed key set for stochastic-k
-    configs); pass ``measure_hypergrad=False`` in tight sweep loops to
-    skip it (the count fields then stay 0).
+    configs), so ``measure_hypergrad`` defaults to ``record_every > 0``:
+    callers that record nothing (sweep loops that only want the final
+    state or their own timing) are not charged for accounting they would
+    discard.  Pass True/False to force it either way (the count fields
+    stay 0 when skipped).
     """
+    if measure_hypergrad is None:
+        measure_hypergrad = record_every > 0
     if problem is None or data is None or x0 is None or y0 is None:
-        from repro.core import (HypergradConfig, MLPMetaProblem,
-                                init_head, init_mlp_backbone,
-                                make_synthetic_agents)
-        key = jax.random.PRNGKey(config.seed)
-        d_in, hidden, classes = 16, 20, 5
-        data = make_synthetic_agents(key, num_agents=num_agents,
-                                     n_per_agent=n_per_agent, d_in=d_in,
-                                     num_classes=classes)
-        problem = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
-        x0 = init_mlp_backbone(jax.random.PRNGKey(config.seed + 1), d_in,
-                               hidden=hidden)
-        y0 = init_head(jax.random.PRNGKey(config.seed + 2), hidden, classes)
+        problem, x0, y0, data = default_setup(
+            config.seed, num_agents=num_agents, n_per_agent=n_per_agent)
 
     solver = make_solver(config)
     state = solver.init(None, problem, hg_cfg, x0, y0, data)

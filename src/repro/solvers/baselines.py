@@ -29,11 +29,10 @@ class GtDsgdSolver(SolverBase):
         return init_gt_dsgd_state(problem, hg_cfg, x0, y0, data, key,
                                   self.config.resolve_batch(n))
 
-    def _make_step(self, problem, hg_cfg, engine, n):
-        alpha, beta = self.config.alpha, self.config.beta
+    def _make_param_step(self, problem, hg_cfg, engine, n):
         bs = self.config.resolve_batch(n)
 
-        def step(state, data):
+        def step(state, data, alpha, beta):
             return gt_dsgd_step(problem, hg_cfg, engine, alpha, beta, bs,
                                 state, data)
 
@@ -53,11 +52,10 @@ class DsgdSolver(SolverBase):
         m = data.inner_x.shape[0]
         return init_dsgd_state(x0, y0, m, key)
 
-    def _make_step(self, problem, hg_cfg, engine, n):
-        alpha, beta = self.config.alpha, self.config.beta
+    def _make_param_step(self, problem, hg_cfg, engine, n):
         bs = self.config.resolve_batch(n)
 
-        def step(state, data):
+        def step(state, data, alpha, beta):
             return dsgd_step(problem, hg_cfg, engine, alpha, beta, bs,
                              state, data)
 

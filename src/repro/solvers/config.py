@@ -19,6 +19,8 @@ import dataclasses
 import math
 from typing import Any, Mapping
 
+import numpy as np
+
 from repro.core.consensus import (
     MixingSpec,
     erdos_renyi_adjacency,
@@ -121,3 +123,38 @@ class SolverConfig:
         if self.batch_size is not None:
             return self.batch_size
         return self.resolve_q(n)
+
+    # -- static / batch split (the sweep engine's grouping contract) ------
+    #
+    # Two configs can share one compiled XLA program — and therefore ride
+    # the same vmap batch — exactly when everything the trace depends on
+    # matches: algorithm, topology/mixing, consensus backend (+opts),
+    # hypergrad config, and the resolved batch/q.  ``seed``, ``alpha``
+    # and ``beta`` only enter the computation as array *values* (the PRNG
+    # key and two scalars), so they are the batch axes.
+
+    BATCH_FIELDS = ("seed", "alpha", "beta")
+
+    def static_key(self) -> tuple:
+        """Hashable fingerprint of every trace-static field.
+
+        Configs with equal ``static_key()`` compile to the same program
+        and are grouped onto one ``jax.vmap`` dispatch by
+        ``repro.solvers.sweep``; the ``BATCH_FIELDS`` (seed, alpha,
+        beta) are deliberately excluded — they become the mapped axis.
+        An explicit ``MixingSpec`` is fingerprinted by value (matrix
+        bytes), not identity, so two separately-built equal topologies
+        still share a group.
+        """
+        mix = None
+        if self.mixing is not None:
+            mat = np.asarray(self.mixing.matrix)
+            mix = (mat.shape, mat.tobytes(), float(self.mixing.lam),
+                   tuple(self.mixing.neighbors), tuple(self.mixing.weights))
+        opts = tuple(sorted(self.backend_opts.items()))
+        return (self.algo, self.batch_size, self.q, mix, self.topology,
+                self.backend, opts, self.hypergrad)
+
+    def batch_values(self) -> tuple[int, float, float]:
+        """The per-experiment dynamic values: ``(seed, alpha, beta)``."""
+        return (self.seed, self.alpha, self.beta)

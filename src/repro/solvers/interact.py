@@ -20,10 +20,8 @@ class InteractSolver(SolverBase):
         # Algorithm 1 is deterministic; the key is unused.
         return init_state(problem, hg_cfg, x0, y0, data)
 
-    def _make_step(self, problem, hg_cfg, engine, n):
-        alpha, beta = self.config.alpha, self.config.beta
-
-        def step(state, data):
+    def _make_param_step(self, problem, hg_cfg, engine, n):
+        def step(state, data, alpha, beta):
             return interact_step(problem, hg_cfg, engine, alpha, beta,
                                  state, data)
 

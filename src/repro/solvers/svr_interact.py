@@ -20,12 +20,11 @@ class SvrInteractSolver(SolverBase):
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
         return init_svr_state(problem, hg_cfg, x0, y0, data, key)
 
-    def _make_step(self, problem, hg_cfg, engine, n):
-        alpha, beta = self.config.alpha, self.config.beta
+    def _make_param_step(self, problem, hg_cfg, engine, n):
         q = self.config.resolve_q(n)
         bs = self.config.resolve_batch(n)
 
-        def step(state, data):
+        def step(state, data, alpha, beta):
             return svr_interact_step(problem, hg_cfg, engine, alpha, beta,
                                      q, bs, state, data)
 

@@ -1,0 +1,287 @@
+"""The batched sweep engine: vmap-over-experiments + in-scan recording.
+
+Every Section-6 figure is a *grid* — algorithms x network sizes x
+topologies x seeds x step sizes.  Executing the grid one config at a
+time pays a Python loop, a fresh XLA dispatch, and an eager metric
+round-trip per cell.  This module runs the grid as a handful of compiled
+XLA programs instead:
+
+1.  Configs are **grouped** by ``SolverConfig.static_key()`` — everything
+    the compiled trace depends on (algo, topology, backend, hypergrad
+    config, batch/q).  Within a group only the ``BATCH_FIELDS`` (seed,
+    alpha, beta) differ, and those enter the computation as array
+    values.
+
+2.  Each group compiles **one** program: ``jax.vmap`` over the entire
+    ``init -> run_traced`` pipeline (state init from the per-experiment
+    PRNG key, ``num_steps`` solver iterations under ``lax.scan``, the
+    convergence metric recorded in-scan every ``record_every`` steps via
+    ``lax.cond``).  An 8-seed x 4-algorithm Figure-2 grid is 4 XLA
+    dispatches, not 32 Python loops.
+
+Usage::
+
+    from repro.solvers import SolverConfig, expand_grid, sweep
+
+    configs = expand_grid(SolverConfig(algo="interact"),
+                          seed=range(8), alpha=(0.3, 0.1))
+    result = sweep(configs, num_steps=40, record_every=5)
+    result.traces          # (16, 9) on-device metric traces
+    result.num_dispatches  # 1: one group, one compiled program
+
+See docs/SWEEPS.md for the grouping semantics and the recording cost
+model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solvers.api import _traced_scan, default_setup, make_solver
+from repro.solvers.config import SolverConfig
+
+__all__ = ["SweepGroup", "SweepResult", "expand_grid", "sweep"]
+
+
+def expand_grid(base: SolverConfig = SolverConfig(),
+                **axes: Sequence) -> list[SolverConfig]:
+    """The cartesian grid of ``dataclasses.replace(base, ...)`` configs.
+
+    ``expand_grid(base, seed=range(8), alpha=(0.3, 0.1))`` yields 16
+    configs in row-major order (later axes vary fastest).  Any
+    ``SolverConfig`` field is a valid axis; sweeping only the
+    ``BATCH_FIELDS`` (seed / alpha / beta) keeps the whole grid in one
+    vmap group, other axes split it into one group per distinct
+    ``static_key()``.
+    """
+    names = list(axes)
+    out = []
+    for values in itertools.product(*(axes[k] for k in names)):
+        out.append(dataclasses.replace(base, **dict(zip(names, values))))
+    return out
+
+
+@dataclasses.dataclass
+class SweepGroup:
+    """One vmap group: the configs that shared a compiled program."""
+
+    indices: list[int]          # positions into the sweep's config list
+    config: SolverConfig        # the group's representative (static fields)
+    seconds: float              # batched wall-clock (post-warmup when
+                                # measured, else first run incl. compile)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """What ``sweep`` returns.
+
+    ``traces[i]`` is config ``i``'s metric trace in the legacy
+    ``run_recorded`` layout (metric before steps 0, record_every, ...,
+    plus the final iterate); rows are aligned with the *input* config
+    order regardless of grouping.  ``states`` holds the final solver
+    states stacked per group (leading axis = group size) when
+    ``return_states=True``, else None.
+    """
+
+    configs: list[SolverConfig]
+    traces: np.ndarray                   # (num_configs, num_records)
+    groups: list[SweepGroup]
+    seconds: float                       # batched wall-clock (see measure)
+    seconds_sequential: float | None     # same grid, one config at a time
+    measured: bool = False               # True: seconds exclude compile
+    states: list[Any] | None = None
+
+    @property
+    def num_dispatches(self) -> int:
+        return len(self.groups)
+
+    @property
+    def vmap_speedup(self) -> float | None:
+        """Sequential / batched wall-clock (None unless both measured)."""
+        if self.seconds_sequential is None:
+            return None
+        return self.seconds_sequential / max(self.seconds, 1e-12)
+
+    def trace_of(self, config: SolverConfig) -> np.ndarray:
+        """The trace row of the first config matching ``config``.
+
+        Matches by ``(static_key, batch_values)`` rather than dataclass
+        equality — an explicit ``MixingSpec`` holds a numpy matrix, for
+        which ``==`` is elementwise.
+        """
+        want = (config.static_key(), config.batch_values())
+        for i, c in enumerate(self.configs):
+            if c is config or (c.static_key(), c.batch_values()) == want:
+                return self.traces[i]
+        raise KeyError(config)
+
+    def group_traces(self, group: SweepGroup) -> np.ndarray:
+        return self.traces[np.asarray(group.indices)]
+
+
+def _group_by_static_key(configs: Sequence[SolverConfig]):
+    """Order-preserving grouping: static_key -> list of config indices."""
+    groups: dict[tuple, list[int]] = {}
+    for i, cfg in enumerate(configs):
+        groups.setdefault(cfg.static_key(), []).append(i)
+    return list(groups.values())
+
+
+def _experiment_fn(solver, data, num_steps: int, record_every: int,
+                   metric_fn):
+    """The pure per-experiment pipeline: ``(key, alpha, beta, x0, y0)``
+    -> ``(final_state, trace)``.
+
+    Traceable end to end (init included), so it can be ``jax.vmap``-ped
+    over stacked keys / step sizes / inits.  Solvers that predate the
+    parameterised step hook fall back to the config-bound body — their
+    groups are keyed on alpha/beta by the caller, so the ignored scalars
+    are constant within a group.
+    """
+    problem, hg_cfg = solver._problem, solver._hg_cfg
+    param = solver._param_step
+    if param is None:
+        raw = solver._raw_step          # config-bound alpha/beta
+
+        def param(state, d, _a, _b):
+            return raw(state, d)
+
+    def one(key, alpha, beta, x0, y0):
+        state = solver._init_state(key, problem, hg_cfg, x0, y0, data)
+        return _traced_scan(param, state, data, num_steps, record_every,
+                            metric_fn, alpha, beta)
+
+    return one
+
+
+def sweep(configs: Sequence[SolverConfig], num_steps: int,
+          record_every: int = 0, *, problem=None, x0=None, y0=None,
+          data=None, num_agents: int = 5, n_per_agent: int = 600,
+          metric_fn=None, x0_stack=None, y0_stack=None,
+          measure: bool = False, compare_sequential: bool = False,
+          return_states: bool = False) -> SweepResult:
+    """Run a grid of experiments as one compiled program per vmap group.
+
+    Args:
+      configs: the grid (see ``expand_grid``); grouped automatically by
+        ``SolverConfig.static_key()`` — same algo/topology/backend/
+        hypergrad per group, seed/alpha/beta batched inside it.
+      num_steps / record_every: shared by every experiment (they are
+        trace-static).  ``record_every=0`` disables recording.
+      problem / x0 / y0 / data: the problem instance; defaults to the
+        paper's Section-6 synthetic setup (``default_setup``, seeded by
+        the first config).
+      metric_fn: traceable ``state -> scalar`` recorded in-scan;
+        defaults to the eq.-(11) convergence metric
+        (``repro.core.convergence_metric_fn``) when ``record_every > 0``.
+      x0_stack / y0_stack: optional per-experiment initial points —
+        pytrees with a leading axis of ``len(configs)``, aligned with
+        the config order (they join seed/alpha/beta as vmap axes).
+        When omitted every experiment starts from the shared ``x0``/
+        ``y0`` exactly as the paper does.
+      measure: re-execute each warmed batched program and report that
+        wall-clock in ``seconds`` (compile excluded) — the benchmarks'
+        mode.  Default False: every group runs **once** and ``seconds``
+        is the first-run wall-clock including compilation (callers that
+        want results shouldn't pay for the grid twice).
+      compare_sequential: also run the same grid one config at a time
+        through the *same* compiled single-experiment function and
+        record the wall-clock, so ``result.vmap_speedup`` measures
+        batching alone (identical program, identical values).  Implies
+        ``measure`` (both paths warmed before timing).
+      return_states: keep the final solver states (stacked per group).
+
+    Returns a ``SweepResult`` with traces aligned to the input order.
+    """
+    configs = list(configs)
+    measure = measure or compare_sequential
+    if not configs:
+        raise ValueError("sweep needs at least one config")
+    if problem is None or data is None or x0 is None or y0 is None:
+        problem, x0, y0, data = default_setup(
+            configs[0].seed, num_agents=num_agents, n_per_agent=n_per_agent)
+    m = data.inner_x.shape[0]
+    n = data.inner_x.shape[1] + data.outer_x.shape[1]
+
+    traces = [None] * len(configs)
+    states: list[Any] = [None] * len(configs) if return_states else None
+    groups: list[SweepGroup] = []
+    seconds = 0.0
+    seconds_seq: float | None = 0.0 if compare_sequential else None
+
+    for indices in _group_by_static_key(configs):
+        rep = configs[indices[0]]
+        solver = make_solver(rep).build(problem, None, m=m, n=n)
+        if solver._param_step is None and any(
+                (configs[i].alpha, configs[i].beta) != (rep.alpha, rep.beta)
+                for i in indices):
+            raise ValueError(
+                f"solver {rep.algo!r} implements only the legacy "
+                "_make_step hook (config-bound step sizes); it cannot "
+                "batch configs with different alpha/beta — implement "
+                "_make_param_step or sweep step sizes sequentially")
+        group_metric = metric_fn
+        if group_metric is None and record_every:
+            from repro.core import convergence_metric_fn
+            group_metric = convergence_metric_fn(problem, solver._hg_cfg,
+                                                 data)
+
+        keys = jnp.stack([jax.random.PRNGKey(configs[i].seed)
+                          for i in indices])
+        alphas = jnp.asarray([configs[i].alpha for i in indices])
+        betas = jnp.asarray([configs[i].beta for i in indices])
+
+        take = lambda stack: jax.tree_util.tree_map(
+            lambda leaf: leaf[np.asarray(indices)], stack)
+        gx = take(x0_stack) if x0_stack is not None else x0
+        gy = take(y0_stack) if y0_stack is not None else y0
+        x_ax = 0 if x0_stack is not None else None
+        y_ax = 0 if y0_stack is not None else None
+
+        one = _experiment_fn(solver, data, num_steps, record_every,
+                             group_metric)
+        batched = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, x_ax, y_ax)))
+
+        t0 = time.perf_counter()
+        out = batched(keys, alphas, betas, gx, gy)  # compile + first run
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+        took = time.perf_counter() - t0
+        if measure:     # re-run warmed so `seconds` excludes compilation
+            t0 = time.perf_counter()
+            out = batched(keys, alphas, betas, gx, gy)
+            jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+            took = time.perf_counter() - t0
+        seconds += took
+
+        g_state, g_traces = out
+        g_traces = np.asarray(g_traces)
+        for row, i in enumerate(indices):
+            traces[i] = g_traces[row]
+            if return_states:
+                states[i] = jax.tree_util.tree_map(lambda l: l[row], g_state)
+        groups.append(SweepGroup(indices=indices, config=rep, seconds=took))
+
+        if compare_sequential:
+            single = jax.jit(one)
+            pick = lambda tree, r: jax.tree_util.tree_map(
+                lambda l: l[r], tree)
+            sx = lambda r: pick(gx, r) if x_ax == 0 else gx
+            sy = lambda r: pick(gy, r) if y_ax == 0 else gy
+            warm = single(keys[0], alphas[0], betas[0], sx(0), sy(0))
+            jax.block_until_ready(jax.tree_util.tree_leaves(warm)[0])
+            t0 = time.perf_counter()
+            for r in range(len(indices)):
+                out_r = single(keys[r], alphas[r], betas[r], sx(r), sy(r))
+                jax.block_until_ready(jax.tree_util.tree_leaves(out_r)[0])
+            seconds_seq += time.perf_counter() - t0
+
+    return SweepResult(configs=configs, traces=np.stack(traces),
+                       groups=groups, seconds=seconds,
+                       seconds_sequential=seconds_seq, measured=measure,
+                       states=states)

@@ -150,6 +150,25 @@ def test_warmup_does_not_consume_state(setup):
     assert int(state.t) == 2
 
 
+def test_warmup_copy_does_not_alias_caller_state(setup):
+    """Regression: the warmup "copy" must be a real copy.  tree_map with
+    ``jnp.array`` can return the *same* buffer on some JAX versions, and
+    donating an alias invalidates the caller's state.  After warmup every
+    leaf must still be readable and hold its original value."""
+    data, prob, x0, y0, _, hg = setup
+    solver = make_solver(_config(setup, "svr-interact"))
+    state = solver.init(None, prob, hg, x0, y0, data)
+    before = [np.asarray(l).copy()
+              for l in jax.tree_util.tree_leaves(state)]
+    solver.warmup(state, data)          # step-path warmup (donated copy)
+    solver.warmup(state, data, 3)       # scan-path warmup
+    after = jax.tree_util.tree_leaves(state)
+    for b, a in zip(before, after):
+        assert not getattr(a, "is_deleted", lambda: False)(), \
+            "warmup donated the caller's buffer"
+        np.testing.assert_array_equal(b, np.asarray(a))
+
+
 def test_deprecated_shims_warn(setup):
     data, prob, x0, y0, spec, hg = setup
     with pytest.warns(DeprecationWarning):

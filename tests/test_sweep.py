@@ -1,0 +1,250 @@
+"""The batched sweep engine: in-scan recording + vmap-over-experiments.
+
+Contracts:
+
+* ``run_traced``'s on-device trace is bit-identical to the legacy
+  chunked ``run_recorded`` trace for every algorithm (same step bodies,
+  same metric computation — only the dispatch boundary moves).
+* A vmapped sweep reproduces the per-config ``run_traced`` runs over
+  the same seeds: bitwise for the final trace entries up to batched
+  ``dot_general`` reassociation, asserted at float32-tight tolerance
+  and exactly equal initial entries.
+* Grouping: static_key splits on algo/topology/backend, batches on
+  seed/alpha/beta; step sizes batch into one dispatch.
+* Donation safety: the caller's state/inits survive warmup,
+  ``run_traced`` and ``sweep``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HypergradConfig,
+    MLPMetaProblem,
+    convergence_metric_fn,
+    erdos_renyi_adjacency,
+    init_head,
+    init_mlp_backbone,
+    laplacian_mixing,
+    make_synthetic_agents,
+)
+from repro.solvers import (
+    SolverConfig,
+    expand_grid,
+    make_solver,
+    run_recorded,
+    solve,
+    sweep,
+)
+
+M, N = 4, 80
+ALGOS = ("interact", "svr-interact", "gt-dsgd", "d-sgd")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    data = make_synthetic_agents(key, num_agents=M, n_per_agent=N,
+                                 d_in=8, num_classes=3)
+    prob = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(1), 8, hidden=8)
+    y0 = init_head(jax.random.PRNGKey(2), 8, 3)
+    spec = laplacian_mixing(erdos_renyi_adjacency(M, 0.5, seed=3))
+    hg = HypergradConfig(method="cg", cg_iters=8)
+    # cheap but real metric: the eq.-11 computation at a small inner budget
+    metric = convergence_metric_fn(prob, hg, data, inner_steps=20)
+    return prob, x0, y0, data, spec, hg, metric
+
+
+def _config(setup, algo, **kw):
+    _, _, _, _, spec, hg, _ = setup
+    base = dict(algo=algo, alpha=0.1, beta=0.1, batch_size=6, q=5,
+                mixing=spec, hypergrad=hg, seed=7)
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+def _init(setup, cfg):
+    prob, x0, y0, data, _, hg, _ = setup
+    solver = make_solver(cfg)
+    return solver, solver.init(None, prob, hg, x0, y0, data)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("num_steps,record_every", [(6, 3), (7, 3)])
+def test_run_traced_bitwise_matches_run_recorded(setup, algo, num_steps,
+                                                 record_every):
+    """In-scan recording == the legacy chunked host loop, bit for bit —
+    including the remainder-chunk case (7 % 3 != 0)."""
+    _, _, _, data, _, _, metric = setup
+    solver, state = _init(setup, _config(setup, algo))
+    copy = jax.tree_util.tree_map(jnp.copy, state)
+    _, legacy, _ = run_recorded(solver, copy, data, num_steps, record_every,
+                                metric_fn=lambda st: float(metric(st)))
+    _, traced = solver.run_traced(state, data, num_steps, record_every,
+                                  metric)
+    traced = np.asarray(traced)
+    assert traced.shape == (len(legacy),)
+    np.testing.assert_array_equal(
+        np.asarray(legacy, traced.dtype), traced)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_run_traced_final_state_matches_run(setup, algo):
+    _, _, _, data, _, _, metric = setup
+    solver, state = _init(setup, _config(setup, algo))
+    via_run = solver.run(jax.tree_util.tree_map(jnp.copy, state), data, 5)
+    via_traced, _ = solver.run_traced(state, data, 5, 2, metric)
+    for a, b in zip(jax.tree_util.tree_leaves(via_run),
+                    jax.tree_util.tree_leaves(via_traced)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_traced_without_metric_returns_empty_trace(setup):
+    _, _, _, data, _, _, _ = setup
+    solver, state = _init(setup, _config(setup, "interact"))
+    out, trace = solver.run_traced(state, data, 4)
+    assert np.asarray(trace).shape == (0,)
+    assert int(out.t) == 4
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_sweep_matches_per_config_run_traced(setup, algo):
+    """The vmapped group reproduces each config's solo run_traced.
+
+    Batched ``dot_general`` may reassociate float reductions, so the
+    comparison is exact-dtype allclose at float32-tight tolerance (and
+    the shared initial metric must agree exactly).
+    """
+    prob, x0, y0, data, _, _, metric = setup
+    configs = [_config(setup, algo, seed=s) for s in (0, 1, 2)]
+    res = sweep(configs, 5, 2, problem=prob, x0=x0, y0=y0, data=data,
+                metric_fn=metric)
+    assert res.num_dispatches == 1
+    assert res.traces.shape == (3, 4)   # records at steps 0,2,4 + final
+    for i, cfg in enumerate(configs):
+        solver, state = _init(setup, cfg)
+        _, solo = solver.run_traced(state, data, 5, 2, metric)
+        solo = np.asarray(solo)
+        np.testing.assert_array_equal(solo[0], res.traces[i][0])
+        np.testing.assert_allclose(solo, res.traces[i], rtol=2e-5)
+
+
+def test_sweep_groups_by_static_key(setup):
+    """seed/alpha/beta batch together; algo and topology split groups."""
+    prob, x0, y0, data, spec, hg, metric = setup
+    other = laplacian_mixing(erdos_renyi_adjacency(M, 0.9, seed=11))
+    configs = (
+        [_config(setup, "interact", seed=s, alpha=a)
+         for s in (0, 1) for a in (0.1, 0.05)]          # 4 -> one group
+        + [_config(setup, "gt-dsgd", seed=s) for s in (0, 1)]
+        + [_config(setup, "interact", mixing=other)]    # new topology
+    )
+    res = sweep(configs, 3, 0, problem=prob, x0=x0, y0=y0, data=data)
+    assert res.num_dispatches == 3
+    assert [g.indices for g in res.groups] == [[0, 1, 2, 3], [4, 5], [6]]
+    # value-fingerprinted mixing: a separately-built equal spec groups too
+    same = laplacian_mixing(erdos_renyi_adjacency(M, 0.5, seed=3))
+    assert (_config(setup, "interact").static_key()
+            == _config(setup, "interact", mixing=same).static_key())
+
+
+def test_sweep_step_sizes_are_a_batch_axis(setup):
+    """One compiled program covers a learning-rate grid, and each row
+    matches the config-bound solo run of that step size."""
+    prob, x0, y0, data, _, _, metric = setup
+    configs = [_config(setup, "interact", alpha=a, beta=a)
+               for a in (0.1, 0.05, 0.01)]
+    res = sweep(configs, 4, 2, problem=prob, x0=x0, y0=y0, data=data,
+                metric_fn=metric)
+    assert res.num_dispatches == 1
+    for i, cfg in enumerate(configs):
+        solver, state = _init(setup, cfg)
+        _, solo = solver.run_traced(state, data, 4, 2, metric)
+        np.testing.assert_allclose(np.asarray(solo), res.traces[i],
+                                   rtol=2e-5)
+    # different step sizes genuinely produce different trajectories
+    assert not np.array_equal(res.traces[0], res.traces[2])
+
+
+def test_sweep_sequential_comparison_and_result_shape(setup):
+    prob, x0, y0, data, _, _, metric = setup
+    configs = expand_grid(_config(setup, "gt-dsgd"), seed=(0, 1))
+    res = sweep(configs, 3, 1, problem=prob, x0=x0, y0=y0, data=data,
+                metric_fn=metric, compare_sequential=True,
+                return_states=True)
+    assert res.seconds > 0 and res.seconds_sequential > 0
+    assert res.vmap_speedup is not None
+    assert len(res.states) == 2
+    assert int(res.states[0].t) == 3
+    np.testing.assert_array_equal(res.trace_of(configs[1]), res.traces[1])
+
+
+def test_sweep_default_setup_and_default_metric():
+    """No problem/data supplied: the Section-6 default setup is built and
+    the eq.-11 metric recorded (small steps to keep CI fast)."""
+    res = sweep([SolverConfig(algo="d-sgd", batch_size=4, seed=s)
+                 for s in (0, 1)], 2, 1, num_agents=3, n_per_agent=24)
+    assert res.traces.shape == (2, 3)
+    assert np.isfinite(res.traces).all()
+
+
+def test_sweep_donation_safety_inputs_survive(setup):
+    """sweep must not consume the caller's x0/y0/data/init state buffers:
+    batched pipelines run un-donated, so the same inputs drive every
+    group and remain usable afterwards."""
+    prob, x0, y0, data, _, hg, metric = setup
+    x_before = np.asarray(jax.tree_util.tree_leaves(x0)[0]).copy()
+    configs = [_config(setup, "interact", seed=s) for s in (0, 1)]
+    sweep(configs, 3, 0, problem=prob, x0=x0, y0=y0, data=data)
+    x_after = np.asarray(jax.tree_util.tree_leaves(x0)[0])
+    np.testing.assert_array_equal(x_before, x_after)
+    # and the inputs still feed an eager init + step
+    solver, state = _init(setup, configs[0])
+    assert int(solver.step(state, data).t) == 1
+
+
+def test_run_traced_donates_like_run(setup):
+    """run_traced donates the incoming state (hot-loop semantics);
+    warmup-style copies keep a caller's state usable."""
+    _, _, _, data, _, _, metric = setup
+    solver, state = _init(setup, _config(setup, "interact"))
+    keep = jax.tree_util.tree_map(jnp.copy, state)
+    solver.run_traced(state, data, 2, 1, metric)
+    out, _ = solver.run_traced(keep, data, 2, 1, metric)   # keep usable
+    assert int(out.t) == 2
+
+
+def test_expand_grid_row_major_order(setup):
+    grid = expand_grid(_config(setup, "interact"), seed=(0, 1),
+                       alpha=(0.1, 0.2))
+    assert [(c.seed, c.alpha) for c in grid] == [
+        (0, 0.1), (0, 0.2), (1, 0.1), (1, 0.2)]
+
+
+def test_solve_measure_hypergrad_defaults_to_recording(setup):
+    """record_every=0 sweep-style calls skip the eager hypergrad
+    accounting; recording calls keep it; both remain forcible."""
+    prob, x0, y0, data, _, hg, _ = setup
+    kw = dict(problem=prob, hg_cfg=hg, x0=x0, y0=y0, data=data)
+    quiet = solve(_config(setup, "interact"), 2, 0, **kw)
+    assert quiet.hvp_per_step == 0.0 and quiet.grad_per_step == 0.0
+    forced = solve(_config(setup, "interact"), 2, 0,
+                   measure_hypergrad=True, **kw)
+    assert forced.hvp_per_step > 0
+    recorded = solve(_config(setup, "interact"), 2, 1,
+                     metric_fn=lambda st: 0.0, **kw)
+    assert recorded.hvp_per_step > 0
+
+
+def test_batch_values_and_batch_fields():
+    cfg = SolverConfig(seed=3, alpha=0.2, beta=0.4)
+    assert cfg.batch_values() == (3, 0.2, 0.4)
+    assert SolverConfig.BATCH_FIELDS == ("seed", "alpha", "beta")
+    # static_key ignores the batch fields, splits on everything else
+    assert cfg.static_key() == SolverConfig().static_key()
+    assert (SolverConfig(algo="d-sgd").static_key()
+            != SolverConfig().static_key())
