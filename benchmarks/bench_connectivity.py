@@ -1,26 +1,48 @@
-"""Paper Fig. 4: impact of edge-connectivity probability p_c.
+"""Paper Fig. 4: impact of the network on convergence — and the padded
+sweep over the network itself.
 
-Claim validated: the metric M is relatively insensitive to p_c in
-{0.3, 0.5, 0.7}, increasing slightly as the network gets sparser.
+Two grids share this suite:
 
-Each p_c realises a different mixing matrix, so the sweep engine groups
-the grid into one compiled program per (algo, p_c) — seeds batch inside
-each group (6 dispatches for 6 x len(seeds) cells).
+* **Edge-connectivity** (the figure's claim): the metric M is relatively
+  insensitive to p_c in {0.3, 0.5, 0.7}, increasing slightly as the
+  network gets sparser.  Each p_c realises a different mixing matrix, so
+  the plain sweep engine groups the grid into one compiled program per
+  (algo, p_c) — seeds batch inside each group.
+
+* **Network size x topology** (the padded-batching claim): an
+  m x topology x algorithm grid used to compile one XLA program per
+  (m, topology) cell because the agent count changes every state shape.
+  Under ``sweep(..., pad_agents=True)`` every cell's mixing matrix is
+  ghost-padded to the grid's largest network and the whole grid runs as
+  **one dispatch per algorithm**, active-agent traces bitwise equal to
+  the per-size runs (dense backend).  The cold (compile-inclusive)
+  wall-clock ratio is the ``pad_speedup`` headline in
+  ``BENCH_sweep.json`` — what padding actually buys is deleting the
+  per-size compiles/dispatches, so the honest baseline is the one-
+  program-per-cell walk, compiles included.  ``benchmarks/check_gates``
+  gates ``pad_speedup >= 1``, the bitwise ``pad_trace_match``, and the
+  dispatch collapse in CI.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from benchmarks.common import (Row, make_setup, metric_fn_of,
                                record_sweep_section)
-from repro.solvers import SolverConfig, expand_grid, sweep
+from repro.core import masked_convergence_metric_fn
+from repro.solvers import SolverConfig, TopologyConfig, expand_grid, sweep
 
 ITERS = 40
 SEEDS = (0, 1, 2)
 
+PAD_SIZES = (4, 8)                       # network sizes m in the pad grid
+PAD_TOPOLOGIES = ("ring", "erdos-renyi")
+PAD_ALGOS = ("interact", "svr-interact")
 
-def run(smoke: bool = False) -> list:
+
+def _connectivity_grid(smoke: bool, rows: list, records: list) -> None:
     iters = 10 if smoke else ITERS
     seeds = SEEDS[:2] if smoke else SEEDS
-    rows, records = [], []
     finals = {}
     for pc in (0.3, 0.5, 0.7):
         s = make_setup(m=5, p_connect=pc)
@@ -54,7 +76,110 @@ def run(smoke: bool = False) -> list:
                         f"max_over_min={ratio:.2f};holds={ratio < 10.0}"))
         records.append({"name": f"fig4_claim_{algo}",
                         "max_over_min": ratio, "holds": ratio < 10.0})
-    record_sweep_section("connectivity", records)
+
+
+def _padded_network_grid(smoke: bool, rows: list,
+                         records: list) -> dict:
+    """The m x topology x algorithm grid, padded vs per-cell — returns
+    the headline fields the CI gate asserts."""
+    iters = 10 if smoke else ITERS
+    seeds = SEEDS[:2] if smoke else SEEDS
+    rec = 5
+    sizes, topos, algos = PAD_SIZES, PAD_TOPOLOGIES, PAD_ALGOS
+
+    s0 = make_setup(m=sizes[0])          # m-independent problem/x0/y0/hg
+    datas = {m: (s0.data if m == s0.m else make_setup(m=m).data)
+             for m in sizes}
+    mask_fn = masked_convergence_metric_fn(s0.prob, s0.hg)
+
+    configs = expand_grid(
+        SolverConfig(hypergrad=s0.hg),
+        algo=algos, num_agents=sizes,
+        topology=tuple(TopologyConfig(kind=t) for t in topos),
+        seed=seeds)
+
+    # -- unpadded baseline: one cold sweep per (algo, m, topology) cell,
+    # exactly the per-group dispatch pattern padding collapses.  Cold
+    # (compile included) on both sides: the compiles ARE the cost.
+    unpadded_traces = {}
+    cell_seconds: dict[tuple, float] = {}
+    for algo in algos:
+        for m in sizes:
+            for topo in topos:
+                idx, cell = zip(*[
+                    (i, c) for i, c in enumerate(configs)
+                    if (c.algo, c.num_agents, c.topology.kind)
+                    == (algo, m, topo)])
+                mfn = (lambda d, na: lambda st: mask_fn(st, d, na))(
+                    datas[m], jnp.int32(m))
+                res = sweep(cell, iters, rec, problem=s0.prob, x0=s0.x0,
+                            y0=s0.y0, data=datas[m], metric_fn=mfn)
+                cell_seconds[(algo, m, topo)] = res.seconds
+                for r, i in enumerate(idx):
+                    unpadded_traces[i] = res.traces[r]
+                mean = res.traces.mean(axis=0)
+                records.append({
+                    "name": f"fig4_pad_cell_{algo}_m{m}_{topo}",
+                    "algo": algo, "m": m, "topology": topo,
+                    "seeds": len(seeds), "iters": iters,
+                    "record_every": rec,
+                    "seconds_unpadded_cold": res.seconds,
+                    "final_metric": float(mean[-1]),
+                    "trace_mean": mean.tolist()})
+
+    # -- padded: the same grid, one cold dispatch per algorithm
+    res_pad = sweep(configs, iters, rec, problem=s0.prob, x0=s0.x0,
+                    y0=s0.y0, data=datas, metric_fn=mask_fn,
+                    pad_agents=True)
+
+    match = all(
+        (unpadded_traces[i] == res_pad.traces[i]).all()
+        for i in range(len(configs)))
+    dispatches_unpadded = len(cell_seconds)
+    dispatches_padded = res_pad.num_dispatches
+
+    speedups = {}
+    for group in res_pad.groups:
+        algo = group.config.algo
+        seq = sum(sec for (a, _, _), sec in cell_seconds.items()
+                  if a == algo)
+        speedups[algo] = seq / max(group.seconds, 1e-12)
+        us = 1e6 * group.seconds / (len(group.indices) * iters)
+        rows.append(Row(
+            f"fig4_pad_grid_{algo}", us,
+            f"pad_to={group.pad_to};cells={len(group.indices)};"
+            f"seconds_padded_cold={group.seconds:.3f};"
+            f"seconds_unpadded_cold={seq:.3f};"
+            f"pad_speedup={speedups[algo]:.2f}"))
+        records.append({
+            "name": f"fig4_pad_grid_{algo}", "algo": algo,
+            "pad_to": group.pad_to,
+            "sizes": list(sizes), "topologies": list(topos),
+            "seeds": len(seeds), "iters": iters,
+            "seconds_padded_cold": group.seconds,
+            "seconds_unpadded_cold": seq,
+            "pad_speedup": speedups[algo]})
+
+    headline = {
+        "pad_speedup": min(speedups.values()),
+        "pad_trace_match": bool(match),
+        "pad_dispatches_unpadded": dispatches_unpadded,
+        "pad_dispatches_padded": dispatches_padded,
+    }
+    rows.append(Row(
+        "fig4_pad_engine", 0.0,
+        f"min_pad_speedup={headline['pad_speedup']:.2f};"
+        f"pad_trace_match={match};"
+        f"dispatches={dispatches_unpadded}->{dispatches_padded}"))
+    return headline
+
+
+def run(smoke: bool = False) -> list:
+    rows: list = []
+    records: list = []
+    _connectivity_grid(smoke, rows, records)
+    headline = _padded_network_grid(smoke, rows, records)
+    record_sweep_section("connectivity", records, **headline)
     return rows
 
 

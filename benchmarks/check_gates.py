@@ -1,0 +1,187 @@
+"""The consolidated CI bench gate: validate every ``BENCH_*.json`` dump.
+
+The bench-smoke CI job used to assert a couple of ``BENCH_sweep.json``
+headline fields from an inline heredoc in the workflow file — invisible
+to local runs and silent about every other dump.  This module is that
+gate as code: it checks the headline fields of *all* known benchmark
+dumps (sweep speedups >= 1, bitwise parity flags, padded-batching
+speedup and dispatch collapse, hypergradient accounting present) and is
+runnable locally exactly as CI runs it:
+
+    PYTHONPATH=src BENCH_JSON_DIR=bench-artifacts \
+        python -m benchmarks.check_gates
+
+Dumps are searched in ``$BENCH_JSON_DIR`` (or the cwd).  A *known* dump
+that is missing fails the gate — the benches write them uncondition-
+ally, so absence means the harness rotted; pass ``--allow-missing``
+when deliberately checking a partial run.  Unknown ``BENCH_*.json``
+files only have to parse.  Exit status is the CI contract: 0 iff every
+gate holds.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+class GateFailure(Exception):
+    """One failed gate (message names the dump, field and bound)."""
+
+
+class MissingGateField(GateFailure):
+    """A headline field is absent — a partial run under --allow-missing
+    skips these; a full CI run fails on them."""
+
+
+def _need(dump: dict, field: str, path: str):
+    if field not in dump:
+        raise MissingGateField(f"{path}: headline field {field!r} missing")
+    return dump[field]
+
+
+def check_sweep(dump: dict, path: str) -> list[str]:
+    """BENCH_sweep.json: batching + padding regression gates.
+
+    * ``vmap_speedup`` / ``scan_speedup`` >= 1 — the batched sweep and
+      the scan runner must not lose to the sequential/python-loop
+      baselines they replaced.
+    * ``trace_bitwise_match`` — in-scan recording reproduces the legacy
+      chunked trace bit for bit.
+    * ``pad_speedup`` >= 1 — the padded m x topology grid (one program
+      per algorithm, compile included) must not lose to the one-program-
+      per-(m, topology) walk it collapses.
+    * ``pad_trace_match`` — padded active-agent traces are bitwise equal
+      to the unpadded per-size runs (dense backend).
+    * ``pad_dispatches_padded < pad_dispatches_unpadded`` — padding must
+      actually collapse dispatch groups, not just relabel them.
+    """
+    out = []
+
+    def ge1(field):
+        val = _need(dump, field, path)
+        if not val >= 1.0:
+            raise GateFailure(f"{path}: {field}={val:.3f} < 1")
+        out.append(f"{field}={val:.2f}")
+
+    def true(field):
+        if _need(dump, field, path) is not True:
+            raise GateFailure(f"{path}: {field} is not True")
+        out.append(f"{field}=True")
+
+    ge1("vmap_speedup")
+    ge1("scan_speedup")
+    true("trace_bitwise_match")
+    ge1("pad_speedup")
+    true("pad_trace_match")
+    unpad = _need(dump, "pad_dispatches_unpadded", path)
+    pad = _need(dump, "pad_dispatches_padded", path)
+    if not pad < unpad:
+        raise GateFailure(
+            f"{path}: padding did not collapse dispatches "
+            f"({pad} padded vs {unpad} unpadded)")
+    out.append(f"dispatches {unpad}->{pad}")
+    return out
+
+
+def check_hypergrad(dump: dict, path: str) -> list[str]:
+    """BENCH_hypergrad.json: measured accounting present on every row.
+
+    Theorem-1/2 complexity claims hang off the *measured* per-call
+    hvp/grad/hess counts; a row without them means the counting
+    LinearOperator got bypassed.
+    """
+    rows = _need(dump, "rows", path)
+    if not rows:
+        raise GateFailure(f"{path}: no benchmark rows")
+    for row in rows:
+        for field in ("hvp", "grad", "hess"):
+            val = row.get(field)
+            if not isinstance(val, (int, float)) or val < 0:
+                raise GateFailure(
+                    f"{path}: row {row.get('name', '?')!r} lacks a "
+                    f"measured {field!r} count (got {val!r})")
+    return [f"{len(rows)} rows carry hvp/grad/hess counts"]
+
+
+# Known dumps: file name -> validator.  Every generator in benchmarks/
+# that dumps a BENCH_*.json should register its gate here so the CI
+# bench-smoke job (and anyone running the module locally) checks it.
+GATES = {
+    "BENCH_sweep.json": check_sweep,
+    "BENCH_hypergrad.json": check_hypergrad,
+}
+
+
+def run_gates(json_dir: str, allow_missing: bool = False) -> int:
+    """Validate every dump in ``json_dir``; returns the failure count."""
+    failures = 0
+    seen = set()
+    for name in sorted(GATES):
+        path = os.path.join(json_dir, name)
+        if not os.path.exists(path):
+            msg = f"MISSING {path}"
+            if allow_missing:
+                print(f"skip: {msg}")
+                continue
+            print(f"FAIL: {msg} (pass --allow-missing for partial runs)")
+            failures += 1
+            continue
+        seen.add(os.path.abspath(path))
+        try:
+            with open(path) as fh:
+                dump = json.load(fh)
+            notes = GATES[name](dump, name)
+            print(f"ok: {name}: " + "; ".join(notes))
+        except MissingGateField as exc:
+            # BENCH_sweep.json is rewritten after every contributing
+            # suite, so a partial run legitimately lacks the headline
+            # fields of the suites that didn't run.
+            if allow_missing:
+                print(f"skip: {exc} (partial run)")
+            else:
+                print(f"FAIL: {exc}")
+                failures += 1
+        except GateFailure as exc:
+            print(f"FAIL: {exc}")
+            failures += 1
+        except (OSError, json.JSONDecodeError, TypeError) as exc:
+            print(f"FAIL: {name}: unreadable dump ({exc})")
+            failures += 1
+
+    for path in sorted(glob.glob(os.path.join(json_dir, "BENCH_*.json"))):
+        if os.path.abspath(path) in seen:
+            continue
+        base = os.path.basename(path)
+        if base in GATES:
+            continue  # already reported missing/failed above
+        try:
+            with open(path) as fh:
+                json.load(fh)
+            print(f"ok: {base}: no registered gate, parses")
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"FAIL: {base}: unreadable dump ({exc})")
+            failures += 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=None,
+                    help="dump directory (default: $BENCH_JSON_DIR or cwd)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="skip (instead of fail) absent known dumps and "
+                         "absent headline fields — for partial local runs; "
+                         "out-of-bound values present still fail")
+    args = ap.parse_args(argv)
+    json_dir = args.dir or os.environ.get("BENCH_JSON_DIR", os.getcwd())
+    failures = run_gates(json_dir, allow_missing=args.allow_missing)
+    if failures:
+        print(f"{failures} gate(s) failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

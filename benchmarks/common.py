@@ -129,9 +129,11 @@ def run_algo(s: Setup, algo: str, iters: int, record_every: int = 5,
 #
 # The three figure suites each contribute a section; the file is
 # rewritten after every contribution so the dump is complete whatever
-# subset of suites ran (and in whatever order).  Headline fields
-# (vmap_speedup / scan_speedup / trace_bitwise_match) come from the fig2
-# section — CI asserts on them (see .github/workflows/ci.yml).
+# subset of suites ran (and in whatever order).  Headline fields come
+# from fig2 (vmap_speedup / scan_speedup / trace_bitwise_match) and
+# fig4's padded network grid (pad_speedup / pad_trace_match /
+# pad_dispatches_*) — `python -m benchmarks.check_gates` asserts them,
+# locally and in the CI bench-smoke job.
 
 _SWEEP_DUMP: dict = {"bench": "sweep", "jax": jax.__version__,
                      "sections": {}}

@@ -3,6 +3,14 @@
 Works for any topology; leaves carry a leading agent dim of size m.  This
 is the single-host reference every other backend is validated against
 (tests/test_consensus_backends.py).
+
+The matrix operand may be a concrete ``MixingSpec``/array **or a traced
+jax value** — the padded sweep engine (docs/SWEEPS.md) constructs a
+``DenseEngine`` inside the vmapped experiment trace, with each
+experiment's ghost-padded mixing matrix as a mapped operand rather than
+a compile-time constant.  ``DenseEngine.padded`` builds the ghost-padded
+form directly: identity self-loop rows keep the matrix doubly stochastic
+and leave active agents' combines bitwise unchanged.
 """
 from __future__ import annotations
 
@@ -10,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.consensus.engine import ConsensusEngine
-from repro.core.consensus import MixingSpec, mix_pytree
+from repro.core.consensus import MixingSpec, mix_pytree, pad_mixing
 
 __all__ = ["DenseEngine"]
 
@@ -22,6 +30,12 @@ class DenseEngine(ConsensusEngine):
     def __init__(self, mixing: MixingSpec | jax.Array):
         mat = mixing.matrix if isinstance(mixing, MixingSpec) else mixing
         self.matrix = jnp.asarray(mat)
+
+    @classmethod
+    def padded(cls, mixing: MixingSpec | jax.Array,
+               pad_to: int) -> "DenseEngine":
+        """A dense engine over the ghost-padded (pad_to, pad_to) matrix."""
+        return cls(pad_mixing(mixing, pad_to))
 
     def mix(self, tree, *, dp_key=None, agent_index=None):
         del dp_key, agent_index  # single-host backend: no wire, no DP

@@ -6,6 +6,7 @@ from repro.core.bilevel import (
     init_head,
     init_mlp_backbone,
     make_synthetic_agents,
+    pad_agent_data,
 )
 from repro.core.consensus import (
     MixingSpec,
@@ -13,6 +14,7 @@ from repro.core.consensus import (
     laplacian_mixing,
     metropolis_mixing,
     mix_pytree,
+    pad_mixing,
     ring_mixing,
     second_eigenvalue,
     torus_adjacency,
@@ -44,6 +46,7 @@ from repro.core.svr_interact import (
     SvrState,
     init_svr_state,
     make_svr_interact_step,
+    per_agent_keys,
     svr_interact_step,
 )
 from repro.core.baselines import (
@@ -57,6 +60,8 @@ from repro.core.baselines import (
     make_gt_dsgd_step,
 )
 from repro.core.metrics import (MetricReport, convergence_metric,
-                                convergence_metric_fn, solve_inner)
+                                convergence_metric_fn,
+                                masked_convergence_metric,
+                                masked_convergence_metric_fn, solve_inner)
 
 __all__ = [name for name in dir() if not name.startswith("_")]

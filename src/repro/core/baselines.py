@@ -31,7 +31,7 @@ from repro.consensus import consensus_descent_and_track
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
 from repro.hypergrad import HypergradConfig
-from repro.core.svr_interact import _minibatch_grads
+from repro.core.svr_interact import _minibatch_grads, per_agent_keys
 
 __all__ = [
     "GtDsgdState", "init_gt_dsgd_state", "gt_dsgd_step", "make_gt_dsgd_step",
@@ -59,14 +59,17 @@ def init_gt_dsgd_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
                        batch_size: int) -> GtDsgdState:
     m = data.inner_x.shape[0]
     x, y = _bcast(x0, m), _bcast(y0, m)
-    keys = jax.random.split(key, m + 1)
+    # m-independent key derivation (see per_agent_keys): ghost-padded
+    # inits replay the active agents' sampling streams exactly.
+    k_state, k_agents = jax.random.split(key)
     p, v = jax.vmap(
         partial(_minibatch_grads, problem, hg_cfg,
-                batch_size=batch_size))(x, y, data, keys[1:])
+                batch_size=batch_size))(x, y, data,
+                                        per_agent_keys(k_agents, m))
     # p_prev copied: u/p_prev must not alias one buffer (step donation)
     p_prev = jax.tree_util.tree_map(jnp.array, p)
     return GtDsgdState(x=x, y=y, u=p, v=v, p_prev=p_prev,
-                       t=jnp.zeros((), jnp.int32), key=keys[0])
+                       t=jnp.zeros((), jnp.int32), key=k_state)
 
 
 def gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
@@ -75,7 +78,7 @@ def gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
     """One GT-DSGD iteration (raw body over a built engine)."""
     m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     key, k_step = jax.random.split(state.key)
-    agent_keys = jax.random.split(k_step, m)
+    agent_keys = per_agent_keys(k_step, m)
 
     def grads_fn(x_new, y_new):
         p_new, v_new = jax.vmap(
@@ -125,7 +128,7 @@ def dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
     """One D-SGD iteration (raw body over a built engine)."""
     m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     key, k_step = jax.random.split(state.key)
-    agent_keys = jax.random.split(k_step, m)
+    agent_keys = per_agent_keys(k_step, m)
 
     p, v = jax.vmap(
         partial(_minibatch_grads, problem, hg_cfg,

@@ -29,6 +29,7 @@ __all__ = [
     "make_synthetic_agents",
     "init_mlp_backbone",
     "init_head",
+    "pad_agent_data",
 ]
 
 
@@ -63,6 +64,24 @@ class BilevelProblem:
     mu_g: float      # strong-convexity modulus of g in y
     lipschitz_g: float  # gradient-Lipschitz bound L_g for the Neumann scale
     inner_hess_yy: Callable | None = None  # optional closed-form flat H_yy
+
+
+def pad_agent_data(data: AgentData, pad_to: int) -> AgentData:
+    """Ghost-pad the agent axis to ``pad_to`` by tiling real agents' data.
+
+    Ghost agent i >= m sees a copy of agent ``i % m``'s dataset — real,
+    finite samples, so the (discarded) ghost computations in a padded
+    sweep group stay well-conditioned; zeros or NaN sentinels could leak
+    through ``0 * NaN`` in the dense mixing matmul or blow up the ghost
+    inner solves.  Active agents' rows are untouched (``i % m == i``).
+    """
+    m = data.inner_x.shape[0]
+    if pad_to < m:
+        raise ValueError(f"cannot pad {m} agents down to {pad_to}")
+    if pad_to == m:
+        return data
+    idx = jnp.arange(pad_to) % m
+    return jax.tree_util.tree_map(lambda leaf: leaf[idx], data)
 
 
 # ---------------------------------------------------------------------------

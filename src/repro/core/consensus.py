@@ -29,6 +29,7 @@ __all__ = [
     "erdos_renyi_adjacency",
     "laplacian_mixing",
     "metropolis_mixing",
+    "pad_mixing",
     "ring_mixing",
     "ring_weights",
     "second_eigenvalue",
@@ -173,6 +174,32 @@ def torus_adjacency(rows: int, cols: int) -> np.ndarray:
 def torus_mixing(rows: int, cols: int) -> MixingSpec:
     """Doubly-stochastic symmetric torus mixing (Metropolis weights)."""
     return metropolis_mixing(torus_adjacency(rows, cols))
+
+
+def pad_mixing(mixing, pad_to: int) -> np.ndarray:
+    """Pad a mixing matrix to ``pad_to`` agents with ghost self-loops.
+
+    Ghost agents (rows/cols >= the original m) get identity rows: they
+    mix only with themselves and no active agent's row places weight on
+    them, so the padded matrix
+
+      * stays doubly stochastic and symmetric (Section-4.1 (a)/(b)),
+      * leaves every active agent's combine bitwise unchanged — the
+        extra contraction terms are exact ``0.0 * x_ghost`` zeros, and
+      * makes ghost agents fixed points of the consensus combine
+        (``x_ghost <- x_ghost``), which is what lets the padded sweep
+        batch different network sizes into one program (docs/SWEEPS.md).
+
+    ``mixing`` is a ``MixingSpec`` or raw (m, m) matrix; returns the
+    (pad_to, pad_to) padded matrix (a copy; the input is untouched).
+    """
+    mat = mixing.matrix if isinstance(mixing, MixingSpec) else np.asarray(mixing)
+    m = mat.shape[0]
+    if pad_to < m:
+        raise ValueError(f"cannot pad {m} agents down to {pad_to}")
+    out = np.eye(pad_to, dtype=mat.dtype)
+    out[:m, :m] = mat
+    return out
 
 
 def second_eigenvalue(mat: np.ndarray) -> float:

@@ -36,8 +36,21 @@ from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
 from repro.hypergrad import HypergradConfig, hypergradient
 
-__all__ = ["SvrState", "init_svr_state", "svr_interact_step",
-           "make_svr_interact_step"]
+__all__ = ["SvrState", "init_svr_state", "per_agent_keys",
+           "svr_interact_step", "make_svr_interact_step"]
+
+
+def per_agent_keys(key: jax.Array, m: int) -> jax.Array:
+    """Agent i's sampling key as ``fold_in(key, i)`` — stacked (m, 2).
+
+    Unlike ``jax.random.split(key, m)``, whose i-th output depends on m,
+    ``fold_in`` keys depend only on the agent index: agent i draws the
+    same stream whether the state carries m or a ghost-padded m' > m
+    agents.  Every stochastic algorithm derives its per-agent keys here,
+    which is what keeps active-agent trajectories bitwise invariant
+    under the sweep engine's agent padding (docs/SWEEPS.md).
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(m))
 
 
 class SvrState(NamedTuple):
@@ -84,13 +97,16 @@ def init_svr_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     bcast = lambda tree: jax.tree_util.tree_map(
         lambda leaf: jnp.broadcast_to(leaf, (m,) + leaf.shape), tree)
     x, y = bcast(x0), bcast(y0)
-    keys = jax.random.split(key, m + 1)
+    # 2-way split + fold_in: the state key and every agent key are
+    # independent of m, so ghost-padded inits replay the active agents'
+    # streams exactly (see per_agent_keys).
+    k_state, k_agents = jax.random.split(key)
     p, v = jax.vmap(partial(_full_grads, problem, hg_cfg))(
-        x, y, data, keys[1:])
+        x, y, data, per_agent_keys(k_agents, m))
     # copies: no two state leaves may alias one buffer (step donation)
     copy = lambda tree: jax.tree_util.tree_map(jnp.array, tree)
     return SvrState(x=x, y=y, u=p, v=v, p_prev=copy(p), x_prev=copy(x),
-                    y_prev=copy(y), t=jnp.zeros((), jnp.int32), key=keys[0])
+                    y_prev=copy(y), t=jnp.zeros((), jnp.int32), key=k_state)
 
 
 def svr_interact_step(
@@ -128,7 +144,7 @@ def svr_interact_step(
 
     m = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     key, k_step = jax.random.split(state.key)
-    agent_keys = jax.random.split(k_step, m)
+    agent_keys = per_agent_keys(k_step, m)
 
     def grads_fn(x_new, y_new):
         # Step 2: full refresh every q steps, recursive otherwise.

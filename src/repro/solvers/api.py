@@ -219,6 +219,12 @@ class SolverBase:
         hg_cfg = hg_cfg if hg_cfg is not None else self.config.hypergrad
         hg_cfg.resolve_backend()   # fail fast on unknown engine names
         spec = self.config.mixing_spec(m)
+        if m is not None and spec.num_agents != m:
+            # fail here, not as an XLA dot-shape error deep in the first
+            # mix: config-declared network vs data-derived m disagree
+            raise ValueError(
+                f"config declares a {spec.num_agents}-agent network "
+                f"(num_agents/mixing) but the data carries m={m} agents")
         engine = make_engine(self.config.backend, spec,
                              **dict(self.config.backend_opts))
         try:
@@ -438,7 +444,9 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
         measure_hypergrad = record_every > 0
     if problem is None or data is None or x0 is None or y0 is None:
         problem, x0, y0, data = default_setup(
-            config.seed, num_agents=num_agents, n_per_agent=n_per_agent)
+            config.seed,
+            num_agents=config.resolve_num_agents(num_agents),
+            n_per_agent=n_per_agent)
 
     solver = make_solver(config)
     state = solver.init(None, problem, hg_cfg, x0, y0, data)

@@ -74,6 +74,12 @@ class SolverConfig:
       batch_size: minibatch size |S| for the stochastic algorithms;
         ``None`` defaults to the paper's ceil(sqrt(n)) at init time.
       q: SVR-INTERACT full-refresh period; ``None`` -> ceil(sqrt(n)).
+      num_agents: the network size m for declarative topologies.  When
+        set it wins over any m derived from data shapes, making the
+        config self-contained — which is what lets the sweep engine
+        realise per-config networks for an m-sweep (and ghost-pad them
+        into one program under ``pad_agents=True``, docs/SWEEPS.md).
+        ``None``: m comes from the data, as before.
       mixing: explicit ``MixingSpec``; overrides ``topology`` when set.
       topology: declarative graph, realised once m is known.
       backend: consensus backend — "dense" | "pallas" | "ppermute".
@@ -93,6 +99,7 @@ class SolverConfig:
     beta: float = 0.3
     batch_size: int | None = None
     q: int | None = None
+    num_agents: int | None = None
     mixing: MixingSpec | None = None
     topology: TopologyConfig = TopologyConfig()
     backend: str = "dense"
@@ -101,14 +108,28 @@ class SolverConfig:
     seed: int = 0
 
     def mixing_spec(self, m: int | None = None) -> MixingSpec:
-        """The mixing matrix: explicit ``mixing`` if set, else topology(m)."""
+        """The mixing matrix: explicit ``mixing`` if set, else topology(m).
+
+        ``num_agents`` (when set) wins over the caller-supplied ``m``.
+        """
         if self.mixing is not None:
             return self.mixing
+        m = self.num_agents if self.num_agents is not None else m
         if m is None:
             raise ValueError(
                 "SolverConfig has no explicit mixing; the agent count m is "
-                "required to realise the declarative topology")
+                "required to realise the declarative topology (set "
+                "num_agents or pass m)")
         return self.topology.mixing_spec(m)
+
+    def resolve_num_agents(self, m: int | None = None) -> int | None:
+        """The config's network size: ``num_agents``, else the explicit
+        mixing's size, else the caller's default (data-derived) ``m``."""
+        if self.num_agents is not None:
+            return self.num_agents
+        if self.mixing is not None:
+            return self.mixing.num_agents
+        return m
 
     def resolve_q(self, n: int | None = None) -> int:
         """Refresh period: explicit ``q`` or the paper's ceil(sqrt(n))."""
@@ -135,7 +156,7 @@ class SolverConfig:
 
     BATCH_FIELDS = ("seed", "alpha", "beta")
 
-    def static_key(self) -> tuple:
+    def static_key(self, pad_to: int | None = None) -> tuple:
         """Hashable fingerprint of every trace-static field.
 
         Configs with equal ``static_key()`` compile to the same program
@@ -145,15 +166,26 @@ class SolverConfig:
         An explicit ``MixingSpec`` is fingerprinted by value (matrix
         bytes), not identity, so two separately-built equal topologies
         still share a group.
+
+        ``pad_to`` is the padded-agent grouping mode (docs/SWEEPS.md):
+        the network fields — ``topology`` / ``mixing`` / ``num_agents``
+        — leave the static fingerprint entirely, replaced by the common
+        padded size.  Configs that differ only in network size or
+        topology then share a key: under ``sweep(..., pad_agents=True)``
+        their mixing matrices are ghost-padded to ``pad_to`` and become
+        a stacked vmap operand instead of a compile-time constant.
         """
+        opts = tuple(sorted(self.backend_opts.items()))
+        if pad_to is not None:
+            return (self.algo, self.batch_size, self.q, ("padded", pad_to),
+                    self.backend, opts, self.hypergrad)
         mix = None
         if self.mixing is not None:
             mat = np.asarray(self.mixing.matrix)
             mix = (mat.shape, mat.tobytes(), float(self.mixing.lam),
                    tuple(self.mixing.neighbors), tuple(self.mixing.weights))
-        opts = tuple(sorted(self.backend_opts.items()))
-        return (self.algo, self.batch_size, self.q, mix, self.topology,
-                self.backend, opts, self.hypergrad)
+        return (self.algo, self.batch_size, self.q, self.num_agents, mix,
+                self.topology, self.backend, opts, self.hypergrad)
 
     def batch_values(self) -> tuple[int, float, float]:
         """The per-experiment dynamic values: ``(seed, alpha, beta)``."""

@@ -19,6 +19,15 @@ XLA programs instead:
     ``lax.cond``).  An 8-seed x 4-algorithm Figure-2 grid is 4 XLA
     dispatches, not 32 Python loops.
 
+3.  ``pad_agents=True`` additionally collapses groups that differ only
+    in *network size or topology*: every mixing matrix is ghost-padded
+    to a common ``pad_to`` (identity self-loop rows — still doubly
+    stochastic, active agents' combines bitwise unchanged), states and
+    data are padded along the agent axis, and the padded matrix /
+    active-agent count become vmap operands instead of compile-time
+    constants.  An m x topology x algorithm grid then compiles one
+    program per algorithm instead of one per (m, topology) cell.
+
 Usage::
 
     from repro.solvers import SolverConfig, expand_grid, sweep
@@ -29,20 +38,29 @@ Usage::
     result.traces          # (16, 9) on-device metric traces
     result.num_dispatches  # 1: one group, one compiled program
 
-See docs/SWEEPS.md for the grouping semantics and the recording cost
-model.
+    grid = expand_grid(SolverConfig(algo="interact"),
+                       num_agents=(4, 8), seed=range(4))
+    result = sweep(grid, 40, 5, pad_agents=True)
+    result.num_dispatches  # 1: both network sizes share one padded program
+
+See docs/SWEEPS.md for the grouping semantics, the padding semantics
+(ghost rows, metric masking, FLOPs-vs-dispatch trade-off), and the
+recording cost model.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
+from collections.abc import Mapping
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bilevel import AgentData, pad_agent_data
+from repro.core.consensus import pad_mixing
 from repro.solvers.api import _traced_scan, default_setup, make_solver
 from repro.solvers.config import SolverConfig
 
@@ -58,7 +76,8 @@ def expand_grid(base: SolverConfig = SolverConfig(),
     ``SolverConfig`` field is a valid axis; sweeping only the
     ``BATCH_FIELDS`` (seed / alpha / beta) keeps the whole grid in one
     vmap group, other axes split it into one group per distinct
-    ``static_key()``.
+    ``static_key()`` — except ``num_agents`` / ``topology`` / ``mixing``
+    axes under ``sweep(..., pad_agents=True)``, which batch too.
     """
     names = list(axes)
     out = []
@@ -75,6 +94,8 @@ class SweepGroup:
     config: SolverConfig        # the group's representative (static fields)
     seconds: float              # batched wall-clock (post-warmup when
                                 # measured, else first run incl. compile)
+    pad_to: int | None = None   # padded agent count (padded groups only)
+    num_active: tuple[int, ...] | None = None   # per-config active m
 
 
 @dataclasses.dataclass
@@ -86,7 +107,9 @@ class SweepResult:
     plus the final iterate); rows are aligned with the *input* config
     order regardless of grouping.  ``states`` holds the final solver
     states stacked per group (leading axis = group size) when
-    ``return_states=True``, else None.
+    ``return_states=True``, else None — in a padded sweep their agent
+    axis is ``pad_to`` wide and rows past a config's ``num_active`` are
+    ghost agents.
     """
 
     configs: list[SolverConfig]
@@ -96,6 +119,7 @@ class SweepResult:
     seconds_sequential: float | None     # same grid, one config at a time
     measured: bool = False               # True: seconds exclude compile
     states: list[Any] | None = None
+    pad_to: int | None = None            # set when pad_agents batched
 
     @property
     def num_dispatches(self) -> int:
@@ -125,11 +149,12 @@ class SweepResult:
         return self.traces[np.asarray(group.indices)]
 
 
-def _group_by_static_key(configs: Sequence[SolverConfig]):
+def _group_by_static_key(configs: Sequence[SolverConfig],
+                         pad_to: int | None = None):
     """Order-preserving grouping: static_key -> list of config indices."""
     groups: dict[tuple, list[int]] = {}
     for i, cfg in enumerate(configs):
-        groups.setdefault(cfg.static_key(), []).append(i)
+        groups.setdefault(cfg.static_key(pad_to=pad_to), []).append(i)
     return list(groups.values())
 
 
@@ -160,12 +185,70 @@ def _experiment_fn(solver, data, num_steps: int, record_every: int,
     return one
 
 
+def _padded_experiment_fn(solver, n: int, num_steps: int,
+                          record_every: int, masked_metric_fn,
+                          data_stack):
+    """Per-experiment pipeline with the *network* as vmap operands.
+
+    ``(key, alpha, beta, x0, y0, matrix, num_active, data_idx)`` ->
+    ``(final_state, trace)``.  The dense consensus engine is constructed
+    inside the trace from the experiment's ghost-padded mixing matrix,
+    so one compiled program serves every network size / topology in the
+    group; ``masked_metric_fn(state, data, num_active)`` keeps ghost
+    agents out of the recorded metric.
+
+    ``data_stack`` holds the group's *unique* padded datasets (leading
+    axis = number of distinct networks, not experiments); each
+    experiment gathers its row via the mapped ``data_idx``, so device
+    memory scales with distinct sizes rather than grid cells (an
+    S-seed sweep would otherwise carry S identical dataset copies).
+    """
+    from repro.consensus.dense import DenseEngine
+
+    problem, hg_cfg = solver._problem, solver._hg_cfg
+
+    def one(key, alpha, beta, x0, y0, matrix, num_active, data_idx):
+        data = jax.tree_util.tree_map(lambda l: l[data_idx], data_stack)
+        engine = DenseEngine(matrix)
+        param = solver._make_param_step(problem, hg_cfg, engine, n)
+        state = solver._init_state(key, problem, hg_cfg, x0, y0, data)
+        metric_fn = None
+        if masked_metric_fn is not None:
+            def metric_fn(st):
+                return masked_metric_fn(st, data, num_active)
+        return _traced_scan(param, state, data, num_steps, record_every,
+                            metric_fn, alpha, beta)
+
+    return one
+
+
+def _mixed_m_error(configs, indices, need_m: int, have: str) -> ValueError:
+    """The network-size-mismatch diagnostic, naming the offending keys.
+
+    Before padding existed this surfaced as an XLA shape error (or a
+    silent split into singleton groups); now it names each offending
+    config's static key and points at the two fixes.
+    """
+    lines = [f"  configs[{i}]: static_key={configs[i].static_key()!r}"
+             for i in indices]
+    all_ms = sorted({c.resolve_num_agents(need_m) or need_m
+                     for c in configs})
+    return ValueError(
+        f"sweep group needs m={need_m} agents but {have}; the grid spans "
+        f"network sizes {all_ms}, which compile one program per size. "
+        "Pass pad_agents=True to ghost-pad them into one batched program "
+        "per algorithm (dense backend), or supply `data` as a "
+        "{num_agents: AgentData} mapping to run one group per size. "
+        "Offending configs:\n" + "\n".join(lines))
+
+
 def sweep(configs: Sequence[SolverConfig], num_steps: int,
           record_every: int = 0, *, problem=None, x0=None, y0=None,
           data=None, num_agents: int = 5, n_per_agent: int = 600,
           metric_fn=None, x0_stack=None, y0_stack=None,
           measure: bool = False, compare_sequential: bool = False,
-          return_states: bool = False) -> SweepResult:
+          return_states: bool = False, pad_agents: bool = False,
+          pad_to: int | None = None) -> SweepResult:
     """Run a grid of experiments as one compiled program per vmap group.
 
     Args:
@@ -176,10 +259,15 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
         trace-static).  ``record_every=0`` disables recording.
       problem / x0 / y0 / data: the problem instance; defaults to the
         paper's Section-6 synthetic setup (``default_setup``, seeded by
-        the first config).
+        the first config).  For network-size sweeps ``data`` may be a
+        ``{num_agents: AgentData}`` mapping — each config draws the
+        dataset matching its network size.
       metric_fn: traceable ``state -> scalar`` recorded in-scan;
         defaults to the eq.-(11) convergence metric
         (``repro.core.convergence_metric_fn``) when ``record_every > 0``.
+        Under ``pad_agents=True`` the signature is
+        ``(state, data, num_active) -> scalar`` (the ghost-masked form,
+        default ``repro.core.masked_convergence_metric_fn``).
       x0_stack / y0_stack: optional per-experiment initial points —
         pytrees with a leading axis of ``len(configs)``, aligned with
         the config order (they join seed/alpha/beta as vmap axes).
@@ -196,6 +284,13 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
         batching alone (identical program, identical values).  Implies
         ``measure`` (both paths warmed before timing).
       return_states: keep the final solver states (stacked per group).
+      pad_agents: ghost-pad every config's network to a common agent
+        count so configs that differ only in network size / topology
+        share one compiled program (dense backend only; see
+        docs/SWEEPS.md for the semantics and the FLOPs-vs-dispatch
+        trade-off).  Active-agent trajectories are bitwise unchanged.
+      pad_to: the padded agent count; defaults to the grid's largest
+        network.
 
     Returns a ``SweepResult`` with traces aligned to the input order.
     """
@@ -203,11 +298,45 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
     measure = measure or compare_sequential
     if not configs:
         raise ValueError("sweep needs at least one config")
-    if problem is None or data is None or x0 is None or y0 is None:
-        problem, x0, y0, data = default_setup(
+
+    data_map = None
+    if isinstance(data, Mapping):
+        data_map = {int(k): v for k, v in data.items()}
+        data = None
+    built_default = problem is None or x0 is None or y0 is None or (
+        data is None and data_map is None)
+    if built_default:
+        problem, x0, y0, built = default_setup(
             configs[0].seed, num_agents=num_agents, n_per_agent=n_per_agent)
-    m = data.inner_x.shape[0]
-    n = data.inner_x.shape[1] + data.outer_x.shape[1]
+        if data is None and data_map is None:
+            data = built
+
+    default_m = data.inner_x.shape[0] if data is not None else num_agents
+    _data_cache: dict[int, AgentData] = {}
+
+    def data_for(m: int, indices) -> AgentData:
+        if data_map is not None:
+            try:
+                return data_map[m]
+            except KeyError:
+                raise _mixed_m_error(
+                    configs, indices, m,
+                    f"the data mapping only covers {sorted(data_map)}"
+                ) from None
+        if data.inner_x.shape[0] == m:
+            return data
+        if built_default:     # default Section-6 setup: build per size
+            if m not in _data_cache:
+                _data_cache[m] = default_setup(
+                    configs[0].seed, num_agents=m,
+                    n_per_agent=n_per_agent)[3]
+            return _data_cache[m]
+        raise _mixed_m_error(
+            configs, indices, m,
+            f"the supplied data has {data.inner_x.shape[0]}")
+
+    def samples_of(d: AgentData) -> int:
+        return d.inner_x.shape[1] + d.outer_x.shape[1]
 
     traces = [None] * len(configs)
     states: list[Any] = [None] * len(configs) if return_states else None
@@ -215,22 +344,91 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
     seconds = 0.0
     seconds_seq: float | None = 0.0 if compare_sequential else None
 
-    for indices in _group_by_static_key(configs):
-        rep = configs[indices[0]]
-        solver = make_solver(rep).build(problem, None, m=m, n=n)
-        if solver._param_step is None and any(
-                (configs[i].alpha, configs[i].beta) != (rep.alpha, rep.beta)
-                for i in indices):
+    if pad_agents:
+        bad = [i for i, c in enumerate(configs) if c.backend != "dense"]
+        if bad:
             raise ValueError(
-                f"solver {rep.algo!r} implements only the legacy "
-                "_make_step hook (config-bound step sizes); it cannot "
-                "batch configs with different alpha/beta — implement "
-                "_make_param_step or sweep step sizes sequentially")
-        group_metric = metric_fn
-        if group_metric is None and record_every:
-            from repro.core import convergence_metric_fn
-            group_metric = convergence_metric_fn(problem, solver._hg_cfg,
-                                                 data)
+                "pad_agents=True needs the dense consensus backend (the "
+                "padded mixing matrix is a traced vmap operand); configs "
+                f"{bad} use {sorted({configs[i].backend for i in bad})}")
+        ms = [c.resolve_num_agents(default_m) or default_m for c in configs]
+        m_pad = pad_to if pad_to is not None else max(ms)
+        if m_pad < max(ms):
+            raise ValueError(
+                f"pad_to={m_pad} is smaller than the grid's largest "
+                f"network ({max(ms)} agents)")
+        group_indices = _group_by_static_key(configs, pad_to=m_pad)
+    else:
+        m_pad, ms = None, None
+        group_indices = _group_by_static_key(configs)
+
+    for indices in group_indices:
+        rep = configs[indices[0]]
+
+        if pad_agents:
+            # pad + stack each *distinct* dataset once; experiments map
+            # an index into the unique stack (seeds share their network's
+            # data, so stacking per experiment would duplicate it).
+            uniq_row: dict[int, int] = {}
+            uniq_padded: list[AgentData] = []
+            data_rows = []
+            for i in indices:
+                d = data_for(ms[i], [i])
+                if id(d) not in uniq_row:
+                    uniq_row[id(d)] = len(uniq_padded)
+                    uniq_padded.append(pad_agent_data(d, m_pad))
+                data_rows.append(uniq_row[id(d)])
+            n = samples_of(uniq_padded[0])
+            if any(samples_of(d) != n for d in uniq_padded):
+                raise ValueError(
+                    "padded group mixes per-agent sample counts "
+                    f"{sorted({samples_of(d) for d in uniq_padded})}; only "
+                    "the agent axis may differ under pad_agents")
+            solver = make_solver(rep).build(problem, None,
+                                            m=ms[indices[0]], n=n)
+            if solver._param_step is None:
+                raise ValueError(
+                    f"solver {rep.algo!r} implements only the legacy "
+                    "_make_step hook; pad_agents needs the parameterised "
+                    "_make_param_step (the engine is a traced operand)")
+            group_metric = metric_fn
+            if group_metric is None and record_every:
+                from repro.core import masked_convergence_metric_fn
+                group_metric = masked_convergence_metric_fn(
+                    problem, solver._hg_cfg)
+
+            data_stack = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *uniq_padded)
+            data_idx = jnp.asarray(data_rows, jnp.int32)
+            mats = jnp.stack([
+                jnp.asarray(pad_mixing(
+                    configs[i].mixing_spec(ms[i]), m_pad))
+                for i in indices])
+            num_active = jnp.asarray([ms[i] for i in indices], jnp.int32)
+        else:
+            g_m = rep.resolve_num_agents(default_m) or default_m
+            g_data = data_for(g_m, indices)
+            m = g_data.inner_x.shape[0]
+            n = samples_of(g_data)
+            spec = rep.mixing_spec(m)
+            if spec.num_agents != m:
+                raise _mixed_m_error(
+                    configs, indices, spec.num_agents,
+                    f"its data has {m}")
+            solver = make_solver(rep).build(problem, None, m=m, n=n)
+            if solver._param_step is None and any(
+                    (configs[i].alpha, configs[i].beta)
+                    != (rep.alpha, rep.beta) for i in indices):
+                raise ValueError(
+                    f"solver {rep.algo!r} implements only the legacy "
+                    "_make_step hook (config-bound step sizes); it cannot "
+                    "batch configs with different alpha/beta — implement "
+                    "_make_param_step or sweep step sizes sequentially")
+            group_metric = metric_fn
+            if group_metric is None and record_every:
+                from repro.core import convergence_metric_fn
+                group_metric = convergence_metric_fn(
+                    problem, solver._hg_cfg, g_data)
 
         keys = jnp.stack([jax.random.PRNGKey(configs[i].seed)
                           for i in indices])
@@ -244,17 +442,26 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
         x_ax = 0 if x0_stack is not None else None
         y_ax = 0 if y0_stack is not None else None
 
-        one = _experiment_fn(solver, data, num_steps, record_every,
-                             group_metric)
-        batched = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, x_ax, y_ax)))
+        if pad_agents:
+            one = _padded_experiment_fn(solver, n, num_steps, record_every,
+                                        group_metric, data_stack)
+            batched = jax.jit(jax.vmap(
+                one, in_axes=(0, 0, 0, x_ax, y_ax, 0, 0, 0)))
+            operands = (keys, alphas, betas, gx, gy, mats, num_active,
+                        data_idx)
+        else:
+            one = _experiment_fn(solver, g_data, num_steps, record_every,
+                                 group_metric)
+            batched = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, x_ax, y_ax)))
+            operands = (keys, alphas, betas, gx, gy)
 
         t0 = time.perf_counter()
-        out = batched(keys, alphas, betas, gx, gy)  # compile + first run
+        out = batched(*operands)  # compile + first run
         jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
         took = time.perf_counter() - t0
         if measure:     # re-run warmed so `seconds` excludes compilation
             t0 = time.perf_counter()
-            out = batched(keys, alphas, betas, gx, gy)
+            out = batched(*operands)
             jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
             took = time.perf_counter() - t0
         seconds += took
@@ -265,7 +472,11 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
             traces[i] = g_traces[row]
             if return_states:
                 states[i] = jax.tree_util.tree_map(lambda l: l[row], g_state)
-        groups.append(SweepGroup(indices=indices, config=rep, seconds=took))
+        groups.append(SweepGroup(
+            indices=indices, config=rep, seconds=took,
+            pad_to=m_pad if pad_agents else None,
+            num_active=tuple(ms[i] for i in indices) if pad_agents
+            else None))
 
         if compare_sequential:
             single = jax.jit(one)
@@ -273,15 +484,22 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
                 lambda l: l[r], tree)
             sx = lambda r: pick(gx, r) if x_ax == 0 else gx
             sy = lambda r: pick(gy, r) if y_ax == 0 else gy
-            warm = single(keys[0], alphas[0], betas[0], sx(0), sy(0))
+
+            def row_operands(r):
+                base = (keys[r], alphas[r], betas[r], sx(r), sy(r))
+                if pad_agents:
+                    base += (mats[r], num_active[r], data_idx[r])
+                return base
+
+            warm = single(*row_operands(0))
             jax.block_until_ready(jax.tree_util.tree_leaves(warm)[0])
             t0 = time.perf_counter()
             for r in range(len(indices)):
-                out_r = single(keys[r], alphas[r], betas[r], sx(r), sy(r))
+                out_r = single(*row_operands(r))
                 jax.block_until_ready(jax.tree_util.tree_leaves(out_r)[0])
             seconds_seq += time.perf_counter() - t0
 
     return SweepResult(configs=configs, traces=np.stack(traces),
                        groups=groups, seconds=seconds,
                        seconds_sequential=seconds_seq, measured=measure,
-                       states=states)
+                       states=states, pad_to=m_pad)

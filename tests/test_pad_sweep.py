@@ -1,0 +1,320 @@
+"""Padded-agent sweep batching: ghost rows, masking, bitwise parity.
+
+Contracts (docs/SWEEPS.md, "Padded-agent batching"):
+
+* ``pad_mixing`` keeps the matrix doubly stochastic/symmetric and gives
+  ghost agents identity self-loops, so active agents' combines are
+  bitwise unchanged and ghosts never leak into active rows.
+* ``per_agent_keys`` is m-independent: agent i draws the same stream
+  whether the state carries m or m' > m agents.
+* A padded m ∈ {4, 8} x topology group runs as ONE dispatch per
+  algorithm, and every config's trace is **bitwise** equal to the
+  unpadded per-size sweep on the dense backend.
+* Ghost-agent invariance: the amount of padding never changes active-
+  agent trajectories (property-tested over pad sizes).
+* The mixed-network-size error names the offending configs' static keys
+  and points at ``pad_agents=True``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline container: vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    HypergradConfig,
+    MLPMetaProblem,
+    convergence_metric,
+    init_head,
+    init_mlp_backbone,
+    make_synthetic_agents,
+    masked_convergence_metric,
+    masked_convergence_metric_fn,
+    pad_agent_data,
+    pad_mixing,
+    per_agent_keys,
+    ring_mixing,
+    validate_mixing,
+)
+from repro.solvers import SolverConfig, TopologyConfig, expand_grid, sweep
+
+ALGOS = ("interact", "svr-interact", "gt-dsgd", "d-sgd")
+SIZES = (4, 8)
+N = 60
+
+
+@pytest.fixture(scope="module")
+def setup():
+    prob = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(1), 8, hidden=8)
+    y0 = init_head(jax.random.PRNGKey(2), 8, 3)
+    hg = HypergradConfig(method="cg", cg_iters=8)
+    datas = {m: make_synthetic_agents(jax.random.PRNGKey(0), num_agents=m,
+                                      n_per_agent=N, d_in=8, num_classes=3)
+             for m in SIZES}
+    metric = masked_convergence_metric_fn(prob, hg, inner_steps=20)
+    return prob, x0, y0, hg, datas, metric
+
+
+def _config(setup, algo, **kw):
+    _, _, _, hg, _, _ = setup
+    base = dict(algo=algo, alpha=0.1, beta=0.1, batch_size=6, q=5,
+                topology=TopologyConfig(kind="ring"), hypergrad=hg, seed=7)
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+def _unpadded_rows(setup, configs, num_steps, record_every):
+    """Per-size unpadded sweeps with the same masked metric closure —
+    the reference the padded program must reproduce bitwise."""
+    prob, x0, y0, _, datas, metric = setup
+    rows = {}
+    for m in sorted({c.num_agents for c in configs}):
+        sub = [(i, c) for i, c in enumerate(configs) if c.num_agents == m]
+        mfn = (lambda d, na: lambda st: metric(st, d, na))(
+            datas[m], jnp.int32(m))
+        res = sweep([c for _, c in sub], num_steps, record_every,
+                    problem=prob, x0=x0, y0=y0, data=datas[m],
+                    metric_fn=mfn)
+        for r, (i, _) in enumerate(sub):
+            rows[i] = res.traces[r]
+    return np.stack([rows[i] for i in range(len(configs))])
+
+
+# -- padding primitives ----------------------------------------------------
+
+def test_pad_mixing_properties():
+    spec = ring_mixing(5)
+    padded = pad_mixing(spec, 8)
+    assert padded.shape == (8, 8)
+    validate_mixing(padded)                       # still Section-4.1 legal
+    np.testing.assert_array_equal(padded[:5, :5], spec.matrix)
+    np.testing.assert_array_equal(padded[5:, 5:], np.eye(3))
+    assert not padded[:5, 5:].any() and not padded[5:, :5].any()
+    with pytest.raises(ValueError, match="cannot pad"):
+        pad_mixing(spec, 4)
+
+
+def test_dense_engine_padded_mix_bitwise_on_active_rows():
+    """The padded dense combine leaves active agents' rows bitwise
+    unchanged and ghost rows fixed (identity self-loops)."""
+    from repro.consensus.dense import DenseEngine
+    spec = ring_mixing(5)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 13))
+    mixed = DenseEngine.padded(spec, 8).mix(x)
+    np.testing.assert_array_equal(
+        np.asarray(DenseEngine(spec).mix(x[:5])), np.asarray(mixed[:5]))
+    np.testing.assert_array_equal(np.asarray(x[5:]), np.asarray(mixed[5:]))
+
+
+def test_pad_agent_data_tiles_real_agents(setup):
+    _, _, _, _, datas, _ = setup
+    padded = pad_agent_data(datas[4], 7)
+    assert padded.inner_x.shape[0] == 7
+    np.testing.assert_array_equal(np.asarray(padded.inner_x[:4]),
+                                  np.asarray(datas[4].inner_x))
+    # ghost rows tile real agents' (finite) data, never zeros/NaNs
+    np.testing.assert_array_equal(np.asarray(padded.inner_x[4:]),
+                                  np.asarray(datas[4].inner_x[:3]))
+    assert pad_agent_data(datas[4], 4) is datas[4]
+
+
+def test_per_agent_keys_prefix_stable():
+    key = jax.random.PRNGKey(3)
+    k4 = np.asarray(per_agent_keys(key, 4))
+    k9 = np.asarray(per_agent_keys(key, 9))
+    np.testing.assert_array_equal(k4, k9[:4])
+    # distinct agents draw distinct keys
+    assert len({tuple(row) for row in k9}) == 9
+
+
+# -- grouping and the static key -------------------------------------------
+
+def test_static_key_pad_to_merges_network_fields(setup):
+    a = _config(setup, "interact", num_agents=4)
+    b = _config(setup, "interact", num_agents=8,
+                topology=TopologyConfig(kind="erdos-renyi"))
+    assert a.static_key() != b.static_key()
+    assert a.static_key(pad_to=8) == b.static_key(pad_to=8)
+    # algo / hypergrad / backend still split padded groups
+    c = _config(setup, "gt-dsgd", num_agents=4)
+    assert a.static_key(pad_to=8) != c.static_key(pad_to=8)
+
+
+def test_num_agents_drives_declarative_topology(setup):
+    cfg = _config(setup, "interact", num_agents=6)
+    assert cfg.mixing_spec().num_agents == 6
+    assert cfg.mixing_spec(4).num_agents == 6     # num_agents wins
+    assert cfg.resolve_num_agents(99) == 6
+    assert _config(setup, "interact").resolve_num_agents(5) == 5
+
+
+def test_padded_sweep_collapses_dispatches(setup):
+    prob, x0, y0, _, datas, _ = setup
+    configs = expand_grid(
+        _config(setup, "interact"), num_agents=SIZES,
+        topology=(TopologyConfig(kind="ring"),
+                  TopologyConfig(kind="erdos-renyi")), seed=(0, 1))
+    solo = sweep(configs, 2, 0, problem=prob, x0=x0, y0=y0, data=datas)
+    assert solo.num_dispatches == 4               # one per (m, topology)
+    res = sweep(configs, 2, 0, problem=prob, x0=x0, y0=y0, data=datas,
+                pad_agents=True)
+    assert res.num_dispatches == 1
+    assert res.pad_to == 8
+    assert res.groups[0].num_active == tuple(c.num_agents for c in configs)
+
+
+# -- parity: the acceptance contract ---------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_padded_traces_bitwise_match_unpadded(setup, algo):
+    """m ∈ {4, 8} padded into one program: every active-agent trace is
+    bitwise equal to the unpadded per-size sweep (dense backend)."""
+    prob, x0, y0, _, datas, metric = setup
+    configs = expand_grid(_config(setup, algo), num_agents=SIZES,
+                          seed=(0, 1))
+    res = sweep(configs, 4, 2, problem=prob, x0=x0, y0=y0, data=datas,
+                metric_fn=metric, pad_agents=True)
+    assert res.num_dispatches == 1
+    reference = _unpadded_rows(setup, configs, 4, 2)
+    np.testing.assert_array_equal(reference, res.traces)
+
+
+def test_padded_final_states_match_unpadded_active_rows(setup):
+    prob, x0, y0, _, datas, _ = setup
+    configs = [_config(setup, "interact", num_agents=m) for m in SIZES]
+    res = sweep(configs, 3, 0, problem=prob, x0=x0, y0=y0, data=datas,
+                pad_agents=True, return_states=True)
+    for i, m in enumerate(SIZES):
+        solo = sweep([configs[i]], 3, 0, problem=prob, x0=x0, y0=y0,
+                     data=datas[m], return_states=True)
+        for a, b in zip(jax.tree_util.tree_leaves(solo.states[0].x),
+                        jax.tree_util.tree_leaves(res.states[i].x)):
+            np.testing.assert_array_equal(np.asarray(a),
+                                          np.asarray(b)[:m])
+
+
+@settings(max_examples=4, deadline=None)
+@given(extra=st.integers(min_value=0, max_value=5))
+def test_ghost_agents_never_change_active_trajectories(extra):
+    """Property: however much padding is stacked on top of the grid's
+    largest network, active-agent traces are bitwise unchanged."""
+    prob = MLPMetaProblem(mu_g=0.5, lipschitz_g=4.0)
+    x0 = init_mlp_backbone(jax.random.PRNGKey(1), 8, hidden=8)
+    y0 = init_head(jax.random.PRNGKey(2), 8, 3)
+    hg = HypergradConfig(method="cg", cg_iters=8)
+    datas = {4: make_synthetic_agents(jax.random.PRNGKey(0), num_agents=4,
+                                      n_per_agent=N, d_in=8, num_classes=3)}
+    configs = [SolverConfig(algo="svr-interact", alpha=0.1, beta=0.1,
+                            batch_size=6, q=5, num_agents=4,
+                            topology=TopologyConfig(kind="ring"),
+                            hypergrad=hg, seed=s) for s in (0, 1)]
+    metric = masked_convergence_metric_fn(prob, hg, inner_steps=10)
+    base = sweep(configs, 3, 1, problem=prob, x0=x0, y0=y0, data=datas,
+                 metric_fn=metric, pad_agents=True, pad_to=4)
+    padded = sweep(configs, 3, 1, problem=prob, x0=x0, y0=y0, data=datas,
+                   metric_fn=metric, pad_agents=True, pad_to=4 + extra)
+    np.testing.assert_array_equal(base.traces, padded.traces)
+
+
+# -- masked metric ----------------------------------------------------------
+
+def test_masked_metric_matches_unmasked_at_full_occupancy(setup):
+    """num_active == m on unpadded iterates: same value as the eager
+    eq.-11 metric (association differs, so allclose not bitwise)."""
+    prob, x0, y0, hg, datas, _ = setup
+    data = datas[4]
+    bcast = lambda tree: jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (4,) + l.shape), tree)
+    x, y = bcast(x0), bcast(y0)
+    ref = convergence_metric(prob, hg, x, y, 20, 0.5, data)
+    masked = masked_convergence_metric(prob, hg, x, y, 20, 0.5, data,
+                                       jnp.int32(4))
+    np.testing.assert_allclose(float(masked.total), float(ref.total),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(masked.stationarity),
+                               float(ref.stationarity), rtol=1e-5)
+
+
+def test_masked_metric_ignores_ghost_rows(setup):
+    """Poisoning ghost rows (huge values) must not move the metric."""
+    prob, x0, y0, hg, datas, _ = setup
+    data = pad_agent_data(datas[4], 6)
+    bcast = lambda tree: jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (6,) + l.shape), tree)
+    x, y = bcast(x0), bcast(y0)
+    clean = masked_convergence_metric(prob, hg, x, y, 10, 0.5, data,
+                                      jnp.int32(4))
+    poison = lambda tree: jax.tree_util.tree_map(
+        lambda l: l.at[4:].set(1e6), tree)
+    dirty = masked_convergence_metric(prob, hg, poison(x), poison(y),
+                                      10, 0.5, data, jnp.int32(4))
+    assert float(clean.total) == float(dirty.total)
+
+
+# -- diagnostics ------------------------------------------------------------
+
+def test_mixed_m_error_names_static_keys(setup):
+    prob, x0, y0, _, datas, _ = setup
+    configs = [_config(setup, "interact", num_agents=4),
+               _config(setup, "interact", num_agents=8)]
+    with pytest.raises(ValueError) as exc:
+        sweep(configs, 2, 0, problem=prob, x0=x0, y0=y0, data=datas[4])
+    msg = str(exc.value)
+    assert "pad_agents=True" in msg
+    assert "static_key" in msg
+    assert "[4, 8]" in msg                        # the grid's sizes
+
+
+def test_build_rejects_config_data_network_mismatch(setup):
+    """Direct init() with num_agents disagreeing with the data fails with
+    a named error, not an XLA dot-shape error inside the first mix."""
+    from repro.solvers import make_solver
+    prob, x0, y0, hg, datas, _ = setup
+    solver = make_solver(_config(setup, "interact", num_agents=8))
+    with pytest.raises(ValueError, match="8-agent network .* m=4"):
+        solver.init(None, prob, hg, x0, y0, datas[4])
+
+
+def test_data_mapping_missing_size_is_diagnosed(setup):
+    prob, x0, y0, _, datas, _ = setup
+    configs = [_config(setup, "interact", num_agents=4),
+               _config(setup, "interact", num_agents=6)]
+    with pytest.raises(ValueError, match="pad_agents=True"):
+        sweep(configs, 2, 0, problem=prob, x0=x0, y0=y0,
+              data={4: datas[4]})
+
+
+def test_pad_agents_requires_dense_backend(setup):
+    prob, x0, y0, _, datas, _ = setup
+    configs = [_config(setup, "interact", num_agents=4,
+                       backend="pallas")]
+    with pytest.raises(ValueError, match="dense"):
+        sweep(configs, 2, 0, problem=prob, x0=x0, y0=y0, data=datas,
+              pad_agents=True)
+
+
+def test_pad_to_below_largest_network_rejected(setup):
+    prob, x0, y0, _, datas, _ = setup
+    configs = [_config(setup, "interact", num_agents=8)]
+    with pytest.raises(ValueError, match="largest"):
+        sweep(configs, 2, 0, problem=prob, x0=x0, y0=y0, data=datas,
+              pad_agents=True, pad_to=4)
+
+
+def test_mixed_sample_counts_rejected_under_padding(setup):
+    prob, x0, y0, _, datas, _ = setup
+    short = make_synthetic_agents(jax.random.PRNGKey(0), num_agents=8,
+                                  n_per_agent=N // 2, d_in=8,
+                                  num_classes=3)
+    configs = [_config(setup, "interact", num_agents=4),
+               _config(setup, "interact", num_agents=8)]
+    with pytest.raises(ValueError, match="sample counts"):
+        sweep(configs, 2, 0, problem=prob, x0=x0, y0=y0,
+              data={4: datas[4], 8: short}, pad_agents=True)
