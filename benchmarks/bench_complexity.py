@@ -22,6 +22,8 @@ primal only the inner).
 """
 from __future__ import annotations
 
+import jax
+
 from benchmarks.common import ALGORITHMS, Row, build, make_setup, metric_of
 from repro.hypergrad import measure_problem_counts
 
@@ -35,12 +37,21 @@ def _per_call_evals(s) -> tuple[int, int, int]:
     return st.hvp_count, st.grad_count, st.hess_count
 
 
+def _bytes_per_round(solver, state) -> float:
+    """Wire bytes one agent ships per Definition-2 round: the engine's
+    ``bytes_on_wire`` of the per-agent x payload (the same accounting
+    ``SolveResult.bytes_per_round`` reports)."""
+    payload = jax.tree_util.tree_map(lambda l: l[0], state.x)
+    return float(solver._engine.bytes_on_wire(payload))
+
+
 def run(smoke: bool = False) -> list:
     max_iters = 10 if smoke else MAX_ITERS
     rows = []
     s = make_setup(m=5)
     for algo in ALGORITHMS:
         solver, state = build(s, algo)
+        wire = _bytes_per_round(solver, state)
         iters = None
         for t in range(max_iters):
             if metric_of(s, state) <= EPS:
@@ -50,7 +61,8 @@ def run(smoke: bool = False) -> list:
         if iters is None:
             cap = max_iters * solver.communications_per_step
             rows.append(Row(f"table1_{algo}", 0.0,
-                            f"eps={EPS};comm_rounds=>{cap};samples=NA"))
+                            f"eps={EPS};comm_rounds=>{cap};"
+                            f"bytes_per_round={wire:.0f};samples=NA"))
             continue
         hvp, grad, hess = _per_call_evals(s)
         calls = solver.hypergrad_calls_per_step(s.n)
@@ -78,6 +90,8 @@ def run(smoke: bool = False) -> list:
         rounds = iters * solver.communications_per_step
         rows.append(Row(f"table1_{algo}", 0.0,
                         f"eps={EPS};comm_rounds={rounds};"
+                        f"bytes_per_round={wire:.0f};"
+                        f"wire_bytes={rounds * wire:.0f};"
                         f"hvp_evals={hvp_evals:.0f};"
                         f"grad_evals={grad_evals:.0f};"
                         f"samples_per_agent={samples:.0f}"))

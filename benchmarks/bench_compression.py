@@ -1,0 +1,183 @@
+"""Compressed-consensus wire traffic per unit of stationarity.
+
+Sweeps compressor x communication-interval on the Section-6 instance and
+prices Definition-2 communication in *bytes* instead of rounds: for each
+wire config, how many bytes does one agent ship before the eq.-11 metric
+reaches the gap the uncompressed reference run ends at?
+
+Headline contracts (asserted here AND by ``benchmarks.check_gates`` on
+the ``BENCH_compression.json`` dump):
+
+* ``bytes_reduction_sign1bit >= 8`` — sign1bit+EF reaches the reference
+  stationarity with at least 8x fewer wire bytes (per-round the ratio is
+  ~32x; the gate leaves headroom for extra iterates the coarser wire
+  needs).
+* ``sign1bit_matched_stationarity`` — the compressed run actually got
+  to the reference gap (within ``MATCH_TOL``), i.e. the reduction is
+  measured at matched quality, not at a worse point.
+* ``ef_beats_noef`` — at an equal bit budget (same compressor, same
+  step count, so byte-for-byte identical wire usage) int8 WITH the
+  innovation/EF wire state ends strictly below stateless int8: the
+  feedback recursion, not the quantizer, is what preserves convergence.
+  The contrast runs at a fixed longer horizon (``EF_CONTRAST_STEPS``)
+  because the stateless wire's bias floor only separates from the
+  compensated run near stationarity.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, Setup, make_setup, metric_of
+from repro.consensus import CompressionConfig, cumulative_wire_bytes
+from repro.solvers import SolverConfig, make_solver
+
+MATCH_TOL = 0.10          # matched-stationarity tolerance on the gap
+REF_STEPS = 40            # uncompressed reference horizon
+CAP_STEPS = 120           # compressed runs may take extra iterates
+SMOKE_REF, SMOKE_CAP = 8, 24
+EF_CONTRAST_STEPS = 240   # horizon where the stateless bias floor shows
+
+# the compressor x interval grid (innovation/EF wire state on)
+GRID = (
+    ("int8", 1),
+    ("sign1bit", 1),
+    ("sign1bit", 2),          # interval > 1 stacks on top of compression
+    ("topk", 1),
+)
+
+
+def _build(s: Setup, comp: CompressionConfig | None, interval: int = 1,
+           seed: int = 7):
+    cfg = SolverConfig(algo="interact", alpha=0.3, beta=0.3,
+                       mixing=s.spec, hypergrad=s.hg, seed=seed,
+                       compression=comp or CompressionConfig(),
+                       communication_interval=interval)
+    solver = make_solver(cfg)
+    state = solver.init(None, s.prob, s.hg, s.x0, s.y0, s.data)
+    return solver, state
+
+
+def _trace(s: Setup, solver, state, steps: int,
+           stop_at: float | None = None) -> list[float]:
+    """Per-step eq.-11 metric; early-exits once ``stop_at`` is reached."""
+    out = []
+    for _ in range(steps):
+        state = solver.step(state, s.data)
+        out.append(metric_of(s, state))
+        if stop_at is not None and out[-1] <= stop_at:
+            break
+    return out
+
+
+def _payload_size(state) -> int:
+    """f32 entries one agent ships per stream (the per-agent x slice; u
+    mirrors it, priced by comms_per_step)."""
+    return sum(int(l[0].size)
+               for l in jax.tree_util.tree_leaves(state.x))
+
+
+def _bytes_at(comp: CompressionConfig, size: int, step: int, cps: int,
+              interval: int) -> float:
+    return cumulative_wire_bytes(comp, size, step, comms_per_step=cps,
+                                 communication_interval=interval)[step]
+
+
+def run(smoke: bool = False) -> list[Row]:
+    ref_steps = SMOKE_REF if smoke else REF_STEPS
+    cap_steps = SMOKE_CAP if smoke else CAP_STEPS
+    s = make_setup(m=5)
+    rows: list[Row] = []
+
+    solver, state = _build(s, None)
+    cps = solver.communications_per_step
+    size = _payload_size(state)
+    ref_trace = _trace(s, solver, state, ref_steps)
+    target = ref_trace[-1] * (1.0 + MATCH_TOL)
+    bytes_ref = _bytes_at(CompressionConfig(), size, len(ref_trace), cps, 1)
+    rows.append(Row("compress_ref", 0.0,
+                    f"gap={ref_trace[-1]:.4f};steps={len(ref_trace)};"
+                    f"wire_bytes={bytes_ref:.0f}"))
+
+    dump: dict = {"bench": "compression", "jax": jax.__version__,
+                  "payload_f32_entries": size,
+                  "comms_per_step": cps,
+                  "ref_final_gap": ref_trace[-1],
+                  "ref_steps": len(ref_trace),
+                  "bytes_ref": bytes_ref,
+                  "match_tol": MATCH_TOL,
+                  "rows": []}
+
+    for kind, interval in GRID:
+        comp = CompressionConfig(kind)
+        solver, state = _build(s, comp, interval)
+        trace = _trace(s, solver, state, cap_steps, stop_at=target)
+        matched = trace[-1] <= target
+        step = len(trace)
+        wire = _bytes_at(comp, size, step, cps, interval)
+        reduction = bytes_ref / wire if matched else 0.0
+        dump["rows"].append({
+            "kind": kind, "interval": interval,
+            "final_gap": trace[-1], "steps": step, "wire_bytes": wire,
+            "matched": matched, "bytes_reduction": reduction})
+        rows.append(Row(f"compress_{kind}_k{interval}", 0.0,
+                        f"gap={trace[-1]:.4f};steps={step};"
+                        f"wire_bytes={wire:.0f};matched={matched};"
+                        f"reduction={reduction:.1f}x"))
+
+    sign_row = next(r for r in dump["rows"]
+                    if r["kind"] == "sign1bit" and r["interval"] == 1)
+    dump["bytes_reduction_sign1bit"] = sign_row["bytes_reduction"]
+    dump["sign1bit_matched_stationarity"] = sign_row["matched"]
+
+    # EF contrast at equal bit budget: same compressor, same interval,
+    # same step count => byte-identical wire usage; only the final gap
+    # is evaluated (the run itself is the cheap part)
+    contrast = {}
+    for ef in (True, False):
+        comp = CompressionConfig("int8", error_feedback=ef)
+        solver, state = _build(s, comp)
+        for _ in range(EF_CONTRAST_STEPS):
+            state = solver.step(state, s.data)
+        contrast[ef] = metric_of(s, state)
+        rows.append(Row(f"compress_int8_{'ef' if ef else 'noef'}_long",
+                        0.0, f"gap={contrast[ef]:.6f};"
+                             f"steps={EF_CONTRAST_STEPS}"))
+    ef_gap, noef_gap = contrast[True], contrast[False]
+    dump["ef_contrast_steps"] = EF_CONTRAST_STEPS
+    dump["int8_ef_final_gap"] = ef_gap
+    dump["int8_noef_final_gap"] = noef_gap
+    dump["ef_beats_noef"] = bool(ef_gap < noef_gap)
+
+    path = os.path.join(os.environ.get("BENCH_JSON_DIR", os.getcwd()),
+                        "BENCH_compression.json")
+    try:
+        with open(path, "w") as fh:
+            json.dump(dump, fh, indent=1)
+    except OSError:
+        pass  # read-only workdir: CSV rows still carry everything
+
+    assert dump["sign1bit_matched_stationarity"], (
+        f"sign1bit+EF never reached the reference gap "
+        f"(got {sign_row['final_gap']:.4f}, target {target:.4f})")
+    assert dump["bytes_reduction_sign1bit"] >= 8.0, (
+        f"sign1bit+EF wire reduction "
+        f"{dump['bytes_reduction_sign1bit']:.1f}x < 8x")
+    assert dump["ef_beats_noef"], (
+        f"EF did not beat no-feedback int8 at equal bit budget "
+        f"(EF {ef_gap:.5f} vs no-EF {noef_gap:.5f})")
+
+    rows.append(Row("compress_headline", 0.0,
+                    f"reduction_sign1bit="
+                    f"{dump['bytes_reduction_sign1bit']:.1f}x;"
+                    f"ef_beats_noef={dump['ef_beats_noef']};"
+                    f"int8_ef={ef_gap:.5f};int8_noef={noef_gap:.5f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(smoke="--smoke" in __import__("sys").argv):
+        print(r.csv())

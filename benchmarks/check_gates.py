@@ -106,12 +106,49 @@ def check_hypergrad(dump: dict, path: str) -> list[str]:
     return [f"{len(rows)} rows carry hvp/grad/hess counts"]
 
 
+def check_compression(dump: dict, path: str) -> list[str]:
+    """BENCH_compression.json: wire-traffic-per-stationarity gates.
+
+    * ``bytes_reduction_sign1bit >= 8`` — sign1bit+EF must reach the
+      reference eq.-11 gap with at least 8x fewer wire bytes than the
+      uncompressed run (per-round the wire is ~32x smaller; the slack
+      absorbs the extra iterates the coarser wire needs).
+    * ``sign1bit_matched_stationarity`` — the reduction is measured at
+      matched quality (the compressed run actually reached the
+      reference gap within the bench's ``match_tol``), never at a worse
+      stationarity point.
+    * ``ef_beats_noef`` — at byte-identical wire usage (same
+      compressor, same step count), the innovation/EF wire state ends
+      strictly below the stateless quantizer.
+    """
+    out = []
+    red = _need(dump, "bytes_reduction_sign1bit", path)
+    if not red >= 8.0:
+        raise GateFailure(
+            f"{path}: bytes_reduction_sign1bit={red:.2f} < 8")
+    out.append(f"bytes_reduction_sign1bit={red:.1f}x")
+    if _need(dump, "sign1bit_matched_stationarity", path) is not True:
+        raise GateFailure(
+            f"{path}: sign1bit run did not reach the reference "
+            f"stationarity (reduction measured at unmatched quality)")
+    out.append("sign1bit_matched_stationarity=True")
+    if _need(dump, "ef_beats_noef", path) is not True:
+        ef = dump.get("int8_ef_final_gap")
+        noef = dump.get("int8_noef_final_gap")
+        raise GateFailure(
+            f"{path}: EF did not beat stateless int8 at equal bit "
+            f"budget (EF {ef} vs no-EF {noef})")
+    out.append("ef_beats_noef=True")
+    return out
+
+
 # Known dumps: file name -> validator.  Every generator in benchmarks/
 # that dumps a BENCH_*.json should register its gate here so the CI
 # bench-smoke job (and anyone running the module locally) checks it.
 GATES = {
     "BENCH_sweep.json": check_sweep,
     "BENCH_hypergrad.json": check_hypergrad,
+    "BENCH_compression.json": check_compression,
 }
 
 

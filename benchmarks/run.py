@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig4  edge-connectivity sensitivity
   fig5  learning-rate sensitivity
   table1 sample & communication complexity to eps-stationarity
+  compression  compressor x interval wire-bytes-per-stationarity sweep
+         (+ BENCH_compression.json dump, see benchmarks.check_gates)
   hypergrad  HypergradEngine backend sweep (+ BENCH_hypergrad.json dump)
   kernels  Pallas kernel micro-structure
   roofline dry-run derived roofline terms (if dry-run artifacts exist)
@@ -35,14 +37,16 @@ def main() -> None:
                     help="tiny-iteration run of every suite (CI)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_complexity, bench_connectivity,
-                            bench_convergence, bench_hypergrad,
-                            bench_kernels, bench_lr, roofline_report)
+    from benchmarks import (bench_complexity, bench_compression,
+                            bench_connectivity, bench_convergence,
+                            bench_hypergrad, bench_kernels, bench_lr,
+                            roofline_report)
     suites = [
         ("fig2", bench_convergence.run),
         ("fig4", bench_connectivity.run),
         ("fig5", bench_lr.run),
         ("table1", bench_complexity.run),
+        ("compression", bench_compression.run),
         ("hypergrad", bench_hypergrad.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline_report.run),

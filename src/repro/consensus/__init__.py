@@ -6,6 +6,14 @@ which every ``repro.core`` algorithm does — must not pull in the pallas
 TPU extras or the sharding collectives; those load only when the
 corresponding backend is actually requested.
 """
+from repro.consensus.compress import (
+    COMPRESSORS,
+    CompressionConfig,
+    Compressor,
+    cumulative_wire_bytes,
+    init_ef,
+    make_compressor,
+)
 from repro.consensus.engine import (
     BACKENDS,
     ConsensusEngine,
@@ -16,12 +24,18 @@ from repro.consensus.engine import (
 
 __all__ = [
     "BACKENDS",
+    "COMPRESSORS",
+    "CompressionConfig",
+    "Compressor",
     "ConsensusEngine",
     "DenseEngine",
     "PallasEngine",
     "PermuteEngine",
     "as_engine",
     "consensus_descent_and_track",
+    "cumulative_wire_bytes",
+    "init_ef",
+    "make_compressor",
     "make_engine",
 ]
 

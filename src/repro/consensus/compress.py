@@ -1,0 +1,262 @@
+"""Compressed consensus with error feedback: the wire layer.
+
+The paper's headline result is the O(eps^-1) *communication* complexity
+of INTERACT (Definition 2 / Theorem 1) — and a payload-compression layer
+is the production story for the bandwidth-limited peer networks it
+models.  This module supplies that layer as a small registry of
+``Compressor`` objects plus the ``CompressionConfig`` every consensus
+backend carries:
+
+    compressor = make_compressor(CompressionConfig(kind="sign1bit"))
+    decoded, residual = compressor.compress(x + e)   # EF recursion
+    bytes_  = compressor.bytes_on_wire(x.size)       # wire accounting
+
+Error feedback (EF) is the standard compensation recursion (1-bit Adam /
+DeepSqueeze style, modeled on Bagua's ``OnebitAdamAlgorithm`` warmup-
+then-compress schedule): the agent communicates ``c = C(x + e)`` and
+keeps the compression error ``e <- (x + e) - c`` for the next round, so
+quantization error accumulates in local state instead of biasing the
+consensus fixed point.  Under the ``none`` compressor ``c == x + e``
+exactly, the residual is exactly zero forever, and the combine is the
+uncompressed reference bit for bit.
+
+Compressors (all value-faithful simulations: the *decoded* payload flows
+through the math, the wire bytes are accounted analytically):
+
+    none      identity, 4 bytes/entry.
+    int8      per-payload symmetric int8 (existing uncompensated wire
+              format), 1 byte/entry + one f32 scale.
+    sign1bit  sign * mean(|v|) (Bagua 1-bit style), 1 bit/entry + one
+              f32 scale — 32x fewer bits than f32 before EF overhead.
+    topk      keep the k = ceil(frac * size) largest-magnitude entries,
+              8 bytes/kept entry (f32 value + int32 index).
+
+``CompressionConfig.compress_after`` is the Bagua-style warmup: the
+first ``compress_after`` mixes ship full precision (the tracking state
+is still moving fast), compression switches on afterwards via a
+``jnp.where`` on the step index so the program stays one compile.
+``error_feedback=False`` degrades to the uncompensated path (``c =
+C(x)``, no residual state) — the baseline the benchmarks compare EF
+against at equal bit budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "COMPRESSORS",
+    "CompressionConfig",
+    "Compressor",
+    "cumulative_wire_bytes",
+    "init_ef",
+    "make_compressor",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Declarative wire-compression spec carried by ``SolverConfig``.
+
+    Attributes:
+      kind: "none" | "int8" | "sign1bit" | "topk" (see ``COMPRESSORS``).
+      error_feedback: keep the EF residual ``e <- (x + e) - C(x + e)``
+        in the solver scan carry; False sends ``C(x)`` uncompensated
+        (the legacy int8 behaviour, kept as the bench baseline).
+      compress_after: warmup mixes at full precision before compression
+        switches on (Bagua's warmup-then-compress schedule); the warmup
+        rounds are charged full f32 bytes by the accounting helpers.
+      topk_frac: fraction of entries the "topk" compressor keeps.
+      gamma: consensus damping on the compressed combine, ``mixed = x +
+        gamma * (mix(payload) - x)`` — the CHOCO-Gossip stepsize.  1.0
+        (default) is the undamped combine; hard-sparsifying wires
+        (top-k) need ``gamma < 1`` for the compressed-gossip recursion
+        to contract (undamped top-k provably diverges on tracking
+        iterates).  Free on the wire: damping is applied by the
+        receiver.
+
+    Hashable (frozen dataclass), so it participates directly in
+    ``SolverConfig.static_key()`` — two configs share a compiled sweep
+    program only when their compression specs match.
+    """
+
+    kind: str = "none"
+    error_feedback: bool = True
+    compress_after: int = 0
+    topk_frac: float = 0.05
+    gamma: float = 1.0
+
+    @property
+    def active(self) -> bool:
+        """Does any payload ever leave the agent compressed?"""
+        return self.kind != "none"
+
+    @property
+    def uses_ef(self) -> bool:
+        """Does the solver state need to carry a residual pytree?"""
+        return self.active and self.error_feedback
+
+
+class Compressor:
+    """One wire format: decoded-value simulation + bytes accounting."""
+
+    name = "base"
+
+    def encode_decode(self, v: jax.Array) -> jax.Array:
+        """What the receiver decodes from this payload (f32, v-shaped)."""
+        raise NotImplementedError
+
+    def compress(self, v: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """The EF pair: ``(wire_repr, new_residual)`` for payload ``v``.
+
+        ``v`` is the compensated value ``x + e`` (or the bare ``x``
+        without error feedback); the returned residual is exactly
+        ``v - wire_repr`` — zero for the ``none`` compressor.
+        """
+        c = self.encode_decode(v)
+        return c, v - c
+
+    def bytes_on_wire(self, size: int) -> int:
+        """Wire bytes of ONE payload of ``size`` f32 entries."""
+        raise NotImplementedError
+
+
+class NoneCompressor(Compressor):
+    """Identity: full-precision f32 on the wire (the reference)."""
+
+    name = "none"
+
+    def encode_decode(self, v):
+        return v
+
+    def compress(self, v):
+        # exact: the residual is a true zero, not a rounded one
+        return v, jnp.zeros_like(v)
+
+    def bytes_on_wire(self, size: int) -> int:
+        return 4 * size
+
+
+class Int8Compressor(Compressor):
+    """Per-payload symmetric int8 (the existing uncompensated wire
+    format of the ppermute backend, now EF-capable)."""
+
+    name = "int8"
+
+    def encode_decode(self, v):
+        from repro.sharding.collectives import dequantize_int8, quantize_int8
+        q, scale = quantize_int8(v)
+        return dequantize_int8(q, scale)
+
+    def bytes_on_wire(self, size: int) -> int:
+        return size + 4                      # int8 entries + f32 scale
+
+
+class Sign1BitCompressor(Compressor):
+    """sign(v) * mean(|v|): the 1-bit format of 1-bit Adam / signSGD."""
+
+    name = "sign1bit"
+
+    def encode_decode(self, v):
+        v32 = v.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(v32))
+        return jnp.sign(v32) * scale
+
+    def bytes_on_wire(self, size: int) -> int:
+        return math.ceil(size / 8) + 4       # bitmap + f32 scale
+
+
+class TopKCompressor(Compressor):
+    """Magnitude top-k sparsification: k = ceil(frac * size) entries."""
+
+    name = "topk"
+
+    def __init__(self, frac: float):
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"topk_frac must be in (0, 1], got {frac}")
+        self.frac = float(frac)
+
+    def _k(self, size: int) -> int:
+        return max(1, int(math.ceil(self.frac * size)))
+
+    def encode_decode(self, v):
+        v32 = v.astype(jnp.float32)
+        flat = v32.reshape(-1)
+        k = self._k(flat.shape[0])
+        kth = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        # ties keep a few extra entries (the math is still a valid
+        # contraction); the bytes accounting charges exactly k
+        return jnp.where(jnp.abs(v32) >= kth, v32, 0.0)
+
+    def bytes_on_wire(self, size: int) -> int:
+        return 8 * self._k(size)             # f32 value + int32 index
+
+
+COMPRESSORS = {
+    "none": lambda cfg: NoneCompressor(),
+    "int8": lambda cfg: Int8Compressor(),
+    "sign1bit": lambda cfg: Sign1BitCompressor(),
+    "topk": lambda cfg: TopKCompressor(cfg.topk_frac),
+}
+
+
+def make_compressor(config: CompressionConfig) -> Compressor:
+    """Build the registered compressor for ``config.kind``."""
+    try:
+        factory = COMPRESSORS[config.kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor {config.kind!r}; "
+            f"choose from {sorted(COMPRESSORS)}") from None
+    return factory(config)
+
+
+def init_ef(compression: CompressionConfig | None, **streams):
+    """Zero wire state for the named consensus streams, or ``None``.
+
+    ``init_ef(cfg, x=x, u=u)`` -> ``{"x": {"e": zeros, "ref": zeros},
+    "u": {...}}`` (f32 leaves, ready for the scan carry and buffer
+    donation) when the config compresses with error feedback; ``None``
+    otherwise, so un-compressed states carry no extra buffers and stay
+    bit-compatible with pre-compression checkpoints.
+
+    Per stream, ``e`` is the error-feedback residual and ``ref`` the
+    gossip-tracked public copy: agents transmit the compressed
+    *innovation* ``C(x - ref)`` and every peer (including the sender)
+    advances ``ref <- ref + C(...)``, so as iterates converge the
+    innovation shrinks and even 1-bit wires become asymptotically exact
+    (CHOCO-style difference compression; see docs/CONSENSUS.md).
+    """
+    if compression is None or not compression.uses_ef:
+        return None
+    zeros = lambda tree: jax.tree_util.tree_map(
+        lambda leaf: jnp.zeros(leaf.shape, jnp.float32), tree)
+    return {name: {"e": zeros(tree), "ref": zeros(tree)}
+            for name, tree in streams.items()}
+
+
+def cumulative_wire_bytes(compression: CompressionConfig, size: int,
+                          num_steps: int, comms_per_step: int = 2,
+                          communication_interval: int = 1) -> list[int]:
+    """Per-agent cumulative wire bytes after 0..num_steps solver steps.
+
+    Accounts for the warmup schedule (the first ``compress_after`` mixes
+    ship full f32) and the communication interval (steps with ``t %
+    interval != 0`` ship nothing).  ``size`` is the per-payload entry
+    count, ``comms_per_step`` the algorithm's Definition-2 rounds per
+    iteration (2 for the tracking algorithms, 1 for D-SGD).  Returns a
+    list of length ``num_steps + 1`` (entry t = bytes after t steps).
+    """
+    compressor = make_compressor(compression)
+    full = NoneCompressor().bytes_on_wire(size)
+    packed = compressor.bytes_on_wire(size)
+    out, total = [0], 0
+    for t in range(num_steps):
+        if t % communication_interval == 0:
+            per_round = full if t < compression.compress_after else packed
+            total += comms_per_step * per_round
+        out.append(total)
+    return out

@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.consensus.compress import CompressionConfig
 from repro.consensus.engine import ConsensusEngine
 from repro.core.consensus import MixingSpec, mix_pytree, pad_mixing
 
@@ -27,15 +28,18 @@ class DenseEngine(ConsensusEngine):
 
     name = "dense"
 
-    def __init__(self, mixing: MixingSpec | jax.Array):
+    def __init__(self, mixing: MixingSpec | jax.Array,
+                 compression: CompressionConfig | None = None,
+                 communication_interval: int = 1):
         mat = mixing.matrix if isinstance(mixing, MixingSpec) else mixing
         self.matrix = jnp.asarray(mat)
+        self._configure_wire(compression, communication_interval)
 
     @classmethod
-    def padded(cls, mixing: MixingSpec | jax.Array,
-               pad_to: int) -> "DenseEngine":
+    def padded(cls, mixing: MixingSpec | jax.Array, pad_to: int,
+               **wire_opts) -> "DenseEngine":
         """A dense engine over the ghost-padded (pad_to, pad_to) matrix."""
-        return cls(pad_mixing(mixing, pad_to))
+        return cls(pad_mixing(mixing, pad_to), **wire_opts)
 
     def mix(self, tree, *, dp_key=None, agent_index=None):
         del dp_key, agent_index  # single-host backend: no wire, no DP

@@ -18,6 +18,28 @@ its own copy of the combine:
         The base implementation composes two ``mix`` calls; the pallas
         backend overrides it with one fused kernel launch.
 
+    engine.mix_ef(tree, ef, t) -> (tree, ef)
+        The wire-aware combine: compress each agent's outgoing
+        *innovation* against a gossip-tracked public copy with error
+        feedback (``repro/consensus/compress``), honour the
+        warmup-then-compress schedule and the communication interval,
+        and return the updated wire state ``{"e": residual, "ref":
+        public copy}`` alongside the mixed values.  With ``ef=None``
+        and an inactive wire config it is exactly ``(mix(tree), None)``.
+
+    engine.bytes_on_wire(tree) -> int
+        Wire bytes ONE agent ships for ONE combine of a per-agent
+        payload shaped like ``tree`` (no agent dim) under the engine's
+        compressor — the accounting behind bytes-per-unit-stationarity.
+
+Wire options (every backend): ``compression`` is a
+``repro.consensus.compress.CompressionConfig``; ``communication_interval
+= k`` mixes only on steps with ``t % k == 0`` (local descent in
+between), realised as a ``jnp.where`` on the step index so the program
+stays one compile.  When compression uses error feedback the solver
+carries the residual pytree in its scan state (``ef`` fields on the
+state NamedTuples), threaded through ``consensus_descent_and_track``.
+
 Backends (see ``make_engine``):
 
     dense     (m, m) matmul reference — any topology, single host.
@@ -39,6 +61,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.consensus.compress import CompressionConfig, make_compressor
+
 __all__ = [
     "ConsensusEngine", "as_engine", "make_engine", "BACKENDS",
     "consensus_descent_and_track",
@@ -54,6 +78,35 @@ class ConsensusEngine:
 
     name = "base"
 
+    def _configure_wire(self, compression: CompressionConfig | None = None,
+                        communication_interval: int = 1):
+        """Install the wire options every backend carries (call from
+        ``__init__``): the compressor and the mix cadence."""
+        self.compression = compression or CompressionConfig()
+        self.compressor = make_compressor(self.compression)
+        self.communication_interval = int(communication_interval)
+        if self.communication_interval < 1:
+            raise ValueError("communication_interval must be >= 1, got "
+                             f"{communication_interval}")
+        if not 0.0 < self.compression.gamma <= 1.0:
+            raise ValueError("compression.gamma must be in (0, 1], got "
+                             f"{self.compression.gamma}")
+
+    def _damp(self, mixed, tree):
+        """CHOCO consensus stepsize: ``x + gamma * (mixed - x)``."""
+        g = self.compression.gamma
+        if g == 1.0:
+            return mixed
+        return jax.tree_util.tree_map(
+            lambda mx, xx: (g * _f32(mx) + (1.0 - g) * _f32(xx)
+                            ).astype(mx.dtype), mixed, tree)
+
+    @property
+    def wire_active(self) -> bool:
+        """Does this engine need the (t, ef) wire path at all?"""
+        return (self.compression.active
+                or self.communication_interval != 1)
+
     def mix(self, tree, *, dp_key: jax.Array | None = None,
             agent_index: jax.Array | None = None):
         """Apply ``x_i <- sum_j M_ij x_j`` to every leaf of ``tree``.
@@ -65,10 +118,145 @@ class ConsensusEngine:
         """
         raise NotImplementedError
 
+    # -- the wire path: EF compression + warmup + interval ----------------
+
+    def _self_weights(self) -> jax.Array:
+        """Per-agent self weights M[i, i] (matrix-holding backends)."""
+        return jnp.diagonal(self.matrix).astype(jnp.float32)
+
+    def _require_t(self, t):
+        if t is None:
+            raise ValueError(
+                "the warmup schedule / communication interval need the "
+                "step index: pass t= to mix_ef / step1_step3")
+        return jnp.asarray(t)
+
+    def _compress_payload(self, tree, ef, t):
+        """Per-agent compression of the (m, ...) raveled buffer.
+
+        Returns ``(payload_tree, ef_new)`` where ``payload_tree`` is the
+        value the neighbours decode (leaf dtype, leaf-shaped).  Each
+        agent's leaves are flattened and concatenated into one (m, D)
+        buffer and compressed row-wise — one wire payload per agent per
+        combine, and (because rows compress independently) bitwise
+        invariant under ghost-agent padding.
+
+        With wire state ``ef = {"e": residual, "ref": public copy}`` the
+        agent transmits the compressed innovation ``c = C(x - ref)`` and
+        everyone reconstructs ``payload = ref + c`` (CHOCO-style).  The
+        feedback is intrinsic: ``ref`` advances only by what was
+        actually transmitted, so the residual ``e = (x - ref) - c`` is
+        automatically part of the NEXT innovation (``x' - ref' =
+        (x' - x) + e``) — adding ``e`` explicitly would double-count it
+        and provably diverges for hard-sparsifying wires.  ``ef_new``
+        carries the updated residual (diagnostic) and the advanced
+        public copy.  With ``ef=None`` the raw value is compressed
+        uncompensated (``payload = C(x)``) — no memory, errors are
+        never re-sent.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        m = leaves[0].shape[0]
+        sizes = [int(l.size) // m for l in leaves]
+        concat = lambda tr: jnp.concatenate(
+            [_f32(l).reshape(m, -1)
+             for l in jax.tree_util.tree_flatten(tr)[0]], axis=1)
+
+        def split(buf, dtypes=None):
+            parts = jnp.split(buf, _split_points(sizes), axis=1)
+            return jax.tree_util.tree_unflatten(
+                treedef,
+                [p.reshape(l.shape) if dtypes is None
+                 else p.reshape(l.shape).astype(l.dtype)
+                 for p, l in zip(parts, leaves)])
+
+        buf = concat(tree)
+        if ef is not None:
+            ref = concat(ef["ref"])
+            v = buf - ref
+        else:
+            ref = jnp.zeros_like(buf)
+            v = buf
+        c = jax.vmap(self.compressor.encode_decode)(v)
+        if self.compression.compress_after > 0:
+            warm = self._require_t(t) < self.compression.compress_after
+            c = jnp.where(warm, v, c)
+        payload = ref + c
+        ef_new = None
+        if ef is not None:
+            ef_new = {"e": split(v - c), "ref": split(payload)}
+        return split(payload, dtypes=True), ef_new
+
+    def _apply_interval(self, t, mixed, tree, ef_new, ef):
+        """Skip the combine on steps with ``t % interval != 0``.
+
+        The mixed values fall back to the un-mixed local ones (so Step 1
+        degrades to plain local descent) and the wire state freezes —
+        nothing was sent, so no compression error was incurred and no
+        public copy advanced.
+        """
+        k = self.communication_interval
+        if k == 1:
+            return mixed, ef_new
+        do = (self._require_t(t) % k) == 0
+        pick = lambda a, b: jax.tree_util.tree_map(
+            lambda aa, bb: jnp.where(do, aa, bb), a, b)
+        mixed = pick(mixed, tree)
+        if ef is not None:
+            ef_new = pick(ef_new, ef)
+        return mixed, ef_new
+
+    def mix_ef(self, tree, ef=None, t=None, *,
+               dp_key: jax.Array | None = None,
+               agent_index: jax.Array | None = None):
+        """The wire-aware combine: ``(mixed, ef_new)``.
+
+        ``ef`` is this stream's wire state ``{"e": EF residual, "ref":
+        public copy}`` (``None`` when compression is off or
+        uncompensated).  The reconstructed payload ``ref + C(x - ref +
+        e)`` is what neighbours combine; the agent's own term mixes the
+        clean local value (``mix(payload) + M_ii (x - payload)``) — the
+        same self-clean semantics as the ppermute int8/DP wire.  With an
+        inactive wire config this is exactly ``(mix(tree), ef)``.
+        """
+        if self.compression.active:
+            payload, ef_new = self._compress_payload(tree, ef, t)
+            mixed = self.mix(payload, dp_key=dp_key,
+                             agent_index=agent_index)
+            d = self._self_weights()
+            mixed = jax.tree_util.tree_map(
+                lambda mx, xx, cc: (
+                    _f32(mx) + d.reshape((-1,) + (1,) * (mx.ndim - 1))
+                    * (_f32(xx) - _f32(cc))).astype(mx.dtype),
+                mixed, tree, payload)
+            mixed = self._damp(mixed, tree)
+        else:
+            mixed = self.mix(tree, dp_key=dp_key, agent_index=agent_index)
+            ef_new = ef
+        return self._apply_interval(t, mixed, tree, ef_new, ef)
+
+    def bytes_on_wire(self, tree) -> int:
+        """Wire bytes ONE agent ships for ONE combine of ``tree``.
+
+        ``tree`` is a per-agent payload (no agent dim).  Matrix backends
+        ship one compressed buffer of all leaves concatenated; warmup /
+        interval scheduling is NOT folded in here (see
+        ``repro.consensus.compress.cumulative_wire_bytes``).
+        """
+        size = sum(int(l.size) for l in jax.tree_util.tree_leaves(tree))
+        return self.compressor.bytes_on_wire(size)
+
     def step1_step3(self, x, u, p, p_prev, alpha: float, *,
+                    t=None, ef=None,
                     dp_key: jax.Array | None = None,
                     agent_index: jax.Array | None = None):
-        """Fused eq. (6) + eq. (10): returns (x_new, u_new).
+        """Fused eq. (6) + eq. (10).
+
+        Returns ``(x_new, u_new)`` on the legacy full-precision path
+        (``ef is None`` and no wire options configured), and ``(x_new,
+        u_new, ef_new)`` on the wire path, where ``ef`` / ``ef_new`` is
+        the per-stream wire-state dict ``{"x": {"e", "ref"}, "u":
+        {...}}`` (or ``None`` for uncompensated compression / bare
+        intervals).
 
         Math runs in float32 and is cast back to the leaf dtype, so bf16
         states mix without drift.  The tracking difference is grouped as
@@ -76,8 +264,17 @@ class ConsensusEngine:
         ``mix(u)`` exactly (how the step-core obtains the mixed tracker
         before the new gradients exist).
         """
-        x_mixed = self.mix(x, dp_key=dp_key, agent_index=agent_index)
-        u_mixed = self.mix(u, agent_index=agent_index)
+        wire = ef is not None or self.wire_active
+        if wire:
+            x_mixed, ef_x = self.mix_ef(
+                x, None if ef is None else ef.get("x"), t,
+                dp_key=dp_key, agent_index=agent_index)
+            u_mixed, ef_u = self.mix_ef(
+                u, None if ef is None else ef.get("u"), t,
+                agent_index=agent_index)
+        else:
+            x_mixed = self.mix(x, dp_key=dp_key, agent_index=agent_index)
+            u_mixed = self.mix(u, agent_index=agent_index)
         x_new = jax.tree_util.tree_map(
             lambda mx, uu: (_f32(mx) - alpha * _f32(uu)).astype(mx.dtype),
             x_mixed, u)
@@ -85,7 +282,19 @@ class ConsensusEngine:
             lambda mu, pn, pp: (_f32(mu) + (_f32(pn) - _f32(pp))
                                 ).astype(mu.dtype),
             u_mixed, p, p_prev)
-        return x_new, u_new
+        if not wire:
+            return x_new, u_new
+        ef_new = None if ef is None else {"x": ef_x, "u": ef_u}
+        return x_new, u_new, ef_new
+
+
+def _split_points(sizes):
+    """Split points for ``jnp.split`` from a list of leaf sizes."""
+    out, acc = [], 0
+    for s in sizes[:-1]:
+        acc += s
+        out.append(acc)
+    return out
 
 
 def consensus_descent_and_track(
@@ -94,6 +303,8 @@ def consensus_descent_and_track(
     alpha: float, beta: float,
     grads_fn: Callable,
     *,
+    t=None,
+    ef=None,
     dp_key: jax.Array | None = None,
     agent_index: jax.Array | None = None,
 ):
@@ -112,11 +323,24 @@ def consensus_descent_and_track(
     ``grads_fn(x_new, y_new) -> (p_new, v_new, aux)``; ``aux`` is passed
     through untouched (metrics, or None).
 
-    Returns ``(x_new, y_new, u_new, v_new, p_new, aux)``.
+    ``t`` (the step index) and ``ef`` (the per-stream wire-state dict
+    ``{"x": {"e", "ref"}, ...}``, or ``None``) drive the engine's wire
+    path — compression, warmup schedule, communication interval; both
+    live in the solver's scan carry.  With an inactive wire config they
+    pass straight through.
+
+    Returns ``(x_new, y_new, u_new, v_new, p_new, ef_new, aux)``.
     """
-    x_new, u_mixed = engine.step1_step3(x, u, p_prev, p_prev, alpha,
-                                        dp_key=dp_key,
-                                        agent_index=agent_index)
+    wire = ef is not None or getattr(engine, "wire_active", False)
+    if wire:
+        x_new, u_mixed, ef_new = engine.step1_step3(
+            x, u, p_prev, p_prev, alpha, t=t, ef=ef, dp_key=dp_key,
+            agent_index=agent_index)
+    else:
+        x_new, u_mixed = engine.step1_step3(x, u, p_prev, p_prev, alpha,
+                                            dp_key=dp_key,
+                                            agent_index=agent_index)
+        ef_new = ef
     y_new = jax.tree_util.tree_map(
         lambda yy, vv: (_f32(yy) - beta * _f32(vv)).astype(yy.dtype), y, v)
 
@@ -126,7 +350,7 @@ def consensus_descent_and_track(
         lambda mu, pn, pp: (_f32(mu) + (_f32(pn) - _f32(pp))
                             ).astype(mu.dtype),
         u_mixed, p_new, p_prev)
-    return x_new, y_new, u_new, v_new, p_new, aux
+    return x_new, y_new, u_new, v_new, p_new, ef_new, aux
 
 
 def _make_dense(mixing, **opts):

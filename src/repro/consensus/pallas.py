@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.consensus.compress import CompressionConfig
 from repro.consensus.engine import ConsensusEngine
 from repro.core.consensus import MixingSpec
 from repro.kernels.consensus_step.kernel import DEFAULT_BLOCK_D
@@ -26,19 +27,29 @@ class PallasEngine(ConsensusEngine):
     name = "pallas"
 
     def __init__(self, mixing: MixingSpec | jax.Array,
-                 block_d: int = DEFAULT_BLOCK_D, interpret: bool = True):
+                 block_d: int = DEFAULT_BLOCK_D, interpret: bool = True,
+                 compression: CompressionConfig | None = None,
+                 communication_interval: int = 1):
         mat = mixing.matrix if isinstance(mixing, MixingSpec) else mixing
         self.matrix = jnp.asarray(mat, jnp.float32)
         self.block_d = int(block_d)
         self.interpret = bool(interpret)
+        self._configure_wire(compression, communication_interval)
 
     def mix(self, tree, *, dp_key=None, agent_index=None):
         del dp_key, agent_index  # single-host backend: no wire, no DP
         return consensus_mix(self.matrix, tree, block_d=self.block_d,
                              interpret=self.interpret)
 
-    def step1_step3(self, x, u, p, p_prev, alpha, *, dp_key=None,
-                    agent_index=None):
+    def step1_step3(self, x, u, p, p_prev, alpha, *, t=None, ef=None,
+                    dp_key=None, agent_index=None):
+        if ef is not None or self.wire_active:
+            # wire path: compose two compressed mixes through the base
+            # implementation (each still a kernel launch via self.mix);
+            # the fused Step-1/3 kernel stays on the full-precision path.
+            return super().step1_step3(x, u, p, p_prev, alpha, t=t, ef=ef,
+                                       dp_key=dp_key,
+                                       agent_index=agent_index)
         del dp_key, agent_index
         return consensus_step(self.matrix, x, u, p, p_prev,
                               alpha=float(alpha), block_d=self.block_d,

@@ -22,6 +22,10 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
+
+from repro.consensus.compress import CompressionConfig, Int8Compressor
 from repro.consensus.engine import ConsensusEngine
 from repro.core.consensus import MixingSpec
 from repro.sharding.collectives import (
@@ -37,7 +41,9 @@ class PermuteEngine(ConsensusEngine):
     def __init__(self, mixing: MixingSpec | PermuteSchedule,
                  agent_axes: Sequence[str] = ("data",),
                  compress: str | None = None, dp_sigma: float = 0.0,
-                 impl: str = "ppermute"):
+                 impl: str = "ppermute",
+                 compression: CompressionConfig | None = None,
+                 communication_interval: int = 1):
         self.schedule = (mixing if isinstance(mixing, PermuteSchedule)
                          else permute_schedule(mixing))
         self.agent_axes = tuple(agent_axes)
@@ -46,6 +52,11 @@ class PermuteEngine(ConsensusEngine):
         if impl not in ("ppermute", "psum"):
             raise ValueError(f"unknown ppermute impl {impl!r}")
         self.impl = impl
+        self._configure_wire(compression, communication_interval)
+        if self.compression.active and compress is not None:
+            raise ValueError(
+                "pass either the legacy compress= wire format or a "
+                "CompressionConfig, not both")
 
     @property
     def rounds_per_mix(self) -> int:
@@ -56,3 +67,65 @@ class PermuteEngine(ConsensusEngine):
             tree, self.agent_axes, self.schedule, compress=self.compress,
             dp_sigma=self.dp_sigma if dp_key is not None else 0.0,
             dp_key=dp_key, impl=self.impl, agent_index=agent_index)
+
+    def mix_ef(self, tree, ef=None, t=None, *, dp_key=None,
+               agent_index=None):
+        """Per-neighbour wire path: compress each outgoing *leaf*.
+
+        Unlike the matrix backends (one compressed buffer of all leaves
+        concatenated per agent), every leaf is a separate wire payload
+        here — so scale granularity differs and cross-backend agreement
+        is a tolerance contract, not bitwise (the ``none`` compressor is
+        exact on both).  The wire state carries the same ``{"e", "ref"}``
+        innovation scheme as the matrix backends: the agent ships
+        ``C(x - ref)`` and peers (who track ``ref`` by replaying received
+        innovations) reconstruct ``ref + C(...)`` — the
+        reconstruction is the payload tree handed to the collectives
+        layer; the local self term mixes the clean value by construction
+        (``_ppermute_mix`` seeds the accumulator with it, ``_psum_mix``
+        applies the self-weight correction).
+        """
+        if self.compression.active:
+            v = jax.tree_util.tree_map(
+                lambda l: l.astype(jnp.float32), tree)
+            if ef is not None:
+                v = jax.tree_util.tree_map(
+                    lambda a, r: a - r, v, ef["ref"])
+            c = jax.tree_util.tree_map(self.compressor.encode_decode, v)
+            if self.compression.compress_after > 0:
+                warm = self._require_t(t) < self.compression.compress_after
+                c = jax.tree_util.tree_map(
+                    lambda vv, cc: jnp.where(warm, vv, cc), v, c)
+            if ef is None:
+                ef_new, recon = None, c
+            else:
+                recon = jax.tree_util.tree_map(
+                    lambda r, cc: r + cc, ef["ref"], c)
+                ef_new = {"e": jax.tree_util.tree_map(
+                              lambda a, b: a - b, v, c),
+                          "ref": recon}
+            payload = jax.tree_util.tree_map(
+                lambda cc, l: cc.astype(l.dtype), recon, tree)
+            mixed = permute_mix_tree(
+                tree, self.agent_axes, self.schedule, compress=None,
+                dp_sigma=self.dp_sigma if dp_key is not None else 0.0,
+                dp_key=dp_key, impl=self.impl, agent_index=agent_index,
+                payload_tree=payload)
+            mixed = self._damp(mixed, tree)
+        else:
+            mixed = self.mix(tree, dp_key=dp_key, agent_index=agent_index)
+            ef_new = ef
+        return self._apply_interval(t, mixed, tree, ef_new, ef)
+
+    def bytes_on_wire(self, tree) -> int:
+        """Per-leaf payloads × ppermute rounds (what each link carries).
+
+        The legacy ``compress="int8"`` wire format is accounted with the
+        int8 compressor when no ``CompressionConfig`` is active.
+        """
+        compressor = self.compressor
+        if not self.compression.active and self.compress == "int8":
+            compressor = Int8Compressor()
+        per_leaf = sum(compressor.bytes_on_wire(int(l.size))
+                       for l in jax.tree_util.tree_leaves(tree))
+        return self.rounds_per_mix * per_leaf

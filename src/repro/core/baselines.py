@@ -27,7 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.consensus import consensus_descent_and_track
+from repro.consensus import consensus_descent_and_track, init_ef
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
 from repro.hypergrad import HypergradConfig
@@ -47,6 +47,7 @@ class GtDsgdState(NamedTuple):
     p_prev: object
     t: jax.Array
     key: jax.Array
+    ef: object = None  # error-feedback residuals {"x", "u"} (compressed wire)
 
 
 def _bcast(tree, m):
@@ -56,7 +57,7 @@ def _bcast(tree, m):
 
 def init_gt_dsgd_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
                        x0, y0, data: AgentData, key: jax.Array,
-                       batch_size: int) -> GtDsgdState:
+                       batch_size: int, compression=None) -> GtDsgdState:
     m = data.inner_x.shape[0]
     x, y = _bcast(x0, m), _bcast(y0, m)
     # m-independent key derivation (see per_agent_keys): ghost-padded
@@ -69,7 +70,8 @@ def init_gt_dsgd_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     # p_prev copied: u/p_prev must not alias one buffer (step donation)
     p_prev = jax.tree_util.tree_map(jnp.array, p)
     return GtDsgdState(x=x, y=y, u=p, v=v, p_prev=p_prev,
-                       t=jnp.zeros((), jnp.int32), key=k_state)
+                       t=jnp.zeros((), jnp.int32), key=k_state,
+                       ef=init_ef(compression, x=x, u=p))
 
 
 def gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
@@ -87,11 +89,12 @@ def gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
                                             agent_keys)
         return p_new, v_new, None
 
-    x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
-        engine, state.x, state.y, state.u, state.v, state.p_prev,
-        alpha, beta, grads_fn)
+    x_new, y_new, u_new, v_new, p_new, ef_new, _ = (
+        consensus_descent_and_track(
+            engine, state.x, state.y, state.u, state.v, state.p_prev,
+            alpha, beta, grads_fn, t=state.t, ef=state.ef))
     return GtDsgdState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
-                       t=state.t + 1, key=key)
+                       t=state.t + 1, key=key, ef=ef_new)
 
 
 def make_gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
@@ -115,11 +118,15 @@ class DsgdState(NamedTuple):
     y: object
     t: jax.Array
     key: jax.Array
+    ef: object = None  # error-feedback residual {"x"} (compressed wire)
 
 
-def init_dsgd_state(x0, y0, m: int, key: jax.Array) -> DsgdState:
-    return DsgdState(x=_bcast(x0, m), y=_bcast(y0, m),
-                     t=jnp.zeros((), jnp.int32), key=key)
+def init_dsgd_state(x0, y0, m: int, key: jax.Array,
+                    compression=None) -> DsgdState:
+    x = _bcast(x0, m)
+    return DsgdState(x=x, y=_bcast(y0, m),
+                     t=jnp.zeros((), jnp.int32), key=key,
+                     ef=init_ef(compression, x=x))
 
 
 def dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
@@ -135,12 +142,19 @@ def dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
                 batch_size=batch_size))(state.x, state.y, data, agent_keys)
 
     # No tracking: descend the raw stochastic hypergradient after the
-    # consensus combine.
+    # consensus combine (D-SGD's single mix goes through the wire path —
+    # compression / interval — when the engine has one configured).
+    if state.ef is not None or getattr(engine, "wire_active", False):
+        ef_x = None if state.ef is None else state.ef.get("x")
+        x_mixed, ef_x_new = engine.mix_ef(state.x, ef_x, state.t)
+        ef_new = None if state.ef is None else {"x": ef_x_new}
+    else:
+        x_mixed, ef_new = engine.mix(state.x), state.ef
     x_new = jax.tree_util.tree_map(
-        lambda mx, g: mx - alpha * g, engine.mix(state.x), p)
+        lambda mx, g: mx - alpha * g, x_mixed, p)
     y_new = jax.tree_util.tree_map(
         lambda y, g: y - beta * g, state.y, v)
-    return DsgdState(x=x_new, y=y_new, t=state.t + 1, key=key)
+    return DsgdState(x=x_new, y=y_new, t=state.t + 1, key=key, ef=ef_new)
 
 
 def make_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,

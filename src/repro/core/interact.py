@@ -40,7 +40,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.consensus import as_engine, consensus_descent_and_track
+from repro.consensus import as_engine, consensus_descent_and_track, init_ef
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
 from repro.hypergrad import HypergradConfig, hypergradient
@@ -61,6 +61,7 @@ class InteractState(NamedTuple):
     v: object        # inner gradient, like y
     p_prev: object   # previous local hypergradient, like x
     t: jax.Array     # iteration counter
+    ef: object = None  # error-feedback residuals {"x", "u"} (compressed wire)
 
 
 def _per_agent_batch(data: AgentData):
@@ -82,11 +83,17 @@ def _agent_gradients(problem: BilevelProblem, hg_cfg: HypergradConfig,
 
 
 def init_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
-               x0, y0, data: AgentData) -> InteractState:
+               x0, y0, data: AgentData,
+               compression=None) -> InteractState:
     """Algorithm-1 initialisation: u_0 = grad_bar f(x_0, y_0), v_0 = grad_y g.
 
     ``x0``/``y0`` are single-agent pytrees; every agent starts from the same
     point (x^0, y^0) as in the paper, so we broadcast along the agent axis.
+
+    ``compression`` (a ``repro.consensus.CompressionConfig``) adds the
+    zero error-feedback residuals for the two consensus streams to the
+    state when it uses EF; otherwise ``ef`` stays ``None`` and the state
+    is bit-identical to the uncompressed layout.
     """
     m = data.inner_x.shape[0]
     bcast = lambda tree: jax.tree_util.tree_map(
@@ -102,7 +109,8 @@ def init_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     # or the donating step closures cannot donate the state.
     p_prev = jax.tree_util.tree_map(jnp.array, p)
     return InteractState(x=x, y=y, u=p, v=v, p_prev=p_prev,
-                         t=jnp.zeros((), jnp.int32))
+                         t=jnp.zeros((), jnp.int32),
+                         ef=init_ef(compression, x=x, u=p))
 
 
 def interact_step(
@@ -129,12 +137,13 @@ def interact_step(
         )(x_new, y_new, inner_b, outer_b)
         return p_new, v_new, None
 
-    x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
-        engine, state.x, state.y, state.u, state.v, state.p_prev,
-        alpha, beta, grads_fn)
+    x_new, y_new, u_new, v_new, p_new, ef_new, _ = (
+        consensus_descent_and_track(
+            engine, state.x, state.y, state.u, state.v, state.p_prev,
+            alpha, beta, grads_fn, t=state.t, ef=state.ef))
 
     return InteractState(x=x_new, y=y_new, u=u_new, v=v_new,
-                         p_prev=p_new, t=state.t + 1)
+                         p_prev=p_new, t=state.t + 1, ef=ef_new)
 
 
 def make_interact_step(problem: BilevelProblem, hg_cfg: HypergradConfig,

@@ -31,7 +31,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.consensus import consensus_descent_and_track
+from repro.consensus import consensus_descent_and_track, init_ef
 from repro.core.bilevel import AgentData, BilevelProblem
 from repro.core.consensus import MixingSpec
 from repro.hypergrad import HypergradConfig, hypergradient
@@ -63,6 +63,7 @@ class SvrState(NamedTuple):
     y_prev: object
     t: jax.Array
     key: jax.Array
+    ef: object = None  # error-feedback residuals {"x", "u"} (compressed wire)
 
 
 def _sample_batch(key, data_x, data_y, batch_size):
@@ -92,7 +93,8 @@ def _minibatch_grads(problem, hg_cfg, x, y, data: AgentData, key, batch_size):
 
 
 def init_svr_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
-                   x0, y0, data: AgentData, key: jax.Array) -> SvrState:
+                   x0, y0, data: AgentData, key: jax.Array,
+                   compression=None) -> SvrState:
     m = data.inner_x.shape[0]
     bcast = lambda tree: jax.tree_util.tree_map(
         lambda leaf: jnp.broadcast_to(leaf, (m,) + leaf.shape), tree)
@@ -106,7 +108,8 @@ def init_svr_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     # copies: no two state leaves may alias one buffer (step donation)
     copy = lambda tree: jax.tree_util.tree_map(jnp.array, tree)
     return SvrState(x=x, y=y, u=p, v=v, p_prev=copy(p), x_prev=copy(x),
-                    y_prev=copy(y), t=jnp.zeros((), jnp.int32), key=k_state)
+                    y_prev=copy(y), t=jnp.zeros((), jnp.int32), key=k_state,
+                    ef=init_ef(compression, x=x, u=p))
 
 
 def svr_interact_step(
@@ -158,13 +161,14 @@ def svr_interact_step(
             lambda ai, bi: jnp.where(refresh, ai, bi), a, b)
         return pick(full_p, vr_p), pick(full_v, vr_v), None
 
-    x_new, y_new, u_new, v_new, p_new, _ = consensus_descent_and_track(
-        engine, state.x, state.y, state.u, state.v, state.p_prev,
-        alpha, beta, grads_fn)
+    x_new, y_new, u_new, v_new, p_new, ef_new, _ = (
+        consensus_descent_and_track(
+            engine, state.x, state.y, state.u, state.v, state.p_prev,
+            alpha, beta, grads_fn, t=state.t, ef=state.ef))
 
     return SvrState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
                     x_prev=state.x, y_prev=state.y,
-                    t=state.t + 1, key=key)
+                    t=state.t + 1, key=key, ef=ef_new)
 
 
 def make_svr_interact_step(

@@ -151,14 +151,23 @@ def _outgoing_payload(x, i, dp_sigma, dp_key, leaf_index=0):
 
 
 def _ppermute_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
-                  leaf_index=0):
-    """Per-offset cyclic-shift rounds: the wire-frugal realisation."""
+                  leaf_index=0, payload=None):
+    """Per-offset cyclic-shift rounds: the wire-frugal realisation.
+
+    ``payload`` (when given) replaces ``x`` as the outgoing value — the
+    consensus engine's error-feedback layer hands in the already-
+    compressed (decoded-value) payload here, so the legacy ``compress``
+    quantization is skipped for it.  The accumulator is seeded with the
+    *clean* local ``x`` either way: the agent's own term never round-trips
+    through the wire format.
+    """
     self_w = jnp.asarray(schedule.self_weights, jnp.float32)[i]
     acc = self_w * x.astype(jnp.float32)
     if not schedule.offsets:
         return acc.astype(x.dtype)
 
-    payload = _outgoing_payload(x, i, dp_sigma, dp_key, leaf_index)
+    payload = _outgoing_payload(x if payload is None else payload,
+                                i, dp_sigma, dp_key, leaf_index)
     if compress == "int8":
         q, scale = quantize_int8(payload)
 
@@ -176,7 +185,7 @@ def _ppermute_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
 
 
 def _psum_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
-              leaf_index=0):
+              leaf_index=0, payload=None):
     """All-reduce realisation: agent j contributes M[:, j] (x) sent_j and
     everyone slices its own row of the psum.
 
@@ -185,9 +194,13 @@ def _psum_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
     _SAFE); costs one m-times-payload all-reduce instead of per-edge
     exchanges, but preserves the exact mixing semantics — including that
     the agent's *own* term mixes the clean local iterate while neighbours
-    see the compressed / noised payload.
+    see the compressed / noised payload.  ``payload`` overrides the
+    outgoing value (pre-compressed by the engine's error-feedback layer);
+    the existing self-weight correction then yields exactly
+    ``mix(payload) + M_ii (x - payload)``.
     """
-    payload = _outgoing_payload(x, i, dp_sigma, dp_key, leaf_index)
+    payload = _outgoing_payload(x if payload is None else payload,
+                                i, dp_sigma, dp_key, leaf_index)
     if compress == "int8":
         q, scale = quantize_int8(payload)
         sent = dequantize_int8(q, scale)  # what neighbours decode
@@ -211,7 +224,8 @@ def permute_mix_leaf(x: jax.Array, agent_axes: Sequence[str],
                      dp_key: jax.Array | None = None,
                      impl: str = "ppermute",
                      agent_index: jax.Array | None = None,
-                     leaf_index: int = 0) -> jax.Array:
+                     leaf_index: int = 0,
+                     payload: jax.Array | None = None) -> jax.Array:
     """One consensus combine of a per-agent leaf (inside shard_map).
 
     compress="int8": send int8-quantized payloads (+ scalar scale).
@@ -223,6 +237,9 @@ def permute_mix_leaf(x: jax.Array, agent_axes: Sequence[str],
     agent_index: this agent's ring position; defaults to
     ``lax.axis_index``, but partially-auto old-JAX bodies must thread it
     in as data (partition-id does not lower there).
+    payload: override for the outgoing value (the engine's error-feedback
+    layer passes the pre-compressed payload here; DP noise still applies
+    to it, the local copy still mixes clean).
     """
     name = _axis_name(agent_axes)
     m = axis_size(name)
@@ -234,7 +251,7 @@ def permute_mix_leaf(x: jax.Array, agent_axes: Sequence[str],
          else agent_index)
     mix = _psum_mix if impl == "psum" else _ppermute_mix
     return mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
-               leaf_index)
+               leaf_index, payload)
 
 
 def permute_mix_tree(tree, agent_axes: Sequence[str],
@@ -242,13 +259,17 @@ def permute_mix_tree(tree, agent_axes: Sequence[str],
                      compress: str | None = None, dp_sigma: float = 0.0,
                      dp_key: jax.Array | None = None,
                      impl: str = "ppermute",
-                     agent_index: jax.Array | None = None):
+                     agent_index: jax.Array | None = None,
+                     payload_tree=None):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payloads = (jax.tree_util.tree_flatten(payload_tree)[0]
+                if payload_tree is not None else [None] * len(leaves))
     mixed = [permute_mix_leaf(l, agent_axes, schedule,
                               compress=compress, dp_sigma=dp_sigma,
                               dp_key=dp_key, impl=impl,
-                              agent_index=agent_index, leaf_index=k)
-             for k, l in enumerate(leaves)]
+                              agent_index=agent_index, leaf_index=k,
+                              payload=pl)
+             for k, (l, pl) in enumerate(zip(leaves, payloads))]
     return jax.tree_util.tree_unflatten(treedef, mixed)
 
 

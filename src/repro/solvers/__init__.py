@@ -32,6 +32,7 @@ from repro.solvers.api import (
     run_recorded,
     solve,
 )
+from repro.consensus.compress import CompressionConfig
 from repro.solvers.config import SolverConfig, TopologyConfig
 from repro.solvers.sweep import SweepGroup, SweepResult, expand_grid, sweep
 
@@ -41,6 +42,7 @@ from repro.solvers import interact as _interact      # noqa: F401
 from repro.solvers import svr_interact as _svr       # noqa: F401
 
 __all__ = [
+    "CompressionConfig",
     "SolveResult",
     "Solver",
     "SolverBase",

@@ -174,6 +174,7 @@ class SolverBase:
         self._run_fn = None
         self._traced_fn = None
         self._param_step = None
+        self._engine = None
 
     # -- subclass hooks ---------------------------------------------------
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
@@ -225,8 +226,12 @@ class SolverBase:
             raise ValueError(
                 f"config declares a {spec.num_agents}-agent network "
                 f"(num_agents/mixing) but the data carries m={m} agents")
-        engine = make_engine(self.config.backend, spec,
-                             **dict(self.config.backend_opts))
+        engine = make_engine(
+            self.config.backend, spec,
+            compression=self.config.compression,
+            communication_interval=self.config.communication_interval,
+            **dict(self.config.backend_opts))
+        self._engine = engine
         try:
             self._param_step = self._make_param_step(problem, hg_cfg,
                                                      engine, n)
@@ -382,6 +387,11 @@ class SolveResult:
     us_per_step: float          # stepping time only (metrics excluded)
     samples_per_step: float     # per-agent IFO cost (Definition 1)
     communications_per_step: int
+    # wire bytes one agent ships per consensus round under the engine's
+    # compressor (engine.bytes_on_wire of the per-agent x payload) —
+    # Definition-2 round counts priced in bytes.  Warmup / interval
+    # scheduling is not folded in (see consensus.cumulative_wire_bytes).
+    bytes_per_round: float = 0.0
     # measured per-agent hypergradient accounting (one step, amortized):
     # the engine's counted per-call HypergradStats at the initial iterate
     # times the algorithm's hypergrad calls per step — what Theorems 1-2
@@ -472,8 +482,12 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
         counts = dict(hvp_per_step=per_call.hvp_count * calls,
                       grad_per_step=per_call.grad_count * calls,
                       hess_per_step=per_call.hess_count * calls)
+    # one agent's consensus payload: its slice of the outer iterate tree
+    payload = jax.tree_util.tree_map(lambda l: l[0], state.x)
     return SolveResult(state=state, trace=trace,
                        us_per_step=1e6 * took / max(num_steps, 1),
                        samples_per_step=solver.samples_per_step(n),
                        communications_per_step=solver.communications_per_step,
+                       bytes_per_round=float(
+                           solver._engine.bytes_on_wire(payload)),
                        **counts)

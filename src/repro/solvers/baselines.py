@@ -27,7 +27,8 @@ class GtDsgdSolver(SolverBase):
         # q/batch against — init and step must use the same batch size
         n = data.inner_x.shape[1] + data.outer_x.shape[1]
         return init_gt_dsgd_state(problem, hg_cfg, x0, y0, data, key,
-                                  self.config.resolve_batch(n))
+                                  self.config.resolve_batch(n),
+                                  compression=self.config.compression)
 
     def _make_param_step(self, problem, hg_cfg, engine, n):
         bs = self.config.resolve_batch(n)
@@ -50,7 +51,8 @@ class DsgdSolver(SolverBase):
 
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
         m = data.inner_x.shape[0]
-        return init_dsgd_state(x0, y0, m, key)
+        return init_dsgd_state(x0, y0, m, key,
+                               compression=self.config.compression)
 
     def _make_param_step(self, problem, hg_cfg, engine, n):
         bs = self.config.resolve_batch(n)

@@ -21,6 +21,7 @@ from typing import Any, Mapping
 
 import numpy as np
 
+from repro.consensus.compress import CompressionConfig
 from repro.core.consensus import (
     MixingSpec,
     erdos_renyi_adjacency,
@@ -91,6 +92,14 @@ class SolverConfig:
         "cg-linearized", "neumann", "neumann-linearized", "cholesky" —
         validated against the registry at solver build time, see
         docs/HYPERGRAD.md).
+      compression: wire compression of consensus payloads
+        (``repro.consensus.CompressionConfig``: none / int8 / sign1bit /
+        topk, error feedback, warmup) — see docs/CONSENSUS.md.
+      communication_interval: local descent steps between consensus
+        mixes (1 = mix every step, the paper's algorithms); larger
+        values trade consensus error for wire traffic.  Implemented as
+        a predicate on the step index inside the scan, so the program
+        stays one compile.
       seed: PRNG seed for the stochastic solvers' sampling streams.
     """
 
@@ -105,6 +114,8 @@ class SolverConfig:
     backend: str = "dense"
     backend_opts: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     hypergrad: HypergradConfig = HypergradConfig()
+    compression: CompressionConfig = CompressionConfig()
+    communication_interval: int = 1
     seed: int = 0
 
     def mixing_spec(self, m: int | None = None) -> MixingSpec:
@@ -176,16 +187,17 @@ class SolverConfig:
         a stacked vmap operand instead of a compile-time constant.
         """
         opts = tuple(sorted(self.backend_opts.items()))
+        wire = (self.compression, self.communication_interval)
         if pad_to is not None:
             return (self.algo, self.batch_size, self.q, ("padded", pad_to),
-                    self.backend, opts, self.hypergrad)
+                    self.backend, opts, self.hypergrad, wire)
         mix = None
         if self.mixing is not None:
             mat = np.asarray(self.mixing.matrix)
             mix = (mat.shape, mat.tobytes(), float(self.mixing.lam),
                    tuple(self.mixing.neighbors), tuple(self.mixing.weights))
         return (self.algo, self.batch_size, self.q, self.num_agents, mix,
-                self.topology, self.backend, opts, self.hypergrad)
+                self.topology, self.backend, opts, self.hypergrad, wire)
 
     def batch_values(self) -> tuple[int, float, float]:
         """The per-experiment dynamic values: ``(seed, alpha, beta)``."""

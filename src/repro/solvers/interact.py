@@ -18,7 +18,8 @@ class InteractSolver(SolverBase):
 
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
         # Algorithm 1 is deterministic; the key is unused.
-        return init_state(problem, hg_cfg, x0, y0, data)
+        return init_state(problem, hg_cfg, x0, y0, data,
+                          compression=self.config.compression)
 
     def _make_param_step(self, problem, hg_cfg, engine, n):
         def step(state, data, alpha, beta):

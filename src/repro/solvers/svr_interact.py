@@ -18,7 +18,8 @@ class SvrInteractSolver(SolverBase):
     """Variance-reduced INTERACT (eqs. 23-24 estimators)."""
 
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
-        return init_svr_state(problem, hg_cfg, x0, y0, data, key)
+        return init_svr_state(problem, hg_cfg, x0, y0, data, key,
+                              compression=self.config.compression)
 
     def _make_param_step(self, problem, hg_cfg, engine, n):
         q = self.config.resolve_q(n)

@@ -209,7 +209,11 @@ def _padded_experiment_fn(solver, n: int, num_steps: int,
 
     def one(key, alpha, beta, x0, y0, matrix, num_active, data_idx):
         data = jax.tree_util.tree_map(lambda l: l[data_idx], data_stack)
-        engine = DenseEngine(matrix)
+        # wire options ride along: per-agent (row-wise) compression keeps
+        # ghost-padded combines exact, so compressed configs batch too
+        engine = DenseEngine(
+            matrix, compression=solver.config.compression,
+            communication_interval=solver.config.communication_interval)
         param = solver._make_param_step(problem, hg_cfg, engine, n)
         state = solver._init_state(key, problem, hg_cfg, x0, y0, data)
         metric_fn = None

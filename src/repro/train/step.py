@@ -306,10 +306,10 @@ def make_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
         # Steps 1-3 via the shared step-core on the ppermute engine.
         # First iteration: p_prev is zero and u is zero, so Step 3 sets
         # u_1 = p_1 exactly (matches the Algorithm-1 init u_0 = p_0).
-        x_new, y_new, u_new, v_new, p_new, outer_ce = (
+        x_new, y_new, u_new, v_new, p_new, _, outer_ce = (
             consensus_descent_and_track(
                 engine, state.x, state.y, state.u, state.v, state.p_prev,
-                icfg.alpha, icfg.beta, grads_fn, dp_key=dp_key,
+                icfg.alpha, icfg.beta, grads_fn, t=state.t, dp_key=dp_key,
                 agent_index=agent_idx))
 
         # ---- metrics (replicated over agents) ----------------------------

@@ -124,9 +124,11 @@ def make_svr_train_step(cfg: ArchConfig, mesh, icfg: InteractConfig,
             v_vr = state.v[0] + v_now - v_old
             return un(pick(p_now, p_vr)), pick(v_now, v_vr)[None], ce
 
-        x_new, y_new, u_new, v_new, p_new, ce = consensus_descent_and_track(
-            engine, state.x, state.y, state.u, state.v, state.p_prev,
-            icfg.alpha, icfg.beta, grads_fn, agent_index=ids[0])
+        x_new, y_new, u_new, v_new, p_new, _, ce = (
+            consensus_descent_and_track(
+                engine, state.x, state.y, state.u, state.v, state.p_prev,
+                icfg.alpha, icfg.beta, grads_fn, t=state.t,
+                agent_index=ids[0]))
 
         mean_ce = jax.lax.pmean(ce, aentry)
         new_state = SvrTrainState(

@@ -1,0 +1,218 @@
+"""Unit tests for the compressed-consensus wire layer.
+
+Covers the compressor registry (value fidelity + bytes accounting), the
+error-feedback recursion, the warmup-then-compress schedule, the
+communication-interval cond, and a small end-to-end solver sanity check
+that EF recovers the uncompressed trajectory's stationarity ballpark.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.consensus import (
+    COMPRESSORS,
+    CompressionConfig,
+    DenseEngine,
+    cumulative_wire_bytes,
+    init_ef,
+    make_compressor,
+)
+from repro.core import ring_mixing
+
+
+def _spec(m=4):
+    return ring_mixing(m)
+
+
+# -- compressor registry ----------------------------------------------------
+
+
+def test_registry_kinds_and_unknown():
+    assert set(COMPRESSORS) == {"none", "int8", "sign1bit", "topk"}
+    with pytest.raises(ValueError):
+        make_compressor(CompressionConfig("fp4"))
+
+
+def test_none_compressor_is_identity_with_zero_residual():
+    c = make_compressor(CompressionConfig("none"))
+    v = jax.random.normal(jax.random.PRNGKey(0), (257,))
+    out, res = c.compress(v)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(v))
+    assert np.all(np.asarray(res) == 0.0)
+    assert c.bytes_on_wire(257) == 4 * 257
+
+
+def test_int8_error_bound_and_bytes():
+    c = make_compressor(CompressionConfig("int8"))
+    v = jax.random.normal(jax.random.PRNGKey(1), (513,)) * 3.0
+    out, res = c.compress(v)
+    bound = float(jnp.max(jnp.abs(v))) / 127.0 + 1e-6
+    assert float(jnp.max(jnp.abs(out - v))) <= bound
+    np.testing.assert_allclose(np.asarray(res), np.asarray(v - out),
+                               atol=1e-7)
+    assert c.bytes_on_wire(513) == 513 + 4
+
+
+def test_sign1bit_structure_and_bytes():
+    c = make_compressor(CompressionConfig("sign1bit"))
+    v = jax.random.normal(jax.random.PRNGKey(2), (100,))
+    out, _ = c.compress(v)
+    scale = float(jnp.mean(jnp.abs(v)))
+    # every entry is +/- mean|v| (or 0 where v == 0)
+    np.testing.assert_allclose(
+        np.asarray(jnp.abs(out)[v != 0]), scale, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(jnp.sign(out)),
+                                  np.asarray(jnp.sign(v)))
+    assert c.bytes_on_wire(100) == math.ceil(100 / 8) + 4
+
+
+def test_topk_keeps_largest_and_bytes():
+    c = make_compressor(CompressionConfig("topk", topk_frac=0.1))
+    v = jnp.arange(1.0, 51.0)  # 50 entries, top-5 are 46..50
+    out, res = c.compress(v)
+    nz = np.flatnonzero(np.asarray(out))
+    assert set(nz.tolist()) == {45, 46, 47, 48, 49}
+    np.testing.assert_allclose(np.asarray(out)[nz], np.asarray(v)[nz])
+    np.testing.assert_allclose(np.asarray(res), np.asarray(v - out))
+    assert c.bytes_on_wire(50) == 8 * 5
+    with pytest.raises(ValueError):
+        make_compressor(CompressionConfig("topk", topk_frac=0.0))
+
+
+def test_compression_config_hashable_and_flags():
+    assert hash(CompressionConfig("int8")) == hash(CompressionConfig("int8"))
+    assert not CompressionConfig("none").active
+    assert CompressionConfig("int8").active
+    assert CompressionConfig("int8").uses_ef
+    assert not CompressionConfig("int8", error_feedback=False).uses_ef
+    assert not CompressionConfig("none").uses_ef
+
+
+# -- EF state + engine wire behaviour ---------------------------------------
+
+
+def test_init_ef_shapes_and_none():
+    tree = {"a": jnp.ones((4, 3)), "b": jnp.ones((4,))}
+    assert init_ef(CompressionConfig("none"), x=tree) is None
+    assert init_ef(CompressionConfig("int8", error_feedback=False),
+                   x=tree) is None
+    ef = init_ef(CompressionConfig("int8"), x=tree, u=tree)
+    assert set(ef) == {"x", "u"}
+    assert set(ef["x"]) == {"e", "ref"}
+    for leaf in jax.tree_util.tree_leaves(ef):
+        assert leaf.dtype == jnp.float32
+        assert np.all(np.asarray(leaf) == 0.0)
+
+
+def test_warmup_keeps_residual_exactly_zero():
+    eng = DenseEngine(_spec(), compression=CompressionConfig(
+        "sign1bit", compress_after=5))
+    tree = jax.random.normal(jax.random.PRNGKey(3), (4, 33))
+    z = jnp.zeros((4, 33), jnp.float32)
+    ef = {"e": z, "ref": z}
+    ref = DenseEngine(_spec()).mix(tree)
+    # inside warmup: exact mix, residual still exactly zero, public copy
+    # tracks the iterate exactly
+    mixed, ef_new = eng.mix_ef(tree, ef, t=jnp.asarray(2))
+    np.testing.assert_allclose(np.asarray(mixed), np.asarray(ref),
+                               atol=1e-6)
+    assert np.all(np.asarray(ef_new["e"]) == 0.0)
+    np.testing.assert_array_equal(np.asarray(ef_new["ref"]),
+                                  np.asarray(tree))
+    # past warmup: compression engages, residual becomes nonzero
+    mixed2, ef2 = eng.mix_ef(tree, ef, t=jnp.asarray(5))
+    assert float(jnp.max(jnp.abs(ef2["e"]))) > 0.0
+    assert float(jnp.max(jnp.abs(mixed2 - ref))) > 0.0
+
+
+def test_ef_accumulates_quantization_error():
+    """Transmitting the same v twice with EF: c1 + c2 = 2v - r2, so the
+    cumulative transmission error is one residual — strictly smaller
+    than the no-feedback error 2*||v - c1|| of repeating c1."""
+    c = make_compressor(CompressionConfig("sign1bit"))
+    v = jax.random.normal(jax.random.PRNGKey(4), (512,))
+    c1, r1 = c.compress(v)
+    c2, r2 = c.compress(v + r1)
+    np.testing.assert_allclose(np.asarray(c1 + c2), np.asarray(2 * v - r2),
+                               atol=1e-5)
+    assert (float(jnp.linalg.norm(r2))
+            < 2 * float(jnp.linalg.norm(v - c1)))
+
+
+def test_communication_interval_skips_and_freezes_residual():
+    eng = DenseEngine(_spec(), compression=CompressionConfig("int8"),
+                      communication_interval=3)
+    tree = jax.random.normal(jax.random.PRNGKey(5), (4, 17))
+    z = jnp.zeros((4, 17), jnp.float32)
+    ef = {"e": z, "ref": z}
+    ref = DenseEngine(_spec()).mix(tree)
+    # t = 1: skip step -> identity, wire state frozen (nothing sent)
+    mixed, ef_new = eng.mix_ef(tree, ef, t=jnp.asarray(1))
+    np.testing.assert_array_equal(np.asarray(mixed), np.asarray(tree))
+    assert np.all(np.asarray(ef_new["e"]) == 0.0)
+    assert np.all(np.asarray(ef_new["ref"]) == 0.0)
+    # t = 3: comm step -> compressed mix, wire state updates
+    mixed3, ef3 = eng.mix_ef(tree, ef, t=jnp.asarray(3))
+    assert float(jnp.max(jnp.abs(mixed3 - tree))) > 0.0
+    bound = float(jnp.max(jnp.abs(tree))) / 127.0 + 1e-6
+    assert float(jnp.max(jnp.abs(mixed3 - ref))) <= bound
+    assert float(jnp.max(jnp.abs(ef3["e"]))) > 0.0
+    with pytest.raises(ValueError):
+        DenseEngine(_spec(), communication_interval=0)
+
+
+def test_bytes_on_wire_per_tree():
+    tree = {"a": jnp.ones((37, 5)), "b": jnp.ones((131,))}
+    size = 37 * 5 + 131
+    assert DenseEngine(_spec()).bytes_on_wire(tree) == 4 * size
+    eng = DenseEngine(_spec(), compression=CompressionConfig("sign1bit"))
+    assert eng.bytes_on_wire(tree) == math.ceil(size / 8) + 4
+
+
+def test_cumulative_wire_bytes_schedule():
+    comp = CompressionConfig("sign1bit", compress_after=2)
+    size = 800
+    cum = cumulative_wire_bytes(comp, size, num_steps=6, comms_per_step=2,
+                                communication_interval=2)
+    assert len(cum) == 7 and cum[0] == 0
+    full = 2 * 4 * size
+    small = 2 * (math.ceil(size / 8) + 4)
+    # t=0 comm (warmup, full), t=1 skip, t=2 comm (compressed), t=3 skip...
+    assert cum[1] - cum[0] == full
+    assert cum[2] == cum[1]
+    assert cum[3] - cum[2] == small
+    assert cum[4] == cum[3]
+    # uncompressed config: every step full
+    cum0 = cumulative_wire_bytes(CompressionConfig("none"), size, 3)
+    assert cum0 == [0, full, 2 * full, 3 * full]
+
+
+# -- end-to-end solver sanity ------------------------------------------------
+
+
+def test_solver_state_carries_ef_and_converges():
+    from repro.solvers import SolverConfig, solve
+    kw = dict(num_steps=25, record_every=5, num_agents=4, n_per_agent=60)
+    ref = solve(SolverConfig(algo="interact", alpha=0.05, beta=0.05), **kw)
+    comp = solve(SolverConfig(algo="interact", alpha=0.05, beta=0.05,
+                              compression=CompressionConfig("sign1bit")),
+                 **kw)
+    assert ref.state.ef is None
+    assert set(comp.state.ef) == {"x", "u"}
+    # EF keeps the compressed run in the same stationarity ballpark
+    assert comp.trace[-1] < 10.0 * ref.trace[-1] + 1e-3
+    # and both actually make progress from the shared init
+    assert comp.trace[-1] < comp.trace[0]
+    # per-round wire bytes shrink by > 8x
+    assert ref.bytes_per_round / comp.bytes_per_round > 8.0
+
+
+def test_dsgd_carries_x_only_ef():
+    from repro.solvers import SolverConfig, solve
+    res = solve(SolverConfig(algo="d-sgd", alpha=0.05, beta=0.05,
+                             compression=CompressionConfig("int8")),
+                num_steps=5, record_every=0, num_agents=4, n_per_agent=40)
+    assert set(res.state.ef) == {"x"}

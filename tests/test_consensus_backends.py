@@ -274,3 +274,166 @@ def test_psum_impl_matches_ppermute_impl():
         print("PSUM_IMPL_OK")
     """)
     assert "PSUM_IMPL_OK" in out
+
+
+# -- compressed wire: cross-backend tolerance contract ----------------------
+#
+# dense/pallas compress one concatenated per-agent buffer, ppermute
+# compresses per-leaf payloads — different scale granularity, so the
+# backends agree within a quantization tolerance rather than bitwise.
+# The `none` compressor must be exact everywhere (and its EF residual a
+# true zero).
+
+
+def test_none_compressor_ef_residual_exactly_zero():
+    """Regression: the identity compressor's EF recursion must produce
+    bit-exact zero residuals and the exact uncompressed combine."""
+    from repro.consensus import CompressionConfig
+    spec = _specs()["erdos-renyi"]
+    tree = _tree(jax.random.PRNGKey(7))
+    zeros = jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), tree)
+    ef = {"e": zeros, "ref": zeros}
+    for engine in (DenseEngine(spec, compression=CompressionConfig("none")),
+                   PallasEngine(spec,
+                                compression=CompressionConfig("none"))):
+        # "none" is not wire-active, but the EF plumbing must still be
+        # callable (mix_ef is the generic entry point for the step-core)
+        mixed, ef_new = engine.mix_ef(tree, ef, t=jnp.zeros((), jnp.int32))
+        want = engine.mix(tree)
+        for a, b in zip(jax.tree_util.tree_leaves(mixed),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # an inactive wire passes the state through untouched: residual
+        # and public copy both stay exactly zero
+        for r in jax.tree_util.tree_leaves(ef_new):
+            assert np.all(np.asarray(r) == 0.0)
+
+
+def test_int8_ef_mix_dense_within_quantization_tolerance():
+    """int8+EF dense combine: within one quantization step of the clean
+    reference, residual bounded by the per-row quantization scale."""
+    from repro.consensus import CompressionConfig
+    spec = _specs()["ring"]
+    tree = _tree(jax.random.PRNGKey(3))
+    zeros = jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), tree)
+    eng = DenseEngine(spec, compression=CompressionConfig("int8"))
+    mixed, ef_new = eng.mix_ef(tree, {"e": zeros, "ref": zeros},
+                               t=jnp.zeros((), jnp.int32))
+    want = DenseEngine(spec).mix(tree)
+    # round one the innovation IS the value (ref = 0): max|row| / 127
+    # bounds the elementwise quantization error; mixing is an average so
+    # the combine inherits the bound
+    bound = max(float(jnp.max(jnp.abs(l))) for l in
+                jax.tree_util.tree_leaves(tree)) / 127.0 + 1e-6
+    for a, b in zip(jax.tree_util.tree_leaves(mixed),
+                    jax.tree_util.tree_leaves(want)):
+        assert float(jnp.max(jnp.abs(a - b))) <= bound
+    for r in jax.tree_util.tree_leaves(ef_new["e"]):
+        assert float(jnp.max(jnp.abs(r))) <= bound
+
+
+def test_int8_compression_dense_and_ppermute_tolerance_contract():
+    """CompressionConfig("int8") on dense AND ppermute: both stay within
+    one quantization step of the uncompressed dense reference, and the
+    two compressed backends agree to the same tolerance."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.consensus import (CompressionConfig, DenseEngine,
+                                     PermuteEngine)
+        from repro.core import erdos_renyi_adjacency, laplacian_mixing
+        from repro.sharding.compat import shard_map, set_mesh
+
+        mesh = jax.make_mesh((8,), ("data",))
+        m = 8
+        spec = laplacian_mixing(erdos_renyi_adjacency(m, 0.5, seed=11))
+        tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, 37, 5)),
+                "b": jax.random.normal(jax.random.PRNGKey(1), (m, 131))}
+        zeros = jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), tree)
+        ef = {"e": zeros, "ref": zeros}
+        comp = CompressionConfig("int8")
+        t0 = jnp.zeros((), jnp.int32)
+
+        ref = DenseEngine(spec).mix(tree)
+        md, _ = DenseEngine(spec, compression=comp).mix_ef(tree, ef, t0)
+
+        eng = PermuteEngine(spec, agent_axes=("data",), compression=comp)
+        fn = shard_map(lambda t, r: eng.mix_ef(t, r, t0), mesh=mesh,
+                       in_specs=(P("data"), P("data")),
+                       out_specs=(P("data"), P("data")),
+                       axis_names={"data"}, check_vma=False)
+        with set_mesh(mesh):
+            mp, efp = jax.jit(fn)(tree, ef)
+
+        bound = max(float(jnp.max(jnp.abs(l)))
+                    for l in jax.tree_util.tree_leaves(tree)) / 127.0 + 1e-6
+        for a, b, r in zip(jax.tree_util.tree_leaves(md),
+                           jax.tree_util.tree_leaves(mp),
+                           jax.tree_util.tree_leaves(ref)):
+            assert float(jnp.max(jnp.abs(a - r))) <= bound     # dense vs ref
+            assert float(jnp.max(jnp.abs(b - r))) <= bound     # ppermute vs ref
+            assert float(jnp.max(jnp.abs(a - b))) <= 2 * bound # cross-backend
+        for r in jax.tree_util.tree_leaves(efp["e"]):
+            assert float(jnp.max(jnp.abs(r))) <= bound         # EF bounded
+        print("INT8_CONTRACT_OK")
+    """)
+    assert "INT8_CONTRACT_OK" in out
+
+
+def test_dp_noise_dense_reference_tolerance_contract():
+    """Legacy DP wire (ppermute) vs the clean dense reference: the
+    perturbation is bounded by the noise scale times the off-diagonal
+    mass (the self term mixes clean), on both ppermute and psum impls."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.consensus import DenseEngine, PermuteEngine
+        from repro.core import erdos_renyi_adjacency, laplacian_mixing
+        from repro.sharding.compat import shard_map, set_mesh
+
+        mesh = jax.make_mesh((8,), ("data",))
+        m = 8
+        spec = laplacian_mixing(erdos_renyi_adjacency(m, 0.5, seed=11))
+        X = jax.random.normal(jax.random.PRNGKey(0), (m, 64))
+        ids = jnp.arange(m, dtype=jnp.int32)
+        ref = DenseEngine(spec).mix(X)
+        sigma = 0.05
+        for impl in ("ppermute", "psum"):
+            eng = PermuteEngine(spec, agent_axes=("data",),
+                                dp_sigma=sigma, impl=impl)
+            fn = shard_map(
+                lambda t, ii: eng.mix(t, dp_key=jax.random.PRNGKey(5),
+                                      agent_index=ii[0]),
+                mesh=mesh, in_specs=(P("data"), P("data")),
+                out_specs=P("data"), axis_names={"data"}, check_vma=False)
+            with set_mesh(mesh):
+                got = jax.jit(fn)(X, ids)
+            diff = np.abs(np.asarray(got) - np.asarray(ref))
+            assert diff.max() > 1e-5            # noise actually applied
+            # 6-sigma on a weighted sum of <= m unit-variance Gaussians
+            assert diff.max() < 6 * sigma * np.sqrt(m), diff.max()
+        print("DP_CONTRACT_OK")
+    """)
+    assert "DP_CONTRACT_OK" in out
+
+
+def test_sign1bit_ef_solver_paths_agree_dense_vs_pallas():
+    """A compressed full-solver trajectory (sign1bit+EF) matches between
+    the dense and pallas backends — the wire path composes through the
+    same base mixes on both."""
+    from repro.solvers import CompressionConfig, SolverConfig, solve
+    comp = CompressionConfig("sign1bit", compress_after=1)
+    kw = dict(num_steps=3, record_every=0, num_agents=4, n_per_agent=40)
+    rd = solve(SolverConfig(algo="interact", alpha=0.05, beta=0.05,
+                            backend="dense", compression=comp), **kw)
+    rp = solve(SolverConfig(algo="interact", alpha=0.05, beta=0.05,
+                            backend="pallas", compression=comp), **kw)
+    for a, b in zip(jax.tree_util.tree_leaves(rd.state.x),
+                    jax.tree_util.tree_leaves(rp.state.x)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(rd.state.ef),
+                    jax.tree_util.tree_leaves(rp.state.ef)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)

@@ -318,3 +318,86 @@ def test_mixed_sample_counts_rejected_under_padding(setup):
     with pytest.raises(ValueError, match="sample counts"):
         sweep(configs, 2, 0, problem=prob, x0=x0, y0=y0,
               data={4: datas[4], 8: short}, pad_agents=True)
+
+
+# -- compressed wire under padding ------------------------------------------
+
+def test_static_key_splits_and_groups_wire_configs(setup):
+    """Compression/interval are static: differing wire options split a
+    group (unpadded AND pad_to branches); identical ones merge."""
+    from repro.solvers import CompressionConfig
+    a = _config(setup, "interact", num_agents=4)
+    b = dataclasses.replace(a, compression=CompressionConfig("sign1bit"))
+    c = dataclasses.replace(a, communication_interval=2)
+    d = dataclasses.replace(a, compression=CompressionConfig("sign1bit"))
+    for kw in ({}, {"pad_to": 8}):
+        assert a.static_key(**kw) != b.static_key(**kw)
+        assert a.static_key(**kw) != c.static_key(**kw)
+        assert b.static_key(**kw) != c.static_key(**kw)
+        assert b.static_key(**kw) == d.static_key(**kw)
+    # same wire options across network sizes still merge under padding
+    e = dataclasses.replace(b, num_agents=8)
+    assert b.static_key(pad_to=8) == e.static_key(pad_to=8)
+
+
+@pytest.mark.parametrize("kind", ("int8", "sign1bit"))
+def test_padded_compressed_traces_bitwise_match_unpadded(setup, kind):
+    """Per-agent row-wise compression is padding-invariant: the padded
+    compressed program reproduces the unpadded compressed sweep bitwise,
+    and ghost rows (identity self-loops) stay fixed."""
+    from repro.solvers import CompressionConfig
+    prob, x0, y0, _, datas, metric = setup
+    comp = CompressionConfig(kind)
+    configs = expand_grid(
+        _config(setup, "interact", compression=comp),
+        num_agents=SIZES, seed=(0, 1))
+    res = sweep(configs, 4, 2, problem=prob, x0=x0, y0=y0, data=datas,
+                metric_fn=metric, pad_agents=True)
+    assert res.num_dispatches == 1
+    reference = _unpadded_rows(setup, configs, 4, 2)
+    np.testing.assert_array_equal(reference, res.traces)
+
+
+def test_padded_ghost_rows_contribute_zero_compressed_payload(setup):
+    """A ghost row's compressed contribution to active agents is exactly
+    zero: poisoning ghost rows of the state does not move active rows of
+    a compressed padded combine (block-diagonal mixing + row-wise
+    compression never crosses the active/ghost boundary)."""
+    from repro.consensus.dense import DenseEngine
+    from repro.solvers import CompressionConfig
+    spec = ring_mixing(5)
+    eng = DenseEngine.padded(spec, 8,
+                             compression=CompressionConfig("sign1bit"))
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 13))
+    z = jnp.zeros((8, 13), jnp.float32)
+    ef = {"e": z, "ref": z}
+    t0 = jnp.zeros((), jnp.int32)
+    mixed, _ = eng.mix_ef(x, ef, t0)
+    poisoned = x.at[5:].set(1e6)
+    mixed_p, ef_p = eng.mix_ef(poisoned, ef, t0)
+    np.testing.assert_array_equal(np.asarray(mixed[:5]),
+                                  np.asarray(mixed_p[:5]))
+    # ghost wire state never leaks into active rows either
+    ghost_state = jax.tree_util.tree_map(
+        lambda l: l.at[:5].set(0.0), ef_p)
+    mixed2, _ = eng.mix_ef(x, ghost_state, t0)
+    np.testing.assert_array_equal(np.asarray(mixed[:5]),
+                                  np.asarray(mixed2[:5]))
+
+
+def test_padded_compressed_final_states_carry_ef(setup):
+    from repro.solvers import CompressionConfig
+    prob, x0, y0, _, datas, _ = setup
+    comp = CompressionConfig("int8")
+    configs = [_config(setup, "interact", num_agents=m, compression=comp)
+               for m in SIZES]
+    res = sweep(configs, 3, 0, problem=prob, x0=x0, y0=y0, data=datas,
+                pad_agents=True, return_states=True)
+    for i, m in enumerate(SIZES):
+        assert set(res.states[i].ef) == {"x", "u"}
+        solo = sweep([configs[i]], 3, 0, problem=prob, x0=x0, y0=y0,
+                     data=datas[m], return_states=True)
+        for a, b in zip(jax.tree_util.tree_leaves(solo.states[0].x),
+                        jax.tree_util.tree_leaves(res.states[i].x)):
+            np.testing.assert_array_equal(np.asarray(a),
+                                          np.asarray(b)[:m])
