@@ -64,6 +64,7 @@ def _connectivity_grid(smoke: bool, rows: list, records: list) -> None:
                 f"seeds={len(seeds)};lambda={s.spec.lam:.3f}"))
             records.append({"name": f"fig4_pc{pc}_{algo}", "algo": algo,
                             "p_connect": pc, "lam": float(s.spec.lam),
+                            "spectral_gap": 1.0 - float(s.spec.lam),
                             "seeds": len(seeds), "iters": iters,
                             "record_every": rec,
                             "trace_mean": mean.tolist(),

@@ -146,11 +146,30 @@ def sweep_json_path() -> str:
 
 def record_sweep_section(section: str, records: list[dict],
                          **headline) -> None:
-    """Merge one suite's records (+ optional headline fields) and dump."""
+    """Merge one suite's records (+ optional headline fields) and dump.
+
+    The merge goes through the on-disk file, not just module state, so
+    the dump stays complete when the contributing suites run in
+    separate processes (the ``benchmarks.run`` harness spawns one child
+    per suite) — this process's contributions win any conflict.
+    """
+    path = sweep_json_path()
+    try:
+        with open(path) as fh:
+            on_disk = json.load(fh)
+        if on_disk.get("bench") == "sweep":
+            sections = dict(on_disk.get("sections", {}))
+            sections.update(_SWEEP_DUMP["sections"])
+            on_disk.update(_SWEEP_DUMP)
+            on_disk["sections"] = sections
+            _SWEEP_DUMP.clear()
+            _SWEEP_DUMP.update(on_disk)
+    except (OSError, ValueError):
+        pass  # no prior dump (or unreadable): start from module state
     _SWEEP_DUMP["sections"][section] = records
     _SWEEP_DUMP.update(headline)
     try:
-        with open(sweep_json_path(), "w") as fh:
+        with open(path, "w") as fh:
             json.dump(_SWEEP_DUMP, fh, indent=1)
     except OSError:
         pass  # read-only workdir: CSV rows still carry everything

@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
          (+ BENCH_compression.json dump, see benchmarks.check_gates)
   hypergrad  HypergradEngine backend sweep (+ BENCH_hypergrad.json dump)
   kernels  Pallas kernel micro-structure
+  topology  time-varying topology: stationarity + wire bytes vs link
+         failure, gossip vs static at matched bandwidth
+         (+ BENCH_topology.json dump, see benchmarks.check_gates)
   roofline dry-run derived roofline terms (if dry-run artifacts exist)
 
 The figure suites (fig2/fig4/fig5) run their seed x config grids through
@@ -23,6 +26,10 @@ bench-smoke CI job asserts on, so batching regressions fail the build.
 bench-smoke CI job to keep the harness from rotting against API changes):
 
     PYTHONPATH=src python -m benchmarks.run --smoke
+
+The harness runs each suite in its own subprocess so results stay
+bitwise-identical to standalone runs (``--suite NAME`` runs one suite
+in-process; that is what the children execute).
 """
 from __future__ import annotations
 
@@ -31,36 +38,67 @@ import sys
 import traceback
 
 
+SUITE_NAMES = ("fig2", "fig4", "fig5", "table1", "compression",
+               "hypergrad", "kernels", "topology", "roofline")
+
+
+def _suite_fn(name: str):
+    from benchmarks import (bench_complexity, bench_compression,
+                            bench_connectivity, bench_convergence,
+                            bench_hypergrad, bench_kernels, bench_lr,
+                            bench_topology, roofline_report)
+    return {
+        "fig2": bench_convergence.run,
+        "fig4": bench_connectivity.run,
+        "fig5": bench_lr.run,
+        "table1": bench_complexity.run,
+        "compression": bench_compression.run,
+        "hypergrad": bench_hypergrad.run,
+        "kernels": bench_kernels.run,
+        "topology": bench_topology.run,
+        "roofline": roofline_report.run,
+    }[name]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-iteration run of every suite (CI)")
+    ap.add_argument("--suite", choices=SUITE_NAMES, default=None,
+                    help="run a single suite in-process (the full "
+                         "harness spawns one such child per suite)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_complexity, bench_compression,
-                            bench_connectivity, bench_convergence,
-                            bench_hypergrad, bench_kernels, bench_lr,
-                            roofline_report)
-    suites = [
-        ("fig2", bench_convergence.run),
-        ("fig4", bench_connectivity.run),
-        ("fig5", bench_lr.run),
-        ("table1", bench_complexity.run),
-        ("compression", bench_compression.run),
-        ("hypergrad", bench_hypergrad.run),
-        ("kernels", bench_kernels.run),
-        ("roofline", roofline_report.run),
-    ]
-    print("name,us_per_call,derived")
-    failures = 0
-    for name, fn in suites:
+    if args.suite is not None:
+        fn = _suite_fn(args.suite)
         try:
             for row in fn(smoke=args.smoke):
                 print(row.csv(), flush=True)
         except Exception:
-            failures += 1
-            print(f"{name},0.0,ERROR", flush=True)
+            print(f"{args.suite},0.0,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+            raise SystemExit(1)
+        return
+
+    # Each suite runs in its own subprocess.  jaxlib 0.4.37's CPU
+    # backend misbehaves once a few hundred compiled executables have
+    # accumulated in one process (low-bit result corruption, and
+    # eventually SIGSEGV — the same pathology tests/conftest.py works
+    # around), and jax.clear_caches() between suites does not reset the
+    # responsible process-global state.  Process isolation does: it
+    # keeps every suite's results bitwise-identical to a standalone
+    # run, which the bitwise gates (trace_bitwise_match,
+    # static_bitwise_match) depend on.
+    import subprocess
+
+    print("name,us_per_call,derived", flush=True)
+    failures = 0
+    for name in SUITE_NAMES:
+        cmd = [sys.executable, "-m", "benchmarks.run", "--suite", name]
+        if args.smoke:
+            cmd.append("--smoke")
+        if subprocess.run(cmd).returncode != 0:
+            failures += 1
     if failures:
         raise SystemExit(1)
 

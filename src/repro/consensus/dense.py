@@ -41,6 +41,6 @@ class DenseEngine(ConsensusEngine):
         """A dense engine over the ghost-padded (pad_to, pad_to) matrix."""
         return cls(pad_mixing(mixing, pad_to), **wire_opts)
 
-    def mix(self, tree, *, dp_key=None, agent_index=None):
+    def mix(self, tree, *, matrix=None, dp_key=None, agent_index=None):
         del dp_key, agent_index  # single-host backend: no wire, no DP
-        return mix_pytree(self.matrix, tree)
+        return mix_pytree(self.matrix if matrix is None else matrix, tree)

@@ -78,6 +78,10 @@ class ConsensusEngine:
 
     name = "base"
 
+    # time-varying topology runtime (repro.topology.runtime), installed
+    # by ``attach_topology``; None = the fixed-matrix path, bit for bit.
+    topology = None
+
     def _configure_wire(self, compression: CompressionConfig | None = None,
                         communication_interval: int = 1):
         """Install the wire options every backend carries (call from
@@ -107,22 +111,45 @@ class ConsensusEngine:
         return (self.compression.active
                 or self.communication_interval != 1)
 
-    def mix(self, tree, *, dp_key: jax.Array | None = None,
+    def mix(self, tree, *, matrix=None, dp_key: jax.Array | None = None,
             agent_index: jax.Array | None = None):
         """Apply ``x_i <- sum_j M_ij x_j`` to every leaf of ``tree``.
 
-        ``dp_key`` (backends that support it) keys the local-DP noise on
-        the outgoing payload; ``agent_index`` threads the agent's ring
-        position into distributed backends that cannot derive it from the
-        mesh.  Single-host backends ignore both.
+        ``matrix`` overrides the engine's fixed mixing matrix for this
+        call (the per-step matrix of a time-varying topology; on the
+        ppermute backend a ``PermuteWeights`` override on the shared
+        offset schedule).  ``dp_key`` (backends that support it) keys
+        the local-DP noise on the outgoing payload; ``agent_index``
+        threads the agent's ring position into distributed backends that
+        cannot derive it from the mesh.  Single-host backends ignore
+        both.
         """
         raise NotImplementedError
 
+    def topology_matrix(self, t, tree=None):
+        """The round's mixing-matrix override, or None on the fixed path.
+
+        With a time-varying topology attached (``engine.topology``), the
+        matrix stream is a function of the step index — gathering
+        ``matrices[t % T]`` inside the scan keeps the whole run one
+        compile.  The adaptive process additionally reads the current
+        iterates (``tree``).
+        """
+        if self.topology is None:
+            return None
+        if t is None:
+            raise ValueError(
+                "a time-varying topology needs the step index: pass t= "
+                "to mix_ef / step1_step3 (or resolve the matrix yourself "
+                "via engine.topology_matrix(t) and pass matrix=)")
+        return self.topology.matrix_at(t, tree)
+
     # -- the wire path: EF compression + warmup + interval ----------------
 
-    def _self_weights(self) -> jax.Array:
+    def _self_weights(self, matrix=None) -> jax.Array:
         """Per-agent self weights M[i, i] (matrix-holding backends)."""
-        return jnp.diagonal(self.matrix).astype(jnp.float32)
+        mat = self.matrix if matrix is None else matrix
+        return jnp.diagonal(mat).astype(jnp.float32)
 
     def _require_t(self, t):
         if t is None:
@@ -205,7 +232,7 @@ class ConsensusEngine:
             ef_new = pick(ef_new, ef)
         return mixed, ef_new
 
-    def mix_ef(self, tree, ef=None, t=None, *,
+    def mix_ef(self, tree, ef=None, t=None, *, matrix=None,
                dp_key: jax.Array | None = None,
                agent_index: jax.Array | None = None):
         """The wire-aware combine: ``(mixed, ef_new)``.
@@ -217,12 +244,16 @@ class ConsensusEngine:
         clean local value (``mix(payload) + M_ii (x - payload)``) — the
         same self-clean semantics as the ppermute int8/DP wire.  With an
         inactive wire config this is exactly ``(mix(tree), ef)``.
+        ``matrix`` (or an attached time-varying topology, resolved from
+        ``t``) overrides the fixed matrix for this round.
         """
+        if matrix is None:
+            matrix = self.topology_matrix(t, tree)
         if self.compression.active:
             payload, ef_new = self._compress_payload(tree, ef, t)
-            mixed = self.mix(payload, dp_key=dp_key,
+            mixed = self.mix(payload, matrix=matrix, dp_key=dp_key,
                              agent_index=agent_index)
-            d = self._self_weights()
+            d = self._self_weights(matrix)
             mixed = jax.tree_util.tree_map(
                 lambda mx, xx, cc: (
                     _f32(mx) + d.reshape((-1,) + (1,) * (mx.ndim - 1))
@@ -230,7 +261,8 @@ class ConsensusEngine:
                 mixed, tree, payload)
             mixed = self._damp(mixed, tree)
         else:
-            mixed = self.mix(tree, dp_key=dp_key, agent_index=agent_index)
+            mixed = self.mix(tree, matrix=matrix, dp_key=dp_key,
+                             agent_index=agent_index)
             ef_new = ef
         return self._apply_interval(t, mixed, tree, ef_new, ef)
 
@@ -246,7 +278,7 @@ class ConsensusEngine:
         return self.compressor.bytes_on_wire(size)
 
     def step1_step3(self, x, u, p, p_prev, alpha: float, *,
-                    t=None, ef=None,
+                    t=None, ef=None, matrix=None,
                     dp_key: jax.Array | None = None,
                     agent_index: jax.Array | None = None):
         """Fused eq. (6) + eq. (10).
@@ -264,17 +296,20 @@ class ConsensusEngine:
         ``mix(u)`` exactly (how the step-core obtains the mixed tracker
         before the new gradients exist).
         """
+        if matrix is None:
+            matrix = self.topology_matrix(t, x)
         wire = ef is not None or self.wire_active
         if wire:
             x_mixed, ef_x = self.mix_ef(
                 x, None if ef is None else ef.get("x"), t,
-                dp_key=dp_key, agent_index=agent_index)
+                matrix=matrix, dp_key=dp_key, agent_index=agent_index)
             u_mixed, ef_u = self.mix_ef(
                 u, None if ef is None else ef.get("u"), t,
-                agent_index=agent_index)
+                matrix=matrix, agent_index=agent_index)
         else:
-            x_mixed = self.mix(x, dp_key=dp_key, agent_index=agent_index)
-            u_mixed = self.mix(u, agent_index=agent_index)
+            x_mixed = self.mix(x, matrix=matrix, dp_key=dp_key,
+                               agent_index=agent_index)
+            u_mixed = self.mix(u, matrix=matrix, agent_index=agent_index)
         x_new = jax.tree_util.tree_map(
             lambda mx, uu: (_f32(mx) - alpha * _f32(uu)).astype(mx.dtype),
             x_mixed, u)
@@ -338,7 +373,7 @@ def consensus_descent_and_track(
             agent_index=agent_index)
     else:
         x_new, u_mixed = engine.step1_step3(x, u, p_prev, p_prev, alpha,
-                                            dp_key=dp_key,
+                                            t=t, dp_key=dp_key,
                                             agent_index=agent_index)
         ef_new = ef
     y_new = jax.tree_util.tree_map(

@@ -36,21 +36,36 @@ class PallasEngine(ConsensusEngine):
         self.interpret = bool(interpret)
         self._configure_wire(compression, communication_interval)
 
-    def mix(self, tree, *, dp_key=None, agent_index=None):
+    def mix(self, tree, *, matrix=None, dp_key=None, agent_index=None):
         del dp_key, agent_index  # single-host backend: no wire, no DP
-        return consensus_mix(self.matrix, tree, block_d=self.block_d,
+        mat = self.matrix if matrix is None else jnp.asarray(matrix,
+                                                             jnp.float32)
+        return consensus_mix(mat, tree, block_d=self.block_d,
                              interpret=self.interpret)
 
     def step1_step3(self, x, u, p, p_prev, alpha, *, t=None, ef=None,
-                    dp_key=None, agent_index=None):
+                    matrix=None, dp_key=None, agent_index=None):
         if ef is not None or self.wire_active:
             # wire path: compose two compressed mixes through the base
             # implementation (each still a kernel launch via self.mix);
             # the fused Step-1/3 kernel stays on the full-precision path.
             return super().step1_step3(x, u, p, p_prev, alpha, t=t, ef=ef,
-                                       dp_key=dp_key,
+                                       matrix=matrix, dp_key=dp_key,
+                                       agent_index=agent_index)
+        try:
+            alpha_c = float(alpha)
+        except (TypeError, jax.errors.ConcretizationTypeError):
+            # traced step size (a sweep batch axis): the fused kernel
+            # bakes alpha in at trace time, so compose the per-mix
+            # kernel launches through the base implementation instead
+            return super().step1_step3(x, u, p, p_prev, alpha, t=t,
+                                       matrix=matrix, dp_key=dp_key,
                                        agent_index=agent_index)
         del dp_key, agent_index
-        return consensus_step(self.matrix, x, u, p, p_prev,
-                              alpha=float(alpha), block_d=self.block_d,
+        if matrix is None:
+            matrix = self.topology_matrix(t, x)
+        mat = self.matrix if matrix is None else jnp.asarray(matrix,
+                                                             jnp.float32)
+        return consensus_step(mat, x, u, p, p_prev,
+                              alpha=alpha_c, block_d=self.block_d,
                               interpret=self.interpret)

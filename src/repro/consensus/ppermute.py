@@ -62,13 +62,16 @@ class PermuteEngine(ConsensusEngine):
     def rounds_per_mix(self) -> int:
         return self.schedule.rounds_per_mix
 
-    def mix(self, tree, *, dp_key=None, agent_index=None):
+    def mix(self, tree, *, matrix=None, dp_key=None, agent_index=None):
+        # ``matrix`` here is a ``PermuteWeights`` override — the round's
+        # weights on the SAME offset schedule (time-varying topology).
         return permute_mix_tree(
             tree, self.agent_axes, self.schedule, compress=self.compress,
             dp_sigma=self.dp_sigma if dp_key is not None else 0.0,
-            dp_key=dp_key, impl=self.impl, agent_index=agent_index)
+            dp_key=dp_key, impl=self.impl, agent_index=agent_index,
+            override=matrix)
 
-    def mix_ef(self, tree, ef=None, t=None, *, dp_key=None,
+    def mix_ef(self, tree, ef=None, t=None, *, matrix=None, dp_key=None,
                agent_index=None):
         """Per-neighbour wire path: compress each outgoing *leaf*.
 
@@ -85,6 +88,8 @@ class PermuteEngine(ConsensusEngine):
         (``_ppermute_mix`` seeds the accumulator with it, ``_psum_mix``
         applies the self-weight correction).
         """
+        if matrix is None:
+            matrix = self.topology_matrix(t, tree)
         if self.compression.active:
             v = jax.tree_util.tree_map(
                 lambda l: l.astype(jnp.float32), tree)
@@ -110,10 +115,11 @@ class PermuteEngine(ConsensusEngine):
                 tree, self.agent_axes, self.schedule, compress=None,
                 dp_sigma=self.dp_sigma if dp_key is not None else 0.0,
                 dp_key=dp_key, impl=self.impl, agent_index=agent_index,
-                payload_tree=payload)
+                payload_tree=payload, override=matrix)
             mixed = self._damp(mixed, tree)
         else:
-            mixed = self.mix(tree, dp_key=dp_key, agent_index=agent_index)
+            mixed = self.mix(tree, matrix=matrix, dp_key=dp_key,
+                             agent_index=agent_index)
             ef_new = ef
         return self._apply_interval(t, mixed, tree, ef_new, ef)
 

@@ -144,12 +144,15 @@ def dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
     # No tracking: descend the raw stochastic hypergradient after the
     # consensus combine (D-SGD's single mix goes through the wire path —
     # compression / interval — when the engine has one configured).
+    matrix = (engine.topology_matrix(state.t, state.x)
+              if hasattr(engine, "topology_matrix") else None)
     if state.ef is not None or getattr(engine, "wire_active", False):
         ef_x = None if state.ef is None else state.ef.get("x")
-        x_mixed, ef_x_new = engine.mix_ef(state.x, ef_x, state.t)
+        x_mixed, ef_x_new = engine.mix_ef(state.x, ef_x, state.t,
+                                          matrix=matrix)
         ef_new = None if state.ef is None else {"x": ef_x_new}
     else:
-        x_mixed, ef_new = engine.mix(state.x), state.ef
+        x_mixed, ef_new = engine.mix(state.x, matrix=matrix), state.ef
     x_new = jax.tree_util.tree_map(
         lambda mx, g: mx - alpha * g, x_mixed, p)
     y_new = jax.tree_util.tree_map(

@@ -35,7 +35,7 @@ Backend options carried per-schedule rather than per-call:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +44,9 @@ import numpy as np
 from repro.sharding.compat import axis_size
 
 __all__ = [
-    "PermuteSchedule", "permute_schedule", "permute_mix_leaf",
-    "permute_mix_tree", "ring_mix_tree", "ring_mix_leaf", "agent_index",
-    "quantize_int8", "dequantize_int8",
+    "PermuteSchedule", "PermuteWeights", "permute_schedule",
+    "permute_mix_leaf", "permute_mix_tree", "ring_mix_tree",
+    "ring_mix_leaf", "agent_index", "quantize_int8", "dequantize_int8",
 ]
 
 
@@ -102,6 +102,27 @@ class PermuteSchedule:
         return len(self.offsets)
 
 
+class PermuteWeights(NamedTuple):
+    """One round's weights on the *shared* offset schedule.
+
+    The time-varying topology layer (docs/TOPOLOGY.md) batches matrix
+    streams on the ppermute backend as the ROADMAP describes: the
+    offsets stay those of the base schedule (one ppermute per offset,
+    program shape unchanged) and only the per-round weights vary — a
+    dropped edge is a zero weight on its offset.  Passed per call as the
+    ``override`` of ``permute_mix_leaf`` / ``permute_mix_tree``.
+
+    Attributes:
+      weights:      (n_offsets, m) — replaces ``schedule.weights``.
+      self_weights: (m,) — replaces ``schedule.self_weights``.
+      matrix:       (m, m) — replaces ``schedule.matrix`` (psum impl).
+    """
+
+    weights: jax.Array
+    self_weights: jax.Array
+    matrix: jax.Array
+
+
 def permute_schedule(mixing, tol: float = 1e-12) -> PermuteSchedule:
     """Decompose any (sparse or dense) mixing matrix into ppermute rounds.
 
@@ -151,7 +172,7 @@ def _outgoing_payload(x, i, dp_sigma, dp_key, leaf_index=0):
 
 
 def _ppermute_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
-                  leaf_index=0, payload=None):
+                  leaf_index=0, payload=None, override=None):
     """Per-offset cyclic-shift rounds: the wire-frugal realisation.
 
     ``payload`` (when given) replaces ``x`` as the outgoing value — the
@@ -160,8 +181,14 @@ def _ppermute_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
     quantization is skipped for it.  The accumulator is seeded with the
     *clean* local ``x`` either way: the agent's own term never round-trips
     through the wire format.
+
+    ``override`` (a ``PermuteWeights``) replaces the schedule's weights
+    for this round — same offsets, per-step values — which is how
+    time-varying topologies run here without changing the program shape.
     """
-    self_w = jnp.asarray(schedule.self_weights, jnp.float32)[i]
+    sw = (override.self_weights if override is not None
+          else jnp.asarray(schedule.self_weights, jnp.float32))
+    self_w = sw[i]
     acc = self_w * x.astype(jnp.float32)
     if not schedule.offsets:
         return acc.astype(x.dtype)
@@ -171,7 +198,8 @@ def _ppermute_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
     if compress == "int8":
         q, scale = quantize_int8(payload)
 
-    weights = jnp.asarray(schedule.weights, jnp.float32)
+    weights = (override.weights if override is not None
+               else jnp.asarray(schedule.weights, jnp.float32))
     for k, o in enumerate(schedule.offsets):
         # Destination j receives the payload of agent (j + o) mod m.
         perm = [((j + o) % m, j) for j in range(m)]
@@ -185,7 +213,7 @@ def _ppermute_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
 
 
 def _psum_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
-              leaf_index=0, payload=None):
+              leaf_index=0, payload=None, override=None):
     """All-reduce realisation: agent j contributes M[:, j] (x) sent_j and
     everyone slices its own row of the psum.
 
@@ -207,12 +235,15 @@ def _psum_mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
     else:
         sent = payload.astype(jnp.float32)
 
-    mat = jnp.asarray(schedule.matrix, jnp.float32)
+    mat = (override.matrix if override is not None
+           else jnp.asarray(schedule.matrix, jnp.float32))
     col = mat[:, i].reshape((m,) + (1,) * x.ndim)
     mixed = jax.lax.psum(col * sent[None], name)[i]
     # The psum applied M_ii to the *shared* payload; the local copy mixes
     # un-noised / un-quantized.
-    self_w = jnp.asarray(schedule.self_weights, jnp.float32)[i]
+    sw = (override.self_weights if override is not None
+          else jnp.asarray(schedule.self_weights, jnp.float32))
+    self_w = sw[i]
     mixed = mixed + self_w * (x.astype(jnp.float32) - sent)
     return mixed.astype(x.dtype)
 
@@ -225,7 +256,8 @@ def permute_mix_leaf(x: jax.Array, agent_axes: Sequence[str],
                      impl: str = "ppermute",
                      agent_index: jax.Array | None = None,
                      leaf_index: int = 0,
-                     payload: jax.Array | None = None) -> jax.Array:
+                     payload: jax.Array | None = None,
+                     override: PermuteWeights | None = None) -> jax.Array:
     """One consensus combine of a per-agent leaf (inside shard_map).
 
     compress="int8": send int8-quantized payloads (+ scalar scale).
@@ -240,6 +272,8 @@ def permute_mix_leaf(x: jax.Array, agent_axes: Sequence[str],
     payload: override for the outgoing value (the engine's error-feedback
     layer passes the pre-compressed payload here; DP noise still applies
     to it, the local copy still mixes clean).
+    override: this round's ``PermuteWeights`` — per-step weights on the
+    shared offset schedule (time-varying topologies, docs/TOPOLOGY.md).
     """
     name = _axis_name(agent_axes)
     m = axis_size(name)
@@ -251,7 +285,7 @@ def permute_mix_leaf(x: jax.Array, agent_axes: Sequence[str],
          else agent_index)
     mix = _psum_mix if impl == "psum" else _ppermute_mix
     return mix(x, name, m, schedule, i, compress, dp_sigma, dp_key,
-               leaf_index, payload)
+               leaf_index, payload, override)
 
 
 def permute_mix_tree(tree, agent_axes: Sequence[str],
@@ -260,7 +294,8 @@ def permute_mix_tree(tree, agent_axes: Sequence[str],
                      dp_key: jax.Array | None = None,
                      impl: str = "ppermute",
                      agent_index: jax.Array | None = None,
-                     payload_tree=None):
+                     payload_tree=None,
+                     override: PermuteWeights | None = None):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     payloads = (jax.tree_util.tree_flatten(payload_tree)[0]
                 if payload_tree is not None else [None] * len(leaves))
@@ -268,7 +303,7 @@ def permute_mix_tree(tree, agent_axes: Sequence[str],
                               compress=compress, dp_sigma=dp_sigma,
                               dp_key=dp_key, impl=impl,
                               agent_index=agent_index, leaf_index=k,
-                              payload=pl)
+                              payload=pl, override=override)
              for k, (l, pl) in enumerate(zip(leaves, payloads))]
     return jax.tree_util.tree_unflatten(treedef, mixed)
 

@@ -231,6 +231,10 @@ class SolverBase:
             compression=self.config.compression,
             communication_interval=self.config.communication_interval,
             **dict(self.config.backend_opts))
+        if not self.config.topology_process.is_static:
+            from repro.topology import attach_topology
+            attach_topology(engine, self.config.topology_process, spec,
+                            seed=self.config.seed)
         self._engine = engine
         try:
             self._param_step = self._make_param_step(problem, hg_cfg,

@@ -30,6 +30,7 @@ from repro.core.consensus import (
     torus_mixing,
 )
 from repro.hypergrad import HypergradConfig
+from repro.topology.process import TopologyProcessConfig
 
 __all__ = ["SolverConfig", "TopologyConfig"]
 
@@ -100,7 +101,14 @@ class SolverConfig:
         values trade consensus error for wire traffic.  Implemented as
         a predicate on the step index inside the scan, so the program
         stays one compile.
-      seed: PRNG seed for the stochastic solvers' sampling streams.
+      topology_process: how the realised mixing matrix evolves over
+        steps (``repro.topology.TopologyProcessConfig``: static /
+        link-failure / straggler / random-gossip / adaptive) — the
+        time-varying layer ON TOP of the base graph from ``topology`` /
+        ``mixing``.  The default static process is a bitwise no-op.
+        See docs/TOPOLOGY.md.
+      seed: PRNG seed for the stochastic solvers' sampling streams (and
+        the fallback seed of the topology process's link schedule).
     """
 
     algo: str = "interact"
@@ -116,6 +124,7 @@ class SolverConfig:
     hypergrad: HypergradConfig = HypergradConfig()
     compression: CompressionConfig = CompressionConfig()
     communication_interval: int = 1
+    topology_process: TopologyProcessConfig = TopologyProcessConfig()
     seed: int = 0
 
     def mixing_spec(self, m: int | None = None) -> MixingSpec:
@@ -188,16 +197,23 @@ class SolverConfig:
         """
         opts = tuple(sorted(self.backend_opts.items()))
         wire = (self.compression, self.communication_interval)
+        # The topology process contributes only its STRUCTURE (kind,
+        # period, tau): the failure probability ``p`` and the stream seed
+        # enter the trace as realized matrix *values* — a stacked vmap
+        # operand, like the padded mixing matrices — so a failure-rate ×
+        # algorithm grid batches into one program per algorithm.
+        proc = self.topology_process.structural_key()
         if pad_to is not None:
             return (self.algo, self.batch_size, self.q, ("padded", pad_to),
-                    self.backend, opts, self.hypergrad, wire)
+                    self.backend, opts, self.hypergrad, wire, proc)
         mix = None
         if self.mixing is not None:
             mat = np.asarray(self.mixing.matrix)
             mix = (mat.shape, mat.tobytes(), float(self.mixing.lam),
                    tuple(self.mixing.neighbors), tuple(self.mixing.weights))
         return (self.algo, self.batch_size, self.q, self.num_agents, mix,
-                self.topology, self.backend, opts, self.hypergrad, wire)
+                self.topology, self.backend, opts, self.hypergrad, wire,
+                proc)
 
     def batch_values(self) -> tuple[int, float, float]:
         """The per-experiment dynamic values: ``(seed, alpha, beta)``."""

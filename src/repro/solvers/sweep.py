@@ -135,13 +135,18 @@ class SweepResult:
     def trace_of(self, config: SolverConfig) -> np.ndarray:
         """The trace row of the first config matching ``config``.
 
-        Matches by ``(static_key, batch_values)`` rather than dataclass
-        equality — an explicit ``MixingSpec`` holds a numpy matrix, for
-        which ``==`` is elementwise.
+        Matches by ``(static_key, batch_values, topology_process)``
+        rather than dataclass equality — an explicit ``MixingSpec``
+        holds a numpy matrix, for which ``==`` is elementwise.  The
+        topology process is matched by value because its stream
+        parameters (p, seed) are deliberately NOT in the static key —
+        they batch as vmap operands — yet distinguish experiments.
         """
-        want = (config.static_key(), config.batch_values())
+        want = (config.static_key(), config.batch_values(),
+                config.topology_process)
         for i, c in enumerate(self.configs):
-            if c is config or (c.static_key(), c.batch_values()) == want:
+            if c is config or (c.static_key(), c.batch_values(),
+                               c.topology_process) == want:
                 return self.traces[i]
         raise KeyError(config)
 
@@ -185,35 +190,97 @@ def _experiment_fn(solver, data, num_steps: int, record_every: int,
     return one
 
 
+def _attach_traced_topology(engine, config: SolverConfig, matrix):
+    """Install the group's topology runtime on an in-trace engine.
+
+    ``matrix`` is the experiment's (possibly traced / ghost-padded)
+    mixing matrix; stream matrices arrive separately as the traced
+    ``stream`` operand of the experiment fn, adaptive adjacency is
+    derived from ``matrix`` right here (ghost rows are identity, so
+    their adjacency row is zero and the Dada rule yields an identity
+    row — padding-safe).
+    """
+    from repro.topology.runtime import AdaptiveTopology
+
+    proc = config.topology_process
+    if proc.is_static or not proc.state_dependent:
+        return
+    m = matrix.shape[-1]
+    adjacency = ((jnp.abs(matrix) > 1e-12)
+                 & ~jnp.eye(m, dtype=bool)).astype(jnp.float32)
+    engine.topology = AdaptiveTopology(adjacency, proc.tau)
+
+
+def _stream_experiment_fn(solver, data, n, num_steps: int,
+                          record_every: int, metric_fn):
+    """Per-experiment pipeline with the *matrix stream* as a vmap operand.
+
+    ``(key, alpha, beta, x0, y0, stream)`` -> ``(final_state, trace)``
+    where ``stream`` is the experiment's realized ``(T, m, m)`` topology
+    stream.  The dense engine is constructed inside the trace and the
+    stream attached as a traced ``StreamTopology``, so a failure-rate ×
+    seed grid over one algorithm compiles a single program — the
+    per-step matrices are array values, exactly like the padded sweep's
+    mixing-matrix operand.
+    """
+    from repro.consensus.dense import DenseEngine
+    from repro.topology.runtime import StreamTopology
+
+    problem, hg_cfg = solver._problem, solver._hg_cfg
+
+    def one(key, alpha, beta, x0, y0, stream):
+        engine = DenseEngine(
+            solver._engine.matrix, compression=solver.config.compression,
+            communication_interval=solver.config.communication_interval)
+        engine.topology = StreamTopology(stream)
+        param = solver._make_param_step(problem, hg_cfg, engine, n)
+        state = solver._init_state(key, problem, hg_cfg, x0, y0, data)
+        return _traced_scan(param, state, data, num_steps, record_every,
+                            metric_fn, alpha, beta)
+
+    return one
+
+
 def _padded_experiment_fn(solver, n: int, num_steps: int,
                           record_every: int, masked_metric_fn,
-                          data_stack):
+                          data_stack, with_stream: bool = False):
     """Per-experiment pipeline with the *network* as vmap operands.
 
-    ``(key, alpha, beta, x0, y0, matrix, num_active, data_idx)`` ->
-    ``(final_state, trace)``.  The dense consensus engine is constructed
-    inside the trace from the experiment's ghost-padded mixing matrix,
-    so one compiled program serves every network size / topology in the
-    group; ``masked_metric_fn(state, data, num_active)`` keeps ghost
-    agents out of the recorded metric.
+    ``(key, alpha, beta, x0, y0, matrix, num_active, data_idx[, stream])``
+    -> ``(final_state, trace)``.  The dense consensus engine is
+    constructed inside the trace from the experiment's ghost-padded
+    mixing matrix, so one compiled program serves every network size /
+    topology in the group; ``masked_metric_fn(state, data, num_active)``
+    keeps ghost agents out of the recorded metric.
 
     ``data_stack`` holds the group's *unique* padded datasets (leading
     axis = number of distinct networks, not experiments); each
     experiment gathers its row via the mapped ``data_idx``, so device
     memory scales with distinct sizes rather than grid cells (an
     S-seed sweep would otherwise carry S identical dataset copies).
+
+    ``with_stream=True`` adds a trailing ghost-padded ``(T, m, m)``
+    topology-stream operand (time-varying topologies batch like the
+    mixing matrix does); the state-dependent adaptive process instead
+    derives its adjacency from the padded matrix in-trace.
     """
     from repro.consensus.dense import DenseEngine
+    from repro.topology.runtime import StreamTopology
 
     problem, hg_cfg = solver._problem, solver._hg_cfg
 
-    def one(key, alpha, beta, x0, y0, matrix, num_active, data_idx):
+    def one(key, alpha, beta, x0, y0, matrix, num_active, data_idx,
+            stream=None):
         data = jax.tree_util.tree_map(lambda l: l[data_idx], data_stack)
         # wire options ride along: per-agent (row-wise) compression keeps
         # ghost-padded combines exact, so compressed configs batch too
         engine = DenseEngine(
             matrix, compression=solver.config.compression,
             communication_interval=solver.config.communication_interval)
+        if stream is not None:
+            engine.topology = StreamTopology(stream)
+        else:
+            _attach_traced_topology(engine, solver.config, matrix)
         param = solver._make_param_step(problem, hg_cfg, engine, n)
         state = solver._init_state(key, problem, hg_cfg, x0, y0, data)
         metric_fn = None
@@ -223,6 +290,12 @@ def _padded_experiment_fn(solver, n: int, num_steps: int,
         return _traced_scan(param, state, data, num_steps, record_every,
                             metric_fn, alpha, beta)
 
+    if not with_stream:
+        def one_plain(key, alpha, beta, x0, y0, matrix, num_active,
+                      data_idx):
+            return one(key, alpha, beta, x0, y0, matrix, num_active,
+                       data_idx)
+        return one_plain
     return one
 
 
@@ -244,6 +317,33 @@ def _mixed_m_error(configs, indices, need_m: int, have: str) -> ValueError:
         "per algorithm (dense backend), or supply `data` as a "
         "{num_agents: AgentData} mapping to run one group per size. "
         "Offending configs:\n" + "\n".join(lines))
+
+
+def _mixed_process_error(configs, indices, why: str) -> ValueError:
+    """The topology-process batching diagnostic, naming offending configs.
+
+    A sweep group keyed only on the process *structure* can hold configs
+    whose realized matrix streams differ (failure rate p, stream seed).
+    Batching those needs the stream as a traced vmap operand — the dense
+    backend's parameterised step.  Anywhere that is impossible this
+    raises the same actionable shape of error the mixed-m grids get,
+    instead of silently running every config on the representative's
+    stream (or dying in an XLA shape error).
+    """
+    lines = []
+    for i in indices:
+        proc = configs[i].topology_process
+        lines.append(
+            f"  configs[{i}]: topology_process=(kind={proc.kind!r}, "
+            f"p={proc.p}, seed={proc.resolve_seed(configs[i].seed)}), "
+            f"backend={configs[i].backend!r}")
+    return ValueError(
+        f"sweep group mixes topology-process realizations but {why}; "
+        "the matrix stream must be a traced vmap operand, which needs "
+        "the dense consensus backend and a solver implementing "
+        "_make_param_step. Use backend='dense', or split the grid so "
+        "each group shares one (p, seed) stream. Offending configs:\n"
+        + "\n".join(lines))
 
 
 def sweep(configs: Sequence[SolverConfig], num_steps: int,
@@ -368,6 +468,12 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
 
     for indices in group_indices:
         rep = configs[indices[0]]
+        proc = rep.topology_process
+        # a stream process (link-failure / straggler / gossip) realizes a
+        # per-config matrix stream; within a group only its VALUES (p,
+        # stream seed) differ, so the stream batches as a vmap operand
+        stream_group = not proc.is_static and not proc.state_dependent
+        streams = None
 
         if pad_agents:
             # pad + stack each *distinct* dataset once; experiments map
@@ -409,6 +515,16 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
                     configs[i].mixing_spec(ms[i]), m_pad))
                 for i in indices])
             num_active = jnp.asarray([ms[i] for i in indices], jnp.int32)
+            if stream_group:
+                from repro.topology.process import realize_stream
+                streams = jnp.stack([
+                    jnp.asarray(realize_stream(
+                        configs[i].topology_process,
+                        configs[i].mixing_spec(ms[i]),
+                        configs[i].topology_process.resolve_seed(
+                            configs[i].seed)).padded(m_pad).matrices,
+                        jnp.float32)
+                    for i in indices])
         else:
             g_m = rep.resolve_num_agents(default_m) or default_m
             g_data = data_for(g_m, indices)
@@ -428,6 +544,32 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
                     "_make_step hook (config-bound step sizes); it cannot "
                     "batch configs with different alpha/beta — implement "
                     "_make_param_step or sweep step sizes sequentially")
+            if stream_group:
+                can_batch = (rep.backend == "dense"
+                             and solver._param_step is not None)
+                stream_ids = {
+                    (configs[i].topology_process.p,
+                     configs[i].topology_process.resolve_seed(
+                         configs[i].seed)) for i in indices}
+                if not can_batch:
+                    if len(stream_ids) > 1:
+                        why = (f"backend {rep.backend!r} cannot take it "
+                               "as a traced operand"
+                               if rep.backend != "dense" else
+                               f"solver {rep.algo!r} implements only the "
+                               "legacy _make_step hook")
+                        raise _mixed_process_error(configs, indices, why)
+                    # one realization: the engine built above already
+                    # carries it (attach_topology in build), bake it in
+                    stream_group = False
+                else:
+                    from repro.topology.process import realize_stream
+                    streams = jnp.stack([
+                        jnp.asarray(realize_stream(
+                            configs[i].topology_process, spec,
+                            configs[i].topology_process.resolve_seed(
+                                configs[i].seed)).matrices, jnp.float32)
+                        for i in indices])
             group_metric = metric_fn
             if group_metric is None and record_every:
                 from repro.core import convergence_metric_fn
@@ -448,11 +590,24 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
 
         if pad_agents:
             one = _padded_experiment_fn(solver, n, num_steps, record_every,
-                                        group_metric, data_stack)
+                                        group_metric, data_stack,
+                                        with_stream=streams is not None)
+            if streams is not None:
+                batched = jax.jit(jax.vmap(
+                    one, in_axes=(0, 0, 0, x_ax, y_ax, 0, 0, 0, 0)))
+                operands = (keys, alphas, betas, gx, gy, mats, num_active,
+                            data_idx, streams)
+            else:
+                batched = jax.jit(jax.vmap(
+                    one, in_axes=(0, 0, 0, x_ax, y_ax, 0, 0, 0)))
+                operands = (keys, alphas, betas, gx, gy, mats, num_active,
+                            data_idx)
+        elif stream_group:
+            one = _stream_experiment_fn(solver, g_data, n, num_steps,
+                                        record_every, group_metric)
             batched = jax.jit(jax.vmap(
-                one, in_axes=(0, 0, 0, x_ax, y_ax, 0, 0, 0)))
-            operands = (keys, alphas, betas, gx, gy, mats, num_active,
-                        data_idx)
+                one, in_axes=(0, 0, 0, x_ax, y_ax, 0)))
+            operands = (keys, alphas, betas, gx, gy, streams)
         else:
             one = _experiment_fn(solver, g_data, num_steps, record_every,
                                  group_metric)
@@ -493,6 +648,8 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
                 base = (keys[r], alphas[r], betas[r], sx(r), sy(r))
                 if pad_agents:
                     base += (mats[r], num_active[r], data_idx[r])
+                if streams is not None:
+                    base += (streams[r],)
                 return base
 
             warm = single(*row_operands(0))

@@ -1,0 +1,47 @@
+"""Time-varying topology subsystem: mixing matrices as a per-step process.
+
+``TopologyProcessConfig`` (carried by ``SolverConfig.topology_process``)
+declares the process; the registry realises ``(T, m, m)`` matrix streams
+with per-step active-edge masks (``process``); the engine runtimes
+gather the round's matrix inside the solver scans (``runtime``).
+See docs/TOPOLOGY.md.
+"""
+from repro.topology.process import (
+    TopologyProcessConfig,
+    TopologyStream,
+    adjacency_of,
+    available_topology_processes,
+    make_topology_process,
+    masked_mixing,
+    realize_stream,
+    register_topology_process,
+    stream_wire_bytes,
+)
+from repro.topology.runtime import (
+    AdaptiveTopology,
+    PermuteStreamTopology,
+    StreamTopology,
+    adaptive_mixing,
+    agents_matrix,
+    attach_topology,
+    stream_of,
+)
+
+__all__ = [
+    "AdaptiveTopology",
+    "PermuteStreamTopology",
+    "StreamTopology",
+    "TopologyProcessConfig",
+    "TopologyStream",
+    "adaptive_mixing",
+    "adjacency_of",
+    "agents_matrix",
+    "attach_topology",
+    "available_topology_processes",
+    "make_topology_process",
+    "masked_mixing",
+    "realize_stream",
+    "register_topology_process",
+    "stream_of",
+    "stream_wire_bytes",
+]

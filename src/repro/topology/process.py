@@ -1,0 +1,424 @@
+"""Time-varying topologies: mixing matrices as a per-step process.
+
+Every run used to mix with one fixed doubly-stochastic matrix, but the
+paper's motivating settings — peer-to-peer meta-learning over unreliable
+networks — have churn: gossip pairs, dropped links, stragglers.
+INTERACT's O(eps^-1) communication claim only needs the *expected*
+connectivity, so the mixing matrix becomes a per-step input to the
+solver scans: a ``TopologyProcess`` realises a ``(num_steps, m, m)``
+matrix stream (plus a per-step active-edge mask) from the base
+``MixingSpec``, and the consensus engines gather ``stream[t % T]``
+inside the scan (``repro.topology.runtime``).
+
+Registered processes (``@register_topology_process``):
+
+    static         wraps today's ``MixingSpec`` — a bitwise no-op: the
+                   engines are left untouched, every trace is identical
+                   to the fixed-matrix path.
+    link-failure   per-edge symmetric Bernoulli(p) drops with doubly-
+                   stochastic self-loop repair: a dead link's weight
+                   folds onto BOTH endpoints' self weights, so the
+                   matrix stays doubly stochastic, symmetric and
+                   nonnegative — graceful degradation, never a NaN or a
+                   stall.  ``p = 0`` reproduces the base matrix bitwise.
+    straggler      each agent independently skips the round with
+                   probability p; all its links fold to self weight
+                   (the outer-product mask under the same repair rule).
+    random-gossip  a random maximal matching of the base edges per
+                   round; matched pairs average (weight 1/2), everyone
+                   else holds (weight 1).
+    adaptive       Dada-style Metropolis reweighting from per-step
+                   agent similarity — state-dependent, so it has no
+                   precomputed stream; the engines compute the matrix
+                   from the iterates inside the scan
+                   (``repro.topology.runtime.adaptive_mixing``).
+
+Reproducibility contract: step t of a stream depends only on
+``(seed, t)`` — ``np.random.default_rng([seed, t])`` per step — so the
+same ``SolverConfig.seed`` realises bit-identical schedules on every
+backend and for every stream length (a longer ``period`` is a strict
+prefix extension, never a reshuffle).
+
+Wire accounting lives here too: ``stream_wire_bytes`` prices each round
+per *link* from the edge mask (a dropped link costs zero bytes),
+composing with the compression layer's warmup / interval schedules —
+see docs/TOPOLOGY.md for how this unicast model relates to the
+broadcast model of ``consensus.cumulative_wire_bytes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.consensus.compress import CompressionConfig, make_compressor
+from repro.core.consensus import MixingSpec, second_eigenvalue
+
+__all__ = [
+    "TopologyProcessConfig",
+    "TopologyStream",
+    "adjacency_of",
+    "available_topology_processes",
+    "make_topology_process",
+    "masked_mixing",
+    "realize_stream",
+    "register_topology_process",
+    "stream_wire_bytes",
+]
+
+_EDGE_TOL = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyProcessConfig:
+    """Declarative time-varying topology carried by ``SolverConfig``.
+
+    Attributes:
+      kind: registered process name — "static" | "link-failure" |
+        "straggler" | "random-gossip" | "adaptive"
+        (see ``available_topology_processes()``).
+      p: the per-round drop probability (link-failure: per edge;
+        straggler: per agent).  Ignored by static / gossip / adaptive.
+      period: realized stream length T.  Engines index ``t % T``, so a
+        run longer than the period replays the schedule; benches that
+        want a fresh draw every step set ``period = num_steps``.
+      tau: adaptive similarity temperature (``exp(-||x_i - x_j||^2 /
+        tau)``); larger tau flattens the reweighting toward Metropolis.
+      seed: stream seed; ``None`` inherits ``SolverConfig.seed``, which
+        is what makes schedules bit-reproducible from the one config
+        field across backends.
+    """
+
+    kind: str = "static"
+    p: float = 0.0
+    period: int = 64
+    tau: float = 1.0
+    seed: int | None = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"topology process p must be in [0, 1], "
+                             f"got {self.p}")
+        if self.period < 1:
+            raise ValueError(f"topology period must be >= 1, got "
+                             f"{self.period}")
+        if self.tau <= 0.0:
+            raise ValueError(f"adaptive tau must be > 0, got {self.tau}")
+
+    @property
+    def is_static(self) -> bool:
+        return self.kind == "static"
+
+    @property
+    def state_dependent(self) -> bool:
+        """Matrix computed from the iterates in-scan (no stream)."""
+        return make_topology_process(self).state_dependent
+
+    def structural_key(self) -> tuple:
+        """The trace-*shape* facts: what enters ``static_key``.
+
+        ``p`` and ``seed`` only change the stream's *values*, never the
+        compiled program — the sweep engine hands per-config streams in
+        as vmap operands — so a failure-rate x algorithm grid batches
+        into one program per algorithm (docs/TOPOLOGY.md).
+        """
+        return (self.kind, self.period, self.tau)
+
+    def resolve_seed(self, fallback: int) -> int:
+        return fallback if self.seed is None else self.seed
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyStream:
+    """A realized matrix process: ``(T, m, m)`` matrices + edge mask.
+
+    Attributes:
+      matrices:  (T, m, m) float64 — each a symmetric doubly-stochastic
+        nonnegative mixing matrix (the repair rule guarantees it).
+      edge_mask: (T, m, m) bool — the round's *active* links
+        (off-diagonal, symmetric).  This is what drives the wire
+        accounting: an inactive link ships zero bytes.
+    """
+
+    matrices: np.ndarray
+    edge_mask: np.ndarray
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.matrices.shape[0])
+
+    @property
+    def num_agents(self) -> int:
+        return int(self.matrices.shape[1])
+
+    def spectral_gaps(self) -> np.ndarray:
+        """Per-step ``1 - lambda`` of each realized matrix (lambda =
+        max{|lambda_2|, |lambda_m|}, the paper's mixing rate)."""
+        return np.asarray([1.0 - second_eigenvalue(mat)
+                           for mat in self.matrices])
+
+    @property
+    def mean_spectral_gap(self) -> float:
+        """Measured mean spectral gap of the realized matrices — the
+        per-row connectivity column of ``BENCH_topology.json``."""
+        return float(self.spectral_gaps().mean())
+
+    def active_out_degree(self) -> np.ndarray:
+        """(T, m) directed links each agent serves per round."""
+        return self.edge_mask.sum(axis=2)
+
+    def padded(self, pad_to: int) -> "TopologyStream":
+        """Ghost-pad every matrix to ``pad_to`` agents (identity rows).
+
+        Same semantics as ``core.consensus.pad_mixing``: ghost agents
+        are consensus fixed points, active combines bitwise unchanged —
+        which is what lets the padded sweep stack streams of different
+        network sizes into one vmap operand.
+        """
+        T, m = self.matrices.shape[:2]
+        if pad_to < m:
+            raise ValueError(f"cannot pad {m} agents down to {pad_to}")
+        mats = np.tile(np.eye(pad_to), (T, 1, 1))
+        mats[:, :m, :m] = self.matrices
+        mask = np.zeros((T, pad_to, pad_to), dtype=bool)
+        mask[:, :m, :m] = self.edge_mask
+        return TopologyStream(matrices=mats, edge_mask=mask)
+
+
+def adjacency_of(mixing: MixingSpec | np.ndarray,
+                 tol: float = _EDGE_TOL) -> np.ndarray:
+    """The base graph's 0/1 adjacency: off-diagonal nonzero weights."""
+    mat = np.asarray(getattr(mixing, "matrix", mixing), dtype=np.float64)
+    adj = (np.abs(mat) > tol).astype(np.float64)
+    np.fill_diagonal(adj, 0.0)
+    return adj
+
+
+def masked_mixing(base: np.ndarray, keep: np.ndarray) -> np.ndarray:
+    """The doubly-stochastic self-loop repair rule.
+
+    Zero out the off-diagonal entries where ``keep`` (a symmetric
+    boolean mask) is False and fold the dropped mass back onto the
+    diagonal: ``M'[i, i] = M[i, i] + sum_j dropped M[i, j]``.  Because
+    the drops are symmetric and every off-diagonal weight of a valid
+    mixing matrix is nonnegative, the result is symmetric, doubly
+    stochastic and nonnegative for ANY symmetric mask — a dead link
+    becomes lazy self-weight, never a NaN or a stall.
+
+    With nothing dropped the diagonal is the *original* diagonal plus an
+    exact 0.0, so ``p = 0`` schedules reproduce the base matrix bitwise.
+    """
+    base = np.asarray(base, dtype=np.float64)
+    keep = np.asarray(keep, dtype=bool)
+    off = base.copy()
+    np.fill_diagonal(off, 0.0)
+    dropped = np.where(keep, 0.0, off)
+    out = np.where(keep, off, 0.0)
+    np.fill_diagonal(out, np.diagonal(base) + dropped.sum(axis=1))
+    return out
+
+
+def _step_rng(seed: int, t: int) -> np.random.Generator:
+    """Step t's generator — depends only on (seed, t), never on T."""
+    return np.random.default_rng([int(seed) & 0xFFFFFFFF, int(t)])
+
+
+# -- the registry ---------------------------------------------------------
+
+_PROCESSES: dict[str, type] = {}
+
+
+def register_topology_process(name: str) -> Callable[[type], type]:
+    """Class decorator: register a ``TopologyProcess`` under ``name``."""
+
+    def deco(cls: type) -> type:
+        existing = _PROCESSES.get(name)
+        if existing is not None and existing is not cls:
+            raise ValueError(f"topology process {name!r} already "
+                             f"registered ({existing.__name__})")
+        _PROCESSES[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def available_topology_processes() -> tuple[str, ...]:
+    """Registered process names, sorted."""
+    return tuple(sorted(_PROCESSES))
+
+
+def make_topology_process(config: TopologyProcessConfig):
+    """Instantiate the registered process for ``config.kind``."""
+    try:
+        cls = _PROCESSES[config.kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown topology process {config.kind!r}; "
+            f"choose from {available_topology_processes()}") from None
+    return cls(config)
+
+
+class TopologyProcess:
+    """Base class: realise a matrix stream from the base ``MixingSpec``.
+
+    ``state_dependent`` processes (adaptive) compute the matrix from the
+    iterates inside the scan instead — ``realize`` is unavailable for
+    them and the engines attach an in-trace runtime
+    (``repro.topology.runtime``).
+    """
+
+    state_dependent = False
+
+    def __init__(self, config: TopologyProcessConfig):
+        self.config = config
+
+    def _step_matrix(self, base: np.ndarray, adj: np.ndarray,
+                     rng: np.random.Generator
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """One round: ``(matrix, edge_keep_mask)``; both (m, m)."""
+        raise NotImplementedError
+
+    def realize(self, mixing: MixingSpec | np.ndarray, seed: int,
+                num_steps: int | None = None) -> TopologyStream:
+        """The ``(T, m, m)`` stream; ``T = num_steps or config.period``."""
+        if self.state_dependent:
+            raise ValueError(
+                f"topology process {self.name!r} is state-dependent: the "
+                "matrix is computed from the iterates inside the scan "
+                "and has no precomputable stream")
+        base = np.asarray(getattr(mixing, "matrix", mixing),
+                          dtype=np.float64)
+        adj = adjacency_of(base)
+        T = int(num_steps) if num_steps is not None else self.config.period
+        mats = np.empty((T,) + base.shape)
+        mask = np.empty((T,) + base.shape, dtype=bool)
+        for t in range(T):
+            mats[t], keep = self._step_matrix(base, adj, _step_rng(seed, t))
+            mask[t] = keep & (adj > 0)
+            np.fill_diagonal(mask[t], False)
+        return TopologyStream(matrices=mats, edge_mask=mask)
+
+
+@register_topology_process("static")
+class StaticProcess(TopologyProcess):
+    """The fixed-matrix baseline: every round is the base matrix.
+
+    As a ``SolverConfig.topology_process`` this is a bitwise no-op — the
+    engines are left untouched (no stream attached, no gather in the
+    scan), so the compiled program is literally the fixed-matrix one.
+    ``realize`` still works (a constant stream) for accounting parity
+    in the benches.
+    """
+
+    def _step_matrix(self, base, adj, rng):
+        return base.copy(), adj > 0
+
+
+@register_topology_process("link-failure")
+class LinkFailureProcess(TopologyProcess):
+    """Per-edge symmetric Bernoulli(p) drops + self-loop repair."""
+
+    def _step_matrix(self, base, adj, rng):
+        m = base.shape[0]
+        # symmetric draw: one Bernoulli per undirected edge
+        up = rng.random((m, m)) >= self.config.p
+        keep = np.triu(up, k=1)
+        keep = keep | keep.T
+        return masked_mixing(base, keep), keep
+
+
+@register_topology_process("straggler")
+class StragglerProcess(TopologyProcess):
+    """Agents skip a round with probability p; links fold to self."""
+
+    def _step_matrix(self, base, adj, rng):
+        active = rng.random(base.shape[0]) >= self.config.p
+        keep = np.outer(active, active)
+        return masked_mixing(base, keep), keep
+
+
+@register_topology_process("random-gossip")
+class RandomGossipProcess(TopologyProcess):
+    """A random maximal matching of the base edges per round.
+
+    Matched pairs average (``W_ii = W_jj = W_ij = 1/2``); unmatched
+    agents hold their value.  One exchange per agent per round at most —
+    the minimal-bandwidth end of the topology spectrum.
+    """
+
+    def _step_matrix(self, base, adj, rng):
+        m = base.shape[0]
+        edges = np.argwhere(np.triu(adj, k=1) > 0)
+        rng.shuffle(edges)
+        mat = np.eye(m)
+        keep = np.zeros((m, m), dtype=bool)
+        used = np.zeros(m, dtype=bool)
+        for i, j in edges:
+            if used[i] or used[j]:
+                continue
+            used[i] = used[j] = True
+            mat[i, i] = mat[j, j] = 0.5
+            mat[i, j] = mat[j, i] = 0.5
+            keep[i, j] = keep[j, i] = True
+        return mat, keep
+
+
+@register_topology_process("adaptive")
+class AdaptiveProcess(TopologyProcess):
+    """Dada-style similarity reweighting — state-dependent (no stream).
+
+    Per step the engines compute Metropolis weights from the per-agent
+    similarities ``s_ij = exp(-||x_i - x_j||^2 / tau)`` over the base
+    edges (``repro.topology.runtime.adaptive_mixing``): agents whose
+    iterates agree mix strongly, outliers are damped toward self —
+    symmetric, doubly stochastic and nonnegative by construction.
+    """
+
+    state_dependent = True
+
+
+def realize_stream(config: TopologyProcessConfig,
+                   mixing: MixingSpec | np.ndarray, seed: int,
+                   num_steps: int | None = None) -> TopologyStream:
+    """Realize ``config``'s stream over ``mixing`` (seed already
+    resolved: pass ``config.resolve_seed(solver_seed)``)."""
+    return make_topology_process(config).realize(mixing, seed, num_steps)
+
+
+def stream_wire_bytes(stream: TopologyStream,
+                      compression: CompressionConfig | None,
+                      size: int, num_steps: int,
+                      comms_per_step: int = 2,
+                      communication_interval: int = 1) -> list[int]:
+    """Network-total cumulative wire bytes after 0..num_steps steps,
+    priced per *link* from the edge mask.
+
+    Each comm round every agent unicasts one payload per active outgoing
+    link (``edge_mask[t % T]``), so a dropped link costs zero bytes —
+    gossip rounds are cheap, dense static rounds expensive.  Composes
+    with the compression layer exactly like
+    ``consensus.cumulative_wire_bytes``: the first ``compress_after``
+    mixes ship full f32, steps with ``t % interval != 0`` ship nothing.
+    ``size`` is the per-payload entry count.  Returns length
+    ``num_steps + 1`` (entry t = bytes after t steps).
+
+    This is the *unicast* model (per-link pricing); the broadcast model
+    of ``SolveResult.bytes_per_round`` charges one payload per agent per
+    round regardless of degree — see docs/TOPOLOGY.md.
+    """
+    compression = compression or CompressionConfig()
+    compressor = make_compressor(compression)
+    full = 4 * size
+    packed = compressor.bytes_on_wire(size)
+    links = stream.edge_mask.sum(axis=(1, 2))       # directed, per round
+    T = stream.num_steps
+    out, total = [0], 0
+    for t in range(num_steps):
+        if t % communication_interval == 0:
+            per_payload = (full if t < compression.compress_after
+                           else packed)
+            total += int(comms_per_step * per_payload * links[t % T])
+        out.append(total)
+    return out

@@ -1,0 +1,196 @@
+"""Engine-side topology runtimes: the per-step matrix inside the scan.
+
+A consensus engine with a time-varying topology carries one of these on
+``engine.topology``; ``ConsensusEngine.topology_matrix(t, tree)``
+resolves the round's mixing matrix through it and threads the result
+into the combine as a per-call operand (``mix(..., matrix=...)``), so
+the matrix stream is effectively a scan input — gathered by the step
+index ``t % T`` — and the whole run stays one compile.
+
+Three runtimes, matching the backend families:
+
+    StreamTopology         dense / pallas: the realized (T, m, m)
+                           stream as a device array, ``matrices[t % T]``.
+    AdaptiveTopology       dense / pallas: the Dada-style matrix
+                           computed from the iterates per step
+                           (``adaptive_mixing``); state-dependent, so
+                           there is nothing to precompute.
+    PermuteStreamTopology  ppermute: the ROADMAP's batching form — one
+                           *shared offset schedule* (the base graph's
+                           ppermute rounds) with per-step weights.
+                           Realized matrices only ever remove or
+                           reweight base edges, so the base offsets
+                           cover every round; a dropped edge is a zero
+                           weight on its offset.  Yields a
+                           ``collectives.PermuteWeights`` override per
+                           step.
+
+``attach_topology`` picks the right runtime for a built engine; solver
+construction calls it (``repro.solvers.api.SolverBase.build``) whenever
+``SolverConfig.topology_process`` is non-static.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.collectives import PermuteWeights
+from repro.topology.process import (
+    TopologyProcessConfig,
+    TopologyStream,
+    adjacency_of,
+    make_topology_process,
+    realize_stream,
+)
+
+__all__ = [
+    "AdaptiveTopology",
+    "PermuteStreamTopology",
+    "StreamTopology",
+    "adaptive_mixing",
+    "agents_matrix",
+    "attach_topology",
+    "stream_of",
+]
+
+
+def agents_matrix(tree) -> jax.Array:
+    """Flatten a per-agent pytree to (m, D) f32 — the similarity input."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def adaptive_mixing(x2d: jax.Array, adjacency: jax.Array,
+                    tau: float) -> jax.Array:
+    """Similarity-reweighted Metropolis matrix (Dada-style), in-trace.
+
+    ``s_ij = adj_ij * exp(-||x_i - x_j||^2 / tau)`` plays the degree's
+    role in the Metropolis rule: ``W_ij = s_ij / (1 + max(r_i, r_j))``
+    with ``r_i = sum_j s_ij``, diagonal ``1 - sum_j W_ij``.  Symmetric
+    (s and max are), rows sum to 1 by construction, and nonnegative
+    because ``sum_j W_ij <= r_i / (1 + r_i) < 1`` — so the Section-4.1
+    properties hold for every iterate, including ghost-padded ones
+    (a zero adjacency row yields an identity row).
+    """
+    sq = jnp.sum(x2d * x2d, axis=1)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x2d @ x2d.T), 0.0)
+    s = adjacency * jnp.exp(-d2 / tau)
+    r = jnp.sum(s, axis=1)
+    w = s / (1.0 + jnp.maximum(r[:, None], r[None, :]))
+    return w + jnp.diag(1.0 - jnp.sum(w, axis=1))
+
+
+class StreamTopology:
+    """A realized stream as a device array, gathered by step index."""
+
+    def __init__(self, matrices):
+        self.matrices = jnp.asarray(matrices, jnp.float32)
+        self.period = self.matrices.shape[0]
+
+    def matrix_at(self, t, tree=None):
+        del tree
+        return self.matrices[jnp.asarray(t) % self.period]
+
+
+class AdaptiveTopology:
+    """State-dependent matrix: computed from the mixed tree per step."""
+
+    def __init__(self, adjacency, tau: float):
+        self.adjacency = jnp.asarray(adjacency, jnp.float32)
+        self.tau = float(tau)
+
+    def matrix_at(self, t, tree=None):
+        del t
+        if tree is None:
+            raise ValueError(
+                "the adaptive topology computes its matrix from the "
+                "iterates; this engine path cannot supply them — mix "
+                "through step1_step3 / mix_ef, or pass matrix= yourself")
+        return adaptive_mixing(agents_matrix(tree), self.adjacency,
+                               self.tau)
+
+
+class PermuteStreamTopology:
+    """Per-step weights on the base schedule's shared offsets (ppermute).
+
+    Precomputes ``weights[t, k, i] = M_t[i, (i + offsets[k]) % m]`` and
+    the per-step diagonals from the realized stream; ``matrix_at``
+    gathers the step's ``PermuteWeights`` override.  Streams stay numpy
+    until gathered so shard_map bodies close over constants, exactly
+    like the base ``PermuteSchedule``.
+    """
+
+    def __init__(self, schedule, matrices: np.ndarray):
+        mats = np.asarray(matrices, dtype=np.float64)
+        m = schedule.num_agents
+        if mats.shape[1:] != (m, m):
+            raise ValueError(
+                f"stream is {mats.shape[1:]} but the schedule mixes "
+                f"{m} agents")
+        idx = np.arange(m)
+        covered = np.zeros((m, m), dtype=bool)
+        np.fill_diagonal(covered, True)
+        for o in schedule.offsets:
+            covered[idx, (idx + o) % m] = True
+        stray = np.abs(mats[:, ~covered]).max(initial=0.0)
+        if stray > 1e-12:
+            raise ValueError(
+                "realized topology stream places weight on edges outside "
+                "the base schedule's offsets — time-varying ppermute "
+                "shares the base offset schedule and can only drop or "
+                "reweight its edges")
+        self.offsets = schedule.offsets
+        self.weights = np.stack(
+            [mats[:, idx, (idx + o) % m] for o in schedule.offsets],
+            axis=1) if schedule.offsets else np.zeros((mats.shape[0], 0, m))
+        self.self_weights = np.diagonal(mats, axis1=1, axis2=2).copy()
+        self.matrices = mats
+        self.period = mats.shape[0]
+
+    def matrix_at(self, t, tree=None):
+        del tree
+        k = jnp.asarray(t) % self.period
+        return PermuteWeights(
+            weights=jnp.asarray(self.weights, jnp.float32)[k],
+            self_weights=jnp.asarray(self.self_weights, jnp.float32)[k],
+            matrix=jnp.asarray(self.matrices, jnp.float32)[k])
+
+
+def attach_topology(engine, config: TopologyProcessConfig, mixing,
+                    seed: int):
+    """Install the runtime matching ``config`` on a built engine.
+
+    No-op for the static process (the engines stay bitwise identical to
+    the fixed-matrix path).  Stream processes additionally leave the
+    realized host-side ``TopologyStream`` on ``engine.topology_stream``
+    for wire / spectral-gap accounting.  ``seed`` is the fallback
+    (``SolverConfig.seed``) when the process config carries none.
+    """
+    if config.is_static:
+        return engine
+    process = make_topology_process(config)
+    if process.state_dependent:
+        if engine.name == "ppermute":
+            raise ValueError(
+                "the adaptive topology needs the full similarity matrix "
+                "per step, which a shard_map agent slice cannot compute; "
+                "use the dense or pallas backend")
+        engine.topology = AdaptiveTopology(adjacency_of(mixing),
+                                           config.tau)
+        return engine
+    stream = realize_stream(config, mixing, config.resolve_seed(seed))
+    engine.topology_stream = stream
+    if engine.name == "ppermute":
+        engine.topology = PermuteStreamTopology(engine.schedule,
+                                                stream.matrices)
+    else:
+        engine.topology = StreamTopology(stream.matrices)
+    return engine
+
+
+def stream_of(engine) -> TopologyStream | None:
+    """The host-side realized stream attached by ``attach_topology``."""
+    return getattr(engine, "topology_stream", None)

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # offline container: vendored deterministic shim
@@ -99,13 +98,18 @@ def test_neumann_converges_to_cg_with_k():
     assert errs == sorted(errs, reverse=True)  # monotone in K
 
 
-@pytest.mark.skip(reason="XLA CPU backend_compile segfaults (SIGSEGV) on the "
-                         "stochastic-k fori_loop with jaxlib 0.4.37 in this "
-                         "container — reproducible standalone and predates "
-                         "the compression work; the crash kills the whole "
-                         "pytest process so it cannot even xfail")
 def test_stochastic_neumann_unbiased_in_expectation():
-    """E_k[(K/L)(I - A/L)^k b] equals the K-term truncated sum."""
+    """E_k[(K/L)(I - A/L)^k b] equals the K-term truncated sum.
+
+    The 3000 estimator draws run as ONE ``jit(vmap(...))`` program over a
+    stacked key batch.  The original eager per-key loop compiled 3000
+    separate executables, which historically crashed XLA's CPU
+    backend_compile (SIGSEGV) on jaxlib 0.4.37 and still takes minutes —
+    the blanket skip it earned hid the estimator's only unbiasedness
+    check.  Root cause was the compile *count*, not the fori_loop body:
+    a single compilation of the vmapped estimator is fast and stable.
+    Revisit the single-compile workaround if jaxlib moves past 0.4.x.
+    """
     _, g, A, _, _ = quad_problem(jax.random.PRNGKey(11))
     b = jax.random.normal(jax.random.PRNGKey(12), (4,))
     x = jnp.zeros((5,))
@@ -113,12 +117,15 @@ def test_stochastic_neumann_unbiased_in_expectation():
     L = float(jnp.linalg.eigvalsh(A)[-1]) * 1.1
     K = 6
     det = neumann_inverse_apply(g, x, y, b, k_terms=K, lipschitz_g=L)
-    samples = [
-        neumann_inverse_apply(g, x, y, b, k_terms=K, lipschitz_g=L,
-                              stochastic_k=True, key=jax.random.PRNGKey(s))
-        for s in range(3000)
-    ]
-    mean = jnp.mean(jnp.stack(samples), axis=0)
+
+    @jax.jit
+    def estimate_all(keys):
+        one = lambda k: neumann_inverse_apply(
+            g, x, y, b, k_terms=K, lipschitz_g=L, stochastic_k=True, key=k)
+        return jnp.mean(jax.vmap(one)(keys), axis=0)
+
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3000))
+    mean = estimate_all(keys)
     np.testing.assert_allclose(np.asarray(mean), np.asarray(det),
                                atol=5e-2, rtol=0.1)
 
