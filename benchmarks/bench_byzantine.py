@@ -1,0 +1,208 @@
+"""Byzantine-resilience bench: stationarity under attack, per combine rule.
+
+One grid per (algorithm, combine rule), all through the batched sweep
+engine with ``pad_agents=True``: the attack *values* (num_byzantine,
+scale, schedule seed) are vmap operands exactly like seeds are, so the
+attacker-count x seed grid is ONE compiled program per (algorithm, rule)
+— the acceptance criterion behind the ``single_dispatch_grids`` gate.
+
+Three claims, asserted by ``benchmarks.check_gates``:
+
+* **Weighted + zero attackers is bitwise**: configuring the Byzantine
+  subsystem with ``kind="sign-flip", num_byzantine=0`` under the
+  ``weighted`` rule reproduces the no-byzantine baseline trace bit for
+  bit, per algorithm — honest rows pass through ``jnp.where`` against
+  their own values and the plain ``M @ X`` contraction is untouched.
+
+* **Trimmed-mean contains f=1**: with one sign-flip attacker on the
+  complete Section-6 graph, ``trimmed-mean(f=1)`` reaches a final
+  eq.-11 stationarity gap within ``TRIMMED_GATE_FACTOR`` (3x) of the
+  clean run — the attacked coordinate is the extreme value in (almost)
+  every dimension, so the symmetric trim removes it.
+
+* **Weighted diverges**: the same attack under the plain ``weighted``
+  rule ends beyond ``WEIGHTED_DIVERGE_FACTOR`` (10x) of the clean gap
+  (non-finite finals clamp to 1e9) — a single corrupted payload
+  destroys the stationarity trajectory the paper's communication
+  complexity is priced against.
+
+The guard section reports time-to-detection: one attacked run per
+algorithm with the in-scan divergence guard active, surfacing the
+``tripped_steps`` / ``last_good_step`` counters from ``SolveResult``.
+
+Dumped to ``BENCH_byzantine.json``; see docs/BYZANTINE.md.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, make_setup, metric_fn_of
+from repro.byzantine import ByzantineConfig, GuardConfig
+from repro.solvers import SolverConfig, expand_grid, solve, sweep
+
+ITERS = 24
+REC = 6
+SEEDS = (0, 1, 2)
+ALGOS = ("interact", "gt-dsgd")
+NB_GRID = (0, 1, 2)
+RULES = ("weighted", "coordinate-median", "trimmed-mean", "krum-like")
+ATTACK = "sign-flip"
+SCALE = 25.0
+
+# trimmed-mean with f=1 must end within this factor of the clean final
+# gap; plain weighted under the same attack must exceed the diverge
+# factor (a sign-flipped payload at scale 25 compounds geometrically).
+TRIMMED_GATE_FACTOR = 3.0
+WEIGHTED_DIVERGE_FACTOR = 10.0
+
+# guard trip-wire for the time-to-detection section: well above any
+# clean trajectory's iterate norm, crossed within a few attacked steps
+GUARD_MAX_NORM = 1e3
+
+
+def _json_path() -> str:
+    return os.path.join(os.environ.get("BENCH_JSON_DIR", os.getcwd()),
+                        "BENCH_byzantine.json")
+
+
+def _clamp(x: float) -> float:
+    return float(x) if np.isfinite(x) else 1e9
+
+
+def _byz_axis(rule: str, nb_grid) -> tuple:
+    trim = 1 if rule == "trimmed-mean" else None
+    return tuple(ByzantineConfig(kind=ATTACK, num_byzantine=nb,
+                                 scale=SCALE, combine=rule, trim=trim)
+                 for nb in nb_grid)
+
+
+def run(smoke: bool = False) -> list:
+    import json
+
+    iters = 8 if smoke else ITERS
+    rec = 4 if smoke else REC
+    seeds = SEEDS[:2] if smoke else SEEDS
+    nb_grid = NB_GRID
+
+    # complete graph: every robust rule sees all m rows, so trimming one
+    # attacker leaves m - 2 honest coordinates per combine
+    s = make_setup(m=5, p_connect=1.0)
+    rows: list = []
+    dump: dict = {"bench": "byzantine", "jax": jax.__version__,
+                  "algos": list(ALGOS), "rules": list(RULES),
+                  "nb_grid": list(nb_grid), "attack": ATTACK,
+                  "scale": SCALE, "iters": iters, "seeds": len(seeds),
+                  "trimmed_gate_factor": TRIMMED_GATE_FACTOR,
+                  "weighted_diverge_factor": WEIGHTED_DIVERGE_FACTOR,
+                  "grids": [], "guard": []}
+
+    base_cfg = SolverConfig(mixing=s.spec, hypergrad=s.hg,
+                            alpha=0.3, beta=0.3)
+    bitwise = True
+    single_dispatch = True
+    trimmed_factor = 0.0
+    weighted_factor = float("inf")
+
+    for algo in ALGOS:
+        # clean baseline through the SAME padded pipeline the attack
+        # grids use, so the bitwise claim compares identical programs
+        # modulo the byzantine layer
+        base_cfgs = expand_grid(
+            SolverConfig(algo=algo, mixing=s.spec, hypergrad=s.hg,
+                         alpha=0.3, beta=0.3), seed=tuple(seeds))
+        base = sweep(base_cfgs, iters, rec, problem=s.prob, x0=s.x0,
+                     y0=s.y0, data=s.data, pad_agents=True)
+        clean_final = float(base.traces.mean(axis=0)[-1])
+
+        for rule in RULES:
+            cfgs = expand_grid(
+                SolverConfig(algo=algo, mixing=s.spec, hypergrad=s.hg,
+                             alpha=0.3, beta=0.3),
+                byzantine=_byz_axis(rule, nb_grid), seed=tuple(seeds))
+            res = sweep(cfgs, iters, rec, problem=s.prob, x0=s.x0,
+                        y0=s.y0, data=s.data, pad_agents=True)
+            single_dispatch = single_dispatch and res.num_dispatches == 1
+
+            finals = {}
+            trace_means = {}
+            for nb in nb_grid:
+                traces = np.stack([
+                    res.trace_of(c) for c in cfgs
+                    if c.byzantine.num_byzantine == nb])
+                mean = traces.mean(axis=0)
+                finals[nb] = _clamp(mean[-1])
+                trace_means[nb] = [_clamp(v) for v in mean]
+                if nb == 0 and rule == "weighted":
+                    bitwise = bitwise and bool(
+                        (traces == base.traces).all())
+                us = 1e6 * res.groups[0].seconds / (len(cfgs) * iters)
+                rows.append(Row(
+                    f"byzantine_{rule}_nb{nb}_{algo}", us,
+                    f"final_metric={finals[nb]:.5f};rule={rule};"
+                    f"num_byzantine={nb};seeds={len(seeds)}"))
+            # degradation relative to the same rule's attack-free run:
+            # robust rules pay a clean-run consensus penalty vs exact
+            # averaging, and the resilience claim is about how little
+            # *additional* gap one attacker buys
+            factor_1 = finals[1] / max(finals[0], 1e-12)
+            if rule == "trimmed-mean":
+                trimmed_factor = max(trimmed_factor, factor_1)
+            if rule == "weighted":
+                weighted_factor = min(weighted_factor, factor_1)
+            dump["grids"].append({
+                "name": f"byzantine_{rule}_{algo}", "algo": algo,
+                "rule": rule, "seeds": len(seeds), "iters": iters,
+                "record_every": rec, "clean_final": clean_final,
+                "finals_by_nb": {str(nb): finals[nb] for nb in nb_grid},
+                "trace_mean_by_nb": {str(nb): trace_means[nb]
+                                     for nb in nb_grid},
+                "f1_factor": _clamp(factor_1),
+                "dispatches": res.num_dispatches})
+
+        # time-to-detection: the divergence guard on the weighted rule
+        # under one attacker — rollback keeps the state finite while the
+        # tripped counter records every contained step
+        guarded = solve(
+            SolverConfig(
+                algo=algo, mixing=s.spec, hypergrad=s.hg,
+                alpha=0.3, beta=0.3,
+                byzantine=ByzantineConfig(kind=ATTACK, num_byzantine=1,
+                                          scale=SCALE),
+                guard=GuardConfig(nan=True, max_norm=GUARD_MAX_NORM)),
+            iters, rec, problem=s.prob, x0=s.x0, y0=s.y0, data=s.data,
+            metric_fn=metric_fn_of(s))
+        rows.append(Row(
+            f"byzantine_guard_{algo}", 0.0,
+            f"tripped_steps={guarded.tripped_steps};"
+            f"last_good_step={guarded.last_good_step};"
+            f"num_steps={iters}"))
+        dump["guard"].append({
+            "algo": algo, "num_steps": iters,
+            "tripped_steps": guarded.tripped_steps,
+            "last_good_step": guarded.last_good_step,
+            "final_metric": _clamp(np.asarray(guarded.trace)[-1])})
+
+    dump["weighted_zero_bitwise"] = bool(bitwise)
+    dump["trimmed_f1_factor"] = _clamp(trimmed_factor)
+    dump["weighted_attacked_factor"] = _clamp(weighted_factor)
+    dump["single_dispatch_grids"] = bool(single_dispatch)
+    try:
+        with open(_json_path(), "w") as fh:
+            json.dump(dump, fh, indent=1)
+    except OSError:
+        pass  # read-only workdir: CSV rows still carry everything
+    rows.append(Row(
+        "byzantine_headline", 0.0,
+        f"weighted_zero_bitwise={bitwise};"
+        f"trimmed_f1_factor={dump['trimmed_f1_factor']:.3f};"
+        f"weighted_attacked_factor={dump['weighted_attacked_factor']:.3f};"
+        f"single_dispatch_grids={single_dispatch}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -51,6 +51,8 @@ def run(smoke: bool = False) -> list:
     s = make_setup(m=5)
     for algo in ALGORITHMS:
         solver, state = build(s, algo)
+        # appended last so existing column parsing stays positional-safe
+        byz_col = f"byzantine_kind={solver.config.byzantine.kind}"
         wire = _bytes_per_round(solver, state)
         iters = None
         for t in range(max_iters):
@@ -62,7 +64,8 @@ def run(smoke: bool = False) -> list:
             cap = max_iters * solver.communications_per_step
             rows.append(Row(f"table1_{algo}", 0.0,
                             f"eps={EPS};comm_rounds=>{cap};"
-                            f"bytes_per_round={wire:.0f};samples=NA"))
+                            f"bytes_per_round={wire:.0f};samples=NA;"
+                            f"{byz_col}"))
             continue
         hvp, grad, hess = _per_call_evals(s)
         calls = solver.hypergrad_calls_per_step(s.n)
@@ -94,7 +97,8 @@ def run(smoke: bool = False) -> list:
                         f"wire_bytes={rounds * wire:.0f};"
                         f"hvp_evals={hvp_evals:.0f};"
                         f"grad_evals={grad_evals:.0f};"
-                        f"samples_per_agent={samples:.0f}"))
+                        f"samples_per_agent={samples:.0f};"
+                        f"{byz_col}"))
     return rows
 
 

@@ -214,6 +214,68 @@ def check_topology(dump: dict, path: str) -> list[str]:
     return out
 
 
+def check_byzantine(dump: dict, path: str) -> list[str]:
+    """BENCH_byzantine.json: Byzantine-resilience gates.
+
+    * ``weighted_zero_bitwise`` — the Byzantine subsystem configured
+      with zero attackers under the ``weighted`` rule reproduces the
+      no-byzantine baseline trace bit for bit, per algorithm: the
+      resilience layer is a strict no-op until an attacker exists.
+    * ``trimmed_f1_factor <= trimmed_gate_factor`` — trimmed-mean with
+      one sign-flip attacker ends within the stated factor (3x) of the
+      clean eq.-11 stationarity gap, for every algorithm.
+    * ``weighted_attacked_factor >= weighted_diverge_factor`` — the
+      same attack under the plain weighted combine exceeds 10x the
+      clean gap (the robust rule is doing real work, the attack is not
+      a perturbation the baseline absorbs anyway).
+    * ``single_dispatch_grids`` — every attacker-count x seed grid
+      compiled ONE program per (algorithm, rule) under
+      ``sweep(..., pad_agents=True)``: attack values batch as vmap
+      operands, never as trace constants.
+    """
+    out = []
+    if _need(dump, "weighted_zero_bitwise", path) is not True:
+        raise GateFailure(f"{path}: weighted_zero_bitwise is not True")
+    out.append("weighted_zero_bitwise=True")
+    factor = _need(dump, "trimmed_f1_factor", path)
+    gate = _need(dump, "trimmed_gate_factor", path)
+    if not factor <= gate:
+        raise GateFailure(
+            f"{path}: trimmed_f1_factor={factor:.3f} > {gate}")
+    out.append(f"trimmed_f1_factor={factor:.2f}<={gate}")
+    wf = _need(dump, "weighted_attacked_factor", path)
+    div = _need(dump, "weighted_diverge_factor", path)
+    if not wf >= div:
+        raise GateFailure(
+            f"{path}: weighted_attacked_factor={wf:.3f} < {div} — the "
+            f"attack did not break the unprotected baseline")
+    out.append(f"weighted_attacked_factor={wf:.1f}>={div}")
+    if _need(dump, "single_dispatch_grids", path) is not True:
+        raise GateFailure(
+            f"{path}: an attack grid split into multiple dispatches "
+            f"under pad_agents=True")
+    out.append("single_dispatch_grids=True")
+    grids = _need(dump, "grids", path)
+    if not grids:
+        raise GateFailure(f"{path}: no attack-grid rows")
+    for row in grids:
+        finals = row.get("finals_by_nb")
+        if not finals:
+            raise GateFailure(
+                f"{path}: grid {row.get('name', '?')!r} lacks "
+                f"finals_by_nb")
+    out.append(f"{len(grids)} attack grids carry finals_by_nb")
+    guard = _need(dump, "guard", path)
+    for row in guard:
+        for field in ("tripped_steps", "last_good_step"):
+            if not isinstance(row.get(field), int):
+                raise GateFailure(
+                    f"{path}: guard row {row.get('algo', '?')!r} lacks "
+                    f"an integer {field!r} (got {row.get(field)!r})")
+    out.append(f"{len(guard)} guard rows carry detection counters")
+    return out
+
+
 # Known dumps: file name -> validator.  Every generator in benchmarks/
 # that dumps a BENCH_*.json should register its gate here so the CI
 # bench-smoke job (and anyone running the module locally) checks it.
@@ -222,6 +284,7 @@ GATES = {
     "BENCH_hypergrad.json": check_hypergrad,
     "BENCH_compression.json": check_compression,
     "BENCH_topology.json": check_topology,
+    "BENCH_byzantine.json": check_byzantine,
 }
 
 

@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   topology  time-varying topology: stationarity + wire bytes vs link
          failure, gossip vs static at matched bandwidth
          (+ BENCH_topology.json dump, see benchmarks.check_gates)
+  byzantine  Byzantine resilience: stationarity vs attacker count per
+         combine rule, guard time-to-detection
+         (+ BENCH_byzantine.json dump, see benchmarks.check_gates)
   roofline dry-run derived roofline terms (if dry-run artifacts exist)
 
 The figure suites (fig2/fig4/fig5) run their seed x config grids through
@@ -39,14 +42,16 @@ import traceback
 
 
 SUITE_NAMES = ("fig2", "fig4", "fig5", "table1", "compression",
-               "hypergrad", "kernels", "topology", "roofline")
+               "hypergrad", "kernels", "topology", "byzantine",
+               "roofline")
 
 
 def _suite_fn(name: str):
-    from benchmarks import (bench_complexity, bench_compression,
-                            bench_connectivity, bench_convergence,
-                            bench_hypergrad, bench_kernels, bench_lr,
-                            bench_topology, roofline_report)
+    from benchmarks import (bench_byzantine, bench_complexity,
+                            bench_compression, bench_connectivity,
+                            bench_convergence, bench_hypergrad,
+                            bench_kernels, bench_lr, bench_topology,
+                            roofline_report)
     return {
         "fig2": bench_convergence.run,
         "fig4": bench_connectivity.run,
@@ -56,6 +61,7 @@ def _suite_fn(name: str):
         "hypergrad": bench_hypergrad.run,
         "kernels": bench_kernels.run,
         "topology": bench_topology.run,
+        "byzantine": bench_byzantine.run,
         "roofline": roofline_report.run,
     }[name]
 

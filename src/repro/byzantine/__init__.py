@@ -1,0 +1,62 @@
+"""Byzantine-resilient consensus: attacks, robust combines, guards.
+
+The paper motivates decentralized bilevel learning for peer-to-peer
+settings where agents cannot be trusted; this package models the
+*adversarial* end of that spectrum (the topology subsystem covers the
+silent failures).  Three orthogonal layers, all carried by
+``SolverConfig`` and threaded through the consensus engine so every
+experiment — single solve, batched sweep, padded network grid — runs
+attacks, robust aggregation and divergence guards inside the one
+compiled ``lax.scan``:
+
+* **Attack registry** (:mod:`repro.byzantine.attacks`): a fixed seeded
+  subset of agent slots ships corrupted payloads every communication
+  round (``sign-flip``, ``gaussian``, ``same-value`` collusion,
+  ``inner-outer-split``).  Corruption happens *before* compression so
+  error-feedback reference copies track what was actually transmitted.
+* **Combine rules** (:mod:`repro.byzantine.combine`): ``weighted`` (the
+  bitwise no-op baseline), ``coordinate-median``, ``trimmed-mean`` and
+  ``krum-like`` replace the plain ``M @ X`` contraction, aggregating
+  over each agent's in-neighborhood (the support of its mixing row).
+* **Guards** (:mod:`repro.byzantine.guards`): NaN/Inf and iterate-norm
+  trip-wires in the scan carry with ``jnp.where`` rollback-to-last-good
+  — zero extra compiles, surfaced through ``SolveResult``.
+
+See docs/BYZANTINE.md for the full matrix of which rules preserve the
+self-clean / doubly-stochastic consensus semantics.
+"""
+from repro.byzantine.attacks import (
+    Attack,
+    apply_attack,
+    attack_names,
+    byzantine_mask,
+    make_attack,
+    register_attack,
+)
+from repro.byzantine.combine import (
+    CombineRule,
+    combine_rule_names,
+    make_combine_rule,
+    register_combine_rule,
+    robust_combine,
+)
+from repro.byzantine.config import ByzantineConfig, GuardConfig
+from repro.byzantine.guards import guard_param_step, init_guard
+
+__all__ = [
+    "Attack",
+    "ByzantineConfig",
+    "CombineRule",
+    "GuardConfig",
+    "apply_attack",
+    "attack_names",
+    "byzantine_mask",
+    "combine_rule_names",
+    "guard_param_step",
+    "init_guard",
+    "make_attack",
+    "make_combine_rule",
+    "register_attack",
+    "register_combine_rule",
+    "robust_combine",
+]

@@ -1,0 +1,189 @@
+"""Attack registry: seeded in-scan payload corruption.
+
+An attack corrupts the payload a Byzantine agent *ships* on the wire;
+its local state is untouched (a real adversary lies to its neighbors,
+it does not have to damage itself).  Which slots are Byzantine is a
+fixed seeded subset (:func:`byzantine_mask`) — the same agents attack
+every round, which is both the standard threat model and what makes the
+corrupted schedule reproducible.  Per-round randomness (the gaussian
+and same-value draws) folds the step counter into the attack key, so a
+re-run with the same ``ByzantineConfig.seed`` replays the identical
+corrupted schedule.
+
+Every derivation uses the per-slot ``fold_in`` idiom from
+``repro.core.svr_interact.per_agent_keys``: slot i's draw depends only
+on (key, i), never on m, so ghost-padded sweeps (``pad_agents=True``)
+corrupt the active slots bitwise-identically to the unpadded run and a
+``num_active`` operand can exclude ghost slots under ``vmap``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Attack",
+    "apply_attack",
+    "attack_names",
+    "byzantine_mask",
+    "make_attack",
+    "register_attack",
+]
+
+_ATTACKS: dict[str, type] = {}
+
+
+def register_attack(name: str):
+    """Class decorator: register an :class:`Attack` under ``name``."""
+
+    def wrap(cls):
+        if name in _ATTACKS:
+            raise ValueError(f"attack {name!r} already registered "
+                             f"({_ATTACKS[name].__name__})")
+        cls.name = name
+        _ATTACKS[name] = cls
+        return cls
+
+    return wrap
+
+
+def attack_names() -> tuple[str, ...]:
+    return tuple(sorted(_ATTACKS))
+
+
+def make_attack(kind: str) -> "Attack":
+    try:
+        return _ATTACKS[kind]()
+    except KeyError:
+        raise ValueError(
+            f"unknown attack {kind!r}; registered: {attack_names()}"
+        ) from None
+
+
+class Attack:
+    """One way a Byzantine slot corrupts the payload it ships.
+
+    Attributes:
+      streams: which wire streams the attack touches.  INTERACT ships
+        two streams per round — ``"x"`` (the outer iterate, eq. 6) and
+        ``"u"`` (the tracked hypergradient, eq. 10).  The inner iterate
+        y never crosses the wire, so the bilevel-specific
+        ``inner-outer-split`` attack targets ``"u"``: the only wire
+        stream carrying inner-problem information.
+    """
+
+    name = "?"
+    streams: tuple[str, ...] = ("x", "u")
+
+    def corrupt_row(self, row: jax.Array, slot_key: jax.Array,
+                    leaf_key: jax.Array, scale) -> jax.Array:
+        """Corrupted float32 payload for one agent's slice of one leaf.
+
+        ``slot_key`` is private to the slot (independent noise);
+        ``leaf_key`` is shared by every slot this round (collusion).
+        """
+        raise NotImplementedError
+
+
+@register_attack("sign-flip")
+class SignFlipAttack(Attack):
+    """Ship ``-scale * value``: the classic direction-reversal attack."""
+
+    def corrupt_row(self, row, slot_key, leaf_key, scale):
+        del slot_key, leaf_key
+        return -jnp.float32(1.0) * scale * row
+
+
+@register_attack("gaussian")
+class GaussianAttack(Attack):
+    """Add ``scale``-sized gaussian noise, independent per slot."""
+
+    def corrupt_row(self, row, slot_key, leaf_key, scale):
+        del leaf_key
+        return row + scale * jax.random.normal(slot_key, row.shape,
+                                               jnp.float32)
+
+
+@register_attack("same-value")
+class SameValueAttack(Attack):
+    """Collusion: every Byzantine slot ships the *same* random vector.
+
+    Defeats per-agent outlier screens that assume attackers are
+    mutually inconsistent — f colluding slots form a plausible cluster
+    (the case trimmed-mean handles but naive distance filters do not).
+    """
+
+    def corrupt_row(self, row, slot_key, leaf_key, scale):
+        del slot_key
+        return scale * jax.random.normal(leaf_key, row.shape, jnp.float32)
+
+
+@register_attack("inner-outer-split")
+class InnerOuterSplitAttack(SignFlipAttack):
+    """Sign-flip the tracking stream only (bilevel-specific).
+
+    The outer iterate x is shipped honestly while the ``u`` stream —
+    the gradient-tracking estimate built from the *inner*-problem
+    hypergradient (eqs. 8–10) — is reversed.  Consensus on x looks
+    healthy, but the descent direction every honest agent tracks is
+    poisoned; a no-op against single-level baselines like D-SGD whose
+    wire carries x alone.
+    """
+
+    streams = ("u",)
+
+
+def byzantine_mask(key: jax.Array, m: int, num_byzantine,
+                   num_active=None) -> jax.Array:
+    """(m,) bool: which slots are Byzantine — fixed, seeded, pad-safe.
+
+    Each slot draws a uniform score from ``fold_in(key, slot)``; the
+    ``num_byzantine`` smallest-ranked *active* slots attack.  Because
+    slot i's score never depends on m or ``num_active``, padding the
+    network (ghost slots at the tail) leaves active slots' scores — and
+    therefore their ranks among actives — unchanged: ghosts are scored
+    ``inf`` and can never be selected.  ``num_byzantine`` and
+    ``num_active`` may be traced (sweep batch operands).
+    """
+    slots = jnp.arange(m)
+    scores = jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(slots)
+    if num_active is not None:
+        scores = jnp.where(slots < num_active, scores, jnp.inf)
+    rank = jnp.sum(scores[None, :] < scores[:, None], axis=1)
+    return (rank < num_byzantine) & jnp.isfinite(scores)
+
+
+def apply_attack(attack: Attack, tree, mask: jax.Array, key_t: jax.Array,
+                 scale, *, slots: jax.Array | None = None):
+    """Corrupt the masked rows of every leaf; honest rows pass bitwise.
+
+    Args:
+      tree: payload pytree with a leading agent axis on every leaf.
+      mask: bool, one entry per *local* row of ``tree``.
+      key_t: per-(step, stream) attack key — already folded with t.
+      scale: attack magnitude (may be traced).
+      slots: global slot id of each local row (defaults to
+        ``arange(rows)``).  A sharded backend holding rows
+        ``[i*L, (i+1)*L)`` passes those ids so its draws match the
+        dense reference bitwise.
+
+    Honest (and all, when ``mask`` is all-False) rows go through
+    ``jnp.where`` against their float32 selves, so a zero-attacker
+    config is bitwise identical to no attack at all.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for li, leaf in enumerate(leaves):
+        leaf_key = jax.random.fold_in(key_t, li)
+        rows = leaf.shape[0]
+        ids = jnp.arange(rows) if slots is None else slots
+        slot_keys = jax.vmap(
+            lambda i: jax.random.fold_in(leaf_key, i))(ids)
+        clean = leaf.astype(jnp.float32)
+        bad = jax.vmap(
+            lambda row, k: attack.corrupt_row(row, k, leaf_key, scale)
+        )(clean, slot_keys)
+        shaped = mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        out.append(jnp.where(shaped, bad, clean).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,82 @@
+"""In-scan divergence guards: trip-wires + rollback in the scan carry.
+
+The guard wraps the parameterised step body
+``param_step(state, data, alpha, beta)`` — the one form every registry
+solver exposes — so the same wrapper covers single solves, batched
+sweeps and padded network grids.  Detection and rollback are pure
+``jnp.where`` data flow on the existing carry: no ``lax.cond`` branches,
+no extra compiles, and a guarded run with nothing tripped is the
+unguarded trajectory plus two integer counters.
+
+The counters ride the state's trailing ``guard`` field (``None``
+default, same trick as the ``ef`` wire state, so unguarded states keep
+their pre-guard pytree structure bitwise).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["guard_param_step", "init_guard"]
+
+# state fields the rollback must NOT rewind: the step counter and the
+# sampling key keep advancing (or a tripped run would replay the same
+# minibatch forever), and the guard counters are updated separately.
+_NEVER_ROLLED = ("t", "key", "guard")
+
+
+def init_guard(cfg) -> dict | None:
+    """The guard carry for a fresh state: counters at zero, or ``None``
+    when the config is inactive (bit-compat with unguarded states)."""
+    if cfg is None or not cfg.active:
+        return None
+    return {"tripped": jnp.zeros((), jnp.int32),
+            "last_good": jnp.zeros((), jnp.int32)}
+
+
+def _tripped(cfg, state):
+    """Scalar bool: does the candidate state trip any wire?"""
+    checks = []
+    if cfg.nan:
+        for leaf in jax.tree_util.tree_leaves((state.x, state.y)):
+            checks.append(~jnp.all(jnp.isfinite(leaf)))
+    if cfg.max_norm > 0.0:
+        sq = sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                 for leaf in jax.tree_util.tree_leaves(state.x))
+        checks.append(sq > jnp.float32(cfg.max_norm) ** 2)
+    bad = checks[0]
+    for check in checks[1:]:
+        bad = bad | check
+    return bad
+
+
+def guard_param_step(param_step, cfg):
+    """Wrap a ``step(state, data, alpha, beta)`` body with the guard.
+
+    A tripped step rolls every iterate field back to the incoming carry
+    (the last good state, by induction); ``t``/``key`` keep advancing
+    and the ``guard`` counters record the trip.  ``last_good`` holds the
+    step counter of the most recent accepted state.
+    """
+
+    def step(state, data, alpha, beta):
+        new = param_step(state, data, alpha, beta)
+        if getattr(new, "guard", None) is None:
+            raise ValueError(
+                "GuardConfig is active but the solver state carries no "
+                "guard counters; initialize with guard=init_guard(cfg) "
+                "(the registry solvers do this from SolverConfig.guard)")
+        bad = _tripped(cfg, new)
+        rolled = {
+            field: jax.tree_util.tree_map(
+                lambda old, cand: jnp.where(bad, old, cand),
+                getattr(state, field), getattr(new, field))
+            for field in new._fields if field not in _NEVER_ROLLED
+        }
+        step_idx = jnp.asarray(new.t, jnp.int32)
+        guard = {"tripped": new.guard["tripped"] + bad.astype(jnp.int32),
+                 "last_good": jnp.where(bad, new.guard["last_good"],
+                                        step_idx)}
+        return new._replace(guard=guard, **rolled)
+
+    return step

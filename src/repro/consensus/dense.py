@@ -30,10 +30,10 @@ class DenseEngine(ConsensusEngine):
 
     def __init__(self, mixing: MixingSpec | jax.Array,
                  compression: CompressionConfig | None = None,
-                 communication_interval: int = 1):
+                 communication_interval: int = 1, byzantine=None):
         mat = mixing.matrix if isinstance(mixing, MixingSpec) else mixing
         self.matrix = jnp.asarray(mat)
-        self._configure_wire(compression, communication_interval)
+        self._configure_wire(compression, communication_interval, byzantine)
 
     @classmethod
     def padded(cls, mixing: MixingSpec | jax.Array, pad_to: int,

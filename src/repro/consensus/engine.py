@@ -61,6 +61,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.byzantine import (ByzantineConfig, apply_attack, byzantine_mask,
+                             make_attack, robust_combine)
 from repro.consensus.compress import CompressionConfig, make_compressor
 
 __all__ = [
@@ -73,6 +75,11 @@ def _f32(leaf):
     return leaf.astype(jnp.float32)
 
 
+# wire streams an INTERACT-family round ships, keyed for the per-stream
+# attack derivation (the inner iterate y never crosses the wire).
+_STREAM_IDS = {"x": 0, "u": 1}
+
+
 class ConsensusEngine:
     """Base class: a consensus combine plus the fused Step-1/3 pair."""
 
@@ -82,10 +89,16 @@ class ConsensusEngine:
     # by ``attach_topology``; None = the fixed-matrix path, bit for bit.
     topology = None
 
+    # ghost-pad active-agent count (padded sweeps install a traced value
+    # so the Byzantine mask never selects a ghost slot); None = all m.
+    num_active = None
+
     def _configure_wire(self, compression: CompressionConfig | None = None,
-                        communication_interval: int = 1):
+                        communication_interval: int = 1,
+                        byzantine: ByzantineConfig | None = None):
         """Install the wire options every backend carries (call from
-        ``__init__``): the compressor and the mix cadence."""
+        ``__init__``): the compressor, the mix cadence, and the
+        Byzantine attack/combine configuration."""
         self.compression = compression or CompressionConfig()
         self.compressor = make_compressor(self.compression)
         self.communication_interval = int(communication_interval)
@@ -95,6 +108,23 @@ class ConsensusEngine:
         if not 0.0 < self.compression.gamma <= 1.0:
             raise ValueError("compression.gamma must be in (0, 1], got "
                              f"{self.compression.gamma}")
+        self.byzantine = byzantine or ByzantineConfig()
+        mat = getattr(self, "matrix", None)
+        if mat is not None:
+            # loud breakdown / capacity errors against the known m
+            # (shape is static even for traced padded matrices)
+            self.byzantine.validate_for(int(mat.shape[0]))
+        # attack operands: concrete here, overridden with traced sweep
+        # operands by the padded batching path (num_byzantine / scale /
+        # the schedule key are vmap batch axes there).
+        if self.byzantine.attack_active:
+            self.byz_values = {
+                "num_byzantine": self.byzantine.num_byzantine,
+                "scale": self.byzantine.scale,
+                "key": jax.random.PRNGKey(self.byzantine.resolve_seed(0)),
+            }
+        else:
+            self.byz_values = None
 
     def _damp(self, mixed, tree):
         """CHOCO consensus stepsize: ``x + gamma * (mixed - x)``."""
@@ -107,9 +137,60 @@ class ConsensusEngine:
 
     @property
     def wire_active(self) -> bool:
-        """Does this engine need the (t, ef) wire path at all?"""
+        """Does this engine need the (t, ef) wire path at all?
+
+        Byzantine options ride the wire path too: attacks corrupt the
+        shipped payload and robust rules replace the combine, both of
+        which live in ``mix_ef`` (this is also what routes the pallas
+        fast path through the base composition).
+        """
         return (self.compression.active
-                or self.communication_interval != 1)
+                or self.communication_interval != 1
+                or self.byzantine.active)
+
+    # -- Byzantine layer: payload corruption + robust aggregation ---------
+
+    def _attack_payload(self, tree, t, stream: str):
+        """Corrupt the Byzantine slots' outgoing payload for ``stream``.
+
+        A python no-op (bitwise, zero trace cost) when no attack is
+        configured or the attack does not touch this stream.  The mask
+        is the fixed seeded subset of :func:`repro.byzantine.
+        byzantine_mask`; the per-round key folds (stream, t) into the
+        schedule key so re-runs replay the identical corruption.
+        """
+        byz = self.byzantine
+        if not byz.attack_active:
+            return tree
+        attack = make_attack(byz.kind)
+        if stream not in attack.streams:
+            return tree
+        vals = self.byz_values
+        m = jax.tree_util.tree_leaves(tree)[0].shape[0]
+        mask = byzantine_mask(vals["key"], m, vals["num_byzantine"],
+                              num_active=self.num_active)
+        key_t = jax.random.fold_in(
+            jax.random.fold_in(vals["key"], _STREAM_IDS[stream]),
+            self._require_t(t))
+        return apply_attack(attack, tree, mask, key_t, vals["scale"])
+
+    def _combine(self, tree, *, matrix=None, dp_key=None, agent_index=None):
+        """The configured aggregation: ``mix`` for ``weighted``, else a
+        robust rule over the mixing row's support (dense rows only)."""
+        rule = self.byzantine.combine
+        if rule == "weighted":
+            return self.mix(tree, matrix=matrix, dp_key=dp_key,
+                            agent_index=agent_index)
+        mat = matrix if matrix is not None else getattr(self, "matrix",
+                                                        None)
+        if mat is None:
+            raise NotImplementedError(
+                f"combine rule {rule!r} needs all-to-all access to the "
+                f"payload rows, but the {self.name!r} backend holds no "
+                f"full mixing matrix — run robust rules on the dense "
+                f"backend (pallas routes there automatically)")
+        return robust_combine(mat, tree, rule,
+                              self.byzantine.resolve_trim())
 
     def mix(self, tree, *, matrix=None, dp_key: jax.Array | None = None,
             agent_index: jax.Array | None = None):
@@ -234,7 +315,7 @@ class ConsensusEngine:
 
     def mix_ef(self, tree, ef=None, t=None, *, matrix=None,
                dp_key: jax.Array | None = None,
-               agent_index: jax.Array | None = None):
+               agent_index: jax.Array | None = None, stream: str = "x"):
         """The wire-aware combine: ``(mixed, ef_new)``.
 
         ``ef`` is this stream's wire state ``{"e": EF residual, "ref":
@@ -246,23 +327,34 @@ class ConsensusEngine:
         inactive wire config this is exactly ``(mix(tree), ef)``.
         ``matrix`` (or an attached time-varying topology, resolved from
         ``t``) overrides the fixed matrix for this round.
+
+        ``stream`` labels which wire stream this combine carries
+        (``"x"``/``"u"``) so stream-selective attacks corrupt the right
+        payload.  Corruption happens *before* compression: the CHOCO
+        ``ref`` copies advance by what was actually transmitted, so a
+        Byzantine ``ref`` stream never poisons honest agents'
+        reconstruction of each other.  The self-clean correction applies
+        only under the ``weighted`` rule — the robust rules are
+        nonlinear and have no exact self term (docs/BYZANTINE.md).
         """
         if matrix is None:
             matrix = self.topology_matrix(t, tree)
+        sent = self._attack_payload(tree, t, stream)
         if self.compression.active:
-            payload, ef_new = self._compress_payload(tree, ef, t)
-            mixed = self.mix(payload, matrix=matrix, dp_key=dp_key,
-                             agent_index=agent_index)
-            d = self._self_weights(matrix)
-            mixed = jax.tree_util.tree_map(
-                lambda mx, xx, cc: (
-                    _f32(mx) + d.reshape((-1,) + (1,) * (mx.ndim - 1))
-                    * (_f32(xx) - _f32(cc))).astype(mx.dtype),
-                mixed, tree, payload)
+            payload, ef_new = self._compress_payload(sent, ef, t)
+            mixed = self._combine(payload, matrix=matrix, dp_key=dp_key,
+                                  agent_index=agent_index)
+            if self.byzantine.combine == "weighted":
+                d = self._self_weights(matrix)
+                mixed = jax.tree_util.tree_map(
+                    lambda mx, xx, cc: (
+                        _f32(mx) + d.reshape((-1,) + (1,) * (mx.ndim - 1))
+                        * (_f32(xx) - _f32(cc))).astype(mx.dtype),
+                    mixed, tree, payload)
             mixed = self._damp(mixed, tree)
         else:
-            mixed = self.mix(tree, matrix=matrix, dp_key=dp_key,
-                             agent_index=agent_index)
+            mixed = self._combine(sent, matrix=matrix, dp_key=dp_key,
+                                  agent_index=agent_index)
             ef_new = ef
         return self._apply_interval(t, mixed, tree, ef_new, ef)
 
@@ -302,10 +394,11 @@ class ConsensusEngine:
         if wire:
             x_mixed, ef_x = self.mix_ef(
                 x, None if ef is None else ef.get("x"), t,
-                matrix=matrix, dp_key=dp_key, agent_index=agent_index)
+                matrix=matrix, dp_key=dp_key, agent_index=agent_index,
+                stream="x")
             u_mixed, ef_u = self.mix_ef(
                 u, None if ef is None else ef.get("u"), t,
-                matrix=matrix, agent_index=agent_index)
+                matrix=matrix, agent_index=agent_index, stream="u")
         else:
             x_mixed = self.mix(x, matrix=matrix, dp_key=dp_key,
                                agent_index=agent_index)
@@ -415,7 +508,9 @@ def make_engine(backend: str, mixing, **opts) -> ConsensusEngine:
 
     ``mixing`` is a ``MixingSpec`` or a raw (m, m) matrix.  Backend
     options: ``block_d``/``interpret`` (pallas), ``agent_axes``/
-    ``compress``/``dp_sigma`` (ppermute).
+    ``compress``/``dp_sigma`` (ppermute); every backend additionally
+    accepts ``compression``/``communication_interval``/``byzantine``
+    wire options.
     """
     try:
         factory = BACKENDS[backend]

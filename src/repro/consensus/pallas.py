@@ -29,12 +29,12 @@ class PallasEngine(ConsensusEngine):
     def __init__(self, mixing: MixingSpec | jax.Array,
                  block_d: int = DEFAULT_BLOCK_D, interpret: bool = True,
                  compression: CompressionConfig | None = None,
-                 communication_interval: int = 1):
+                 communication_interval: int = 1, byzantine=None):
         mat = mixing.matrix if isinstance(mixing, MixingSpec) else mixing
         self.matrix = jnp.asarray(mat, jnp.float32)
         self.block_d = int(block_d)
         self.interpret = bool(interpret)
-        self._configure_wire(compression, communication_interval)
+        self._configure_wire(compression, communication_interval, byzantine)
 
     def mix(self, tree, *, matrix=None, dp_key=None, agent_index=None):
         del dp_key, agent_index  # single-host backend: no wire, no DP

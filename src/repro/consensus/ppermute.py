@@ -25,8 +25,9 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.byzantine import apply_attack, byzantine_mask, make_attack
 from repro.consensus.compress import CompressionConfig, Int8Compressor
-from repro.consensus.engine import ConsensusEngine
+from repro.consensus.engine import _STREAM_IDS, ConsensusEngine
 from repro.core.consensus import MixingSpec
 from repro.sharding.collectives import (
     PermuteSchedule, permute_mix_tree, permute_schedule)
@@ -43,7 +44,7 @@ class PermuteEngine(ConsensusEngine):
                  compress: str | None = None, dp_sigma: float = 0.0,
                  impl: str = "ppermute",
                  compression: CompressionConfig | None = None,
-                 communication_interval: int = 1):
+                 communication_interval: int = 1, byzantine=None):
         self.schedule = (mixing if isinstance(mixing, PermuteSchedule)
                          else permute_schedule(mixing))
         self.agent_axes = tuple(agent_axes)
@@ -52,11 +53,18 @@ class PermuteEngine(ConsensusEngine):
         if impl not in ("ppermute", "psum"):
             raise ValueError(f"unknown ppermute impl {impl!r}")
         self.impl = impl
-        self._configure_wire(compression, communication_interval)
+        self._configure_wire(compression, communication_interval, byzantine)
         if self.compression.active and compress is not None:
             raise ValueError(
                 "pass either the legacy compress= wire format or a "
                 "CompressionConfig, not both")
+        self.byzantine.validate_for(self.schedule.num_agents)
+        if self.byzantine.combine != "weighted":
+            raise NotImplementedError(
+                f"combine rule {self.byzantine.combine!r} needs "
+                f"all-to-all access to the payload rows, but the "
+                f"ppermute backend only ever holds the local agent's "
+                f"slice — robust rules require the dense backend")
 
     @property
     def rounds_per_mix(self) -> int:
@@ -71,8 +79,44 @@ class PermuteEngine(ConsensusEngine):
             dp_key=dp_key, impl=self.impl, agent_index=agent_index,
             override=matrix)
 
+    def _local_slots(self, tree, agent_index):
+        """Global slot ids of this shard's rows (leading local dim)."""
+        rows = jax.tree_util.tree_leaves(tree)[0].shape[0]
+        if agent_index is None:
+            idx = jnp.int32(0)
+            for ax in self.agent_axes:
+                idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+        else:
+            idx = jnp.asarray(agent_index, jnp.int32)
+        return idx * rows + jnp.arange(rows, dtype=jnp.int32)
+
+    def _attack_local(self, tree, t, stream, agent_index):
+        """The local-slice form of the base ``_attack_payload``.
+
+        The mask and per-slot keys are derived from *global* slot ids,
+        so the corrupted payload matches the dense reference bitwise
+        (under the exact ``none`` compressor).  Expects the standard
+        leading local agent dim on every leaf.
+        """
+        byz = self.byzantine
+        if not byz.attack_active:
+            return tree
+        attack = make_attack(byz.kind)
+        if stream not in attack.streams:
+            return tree
+        vals = self.byz_values
+        mask = byzantine_mask(vals["key"], self.schedule.num_agents,
+                              vals["num_byzantine"],
+                              num_active=self.num_active)
+        slots = self._local_slots(tree, agent_index)
+        key_t = jax.random.fold_in(
+            jax.random.fold_in(vals["key"], _STREAM_IDS[stream]),
+            self._require_t(t))
+        return apply_attack(attack, tree, mask[slots], key_t,
+                            vals["scale"], slots=slots)
+
     def mix_ef(self, tree, ef=None, t=None, *, matrix=None, dp_key=None,
-               agent_index=None):
+               agent_index=None, stream="x"):
         """Per-neighbour wire path: compress each outgoing *leaf*.
 
         Unlike the matrix backends (one compressed buffer of all leaves
@@ -90,9 +134,10 @@ class PermuteEngine(ConsensusEngine):
         """
         if matrix is None:
             matrix = self.topology_matrix(t, tree)
+        sent = self._attack_local(tree, t, stream, agent_index)
         if self.compression.active:
             v = jax.tree_util.tree_map(
-                lambda l: l.astype(jnp.float32), tree)
+                lambda l: l.astype(jnp.float32), sent)
             if ef is not None:
                 v = jax.tree_util.tree_map(
                     lambda a, r: a - r, v, ef["ref"])
@@ -118,7 +163,7 @@ class PermuteEngine(ConsensusEngine):
                 payload_tree=payload, override=matrix)
             mixed = self._damp(mixed, tree)
         else:
-            mixed = self.mix(tree, matrix=matrix, dp_key=dp_key,
+            mixed = self.mix(sent, matrix=matrix, dp_key=dp_key,
                              agent_index=agent_index)
             ef_new = ef
         return self._apply_interval(t, mixed, tree, ef_new, ef)

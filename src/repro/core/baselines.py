@@ -48,6 +48,7 @@ class GtDsgdState(NamedTuple):
     t: jax.Array
     key: jax.Array
     ef: object = None  # error-feedback residuals {"x", "u"} (compressed wire)
+    guard: object = None  # divergence-guard counters {"tripped", "last_good"}
 
 
 def _bcast(tree, m):
@@ -57,7 +58,8 @@ def _bcast(tree, m):
 
 def init_gt_dsgd_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
                        x0, y0, data: AgentData, key: jax.Array,
-                       batch_size: int, compression=None) -> GtDsgdState:
+                       batch_size: int, compression=None,
+                       guard=None) -> GtDsgdState:
     m = data.inner_x.shape[0]
     x, y = _bcast(x0, m), _bcast(y0, m)
     # m-independent key derivation (see per_agent_keys): ghost-padded
@@ -71,7 +73,7 @@ def init_gt_dsgd_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     p_prev = jax.tree_util.tree_map(jnp.array, p)
     return GtDsgdState(x=x, y=y, u=p, v=v, p_prev=p_prev,
                        t=jnp.zeros((), jnp.int32), key=k_state,
-                       ef=init_ef(compression, x=x, u=p))
+                       ef=init_ef(compression, x=x, u=p), guard=guard)
 
 
 def gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
@@ -94,7 +96,8 @@ def gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
             engine, state.x, state.y, state.u, state.v, state.p_prev,
             alpha, beta, grads_fn, t=state.t, ef=state.ef))
     return GtDsgdState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
-                       t=state.t + 1, key=key, ef=ef_new)
+                       t=state.t + 1, key=key, ef=ef_new,
+                       guard=state.guard)
 
 
 def make_gt_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
@@ -119,14 +122,15 @@ class DsgdState(NamedTuple):
     t: jax.Array
     key: jax.Array
     ef: object = None  # error-feedback residual {"x"} (compressed wire)
+    guard: object = None  # divergence-guard counters {"tripped", "last_good"}
 
 
 def init_dsgd_state(x0, y0, m: int, key: jax.Array,
-                    compression=None) -> DsgdState:
+                    compression=None, guard=None) -> DsgdState:
     x = _bcast(x0, m)
     return DsgdState(x=x, y=_bcast(y0, m),
                      t=jnp.zeros((), jnp.int32), key=key,
-                     ef=init_ef(compression, x=x))
+                     ef=init_ef(compression, x=x), guard=guard)
 
 
 def dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
@@ -157,7 +161,8 @@ def dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
         lambda mx, g: mx - alpha * g, x_mixed, p)
     y_new = jax.tree_util.tree_map(
         lambda y, g: y - beta * g, state.y, v)
-    return DsgdState(x=x_new, y=y_new, t=state.t + 1, key=key, ef=ef_new)
+    return DsgdState(x=x_new, y=y_new, t=state.t + 1, key=key, ef=ef_new,
+                     guard=state.guard)
 
 
 def make_dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,

@@ -62,6 +62,7 @@ class InteractState(NamedTuple):
     p_prev: object   # previous local hypergradient, like x
     t: jax.Array     # iteration counter
     ef: object = None  # error-feedback residuals {"x", "u"} (compressed wire)
+    guard: object = None  # divergence-guard counters {"tripped", "last_good"}
 
 
 def _per_agent_batch(data: AgentData):
@@ -84,7 +85,7 @@ def _agent_gradients(problem: BilevelProblem, hg_cfg: HypergradConfig,
 
 def init_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
                x0, y0, data: AgentData,
-               compression=None) -> InteractState:
+               compression=None, guard=None) -> InteractState:
     """Algorithm-1 initialisation: u_0 = grad_bar f(x_0, y_0), v_0 = grad_y g.
 
     ``x0``/``y0`` are single-agent pytrees; every agent starts from the same
@@ -93,7 +94,9 @@ def init_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     ``compression`` (a ``repro.consensus.CompressionConfig``) adds the
     zero error-feedback residuals for the two consensus streams to the
     state when it uses EF; otherwise ``ef`` stays ``None`` and the state
-    is bit-identical to the uncompressed layout.
+    is bit-identical to the uncompressed layout.  ``guard`` is the
+    divergence-guard counter carry (``repro.byzantine.init_guard``), the
+    same trailing-``None`` convention.
     """
     m = data.inner_x.shape[0]
     bcast = lambda tree: jax.tree_util.tree_map(
@@ -110,7 +113,7 @@ def init_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     p_prev = jax.tree_util.tree_map(jnp.array, p)
     return InteractState(x=x, y=y, u=p, v=v, p_prev=p_prev,
                          t=jnp.zeros((), jnp.int32),
-                         ef=init_ef(compression, x=x, u=p))
+                         ef=init_ef(compression, x=x, u=p), guard=guard)
 
 
 def interact_step(
@@ -143,7 +146,8 @@ def interact_step(
             alpha, beta, grads_fn, t=state.t, ef=state.ef))
 
     return InteractState(x=x_new, y=y_new, u=u_new, v=v_new,
-                         p_prev=p_new, t=state.t + 1, ef=ef_new)
+                         p_prev=p_new, t=state.t + 1, ef=ef_new,
+                         guard=state.guard)
 
 
 def make_interact_step(problem: BilevelProblem, hg_cfg: HypergradConfig,

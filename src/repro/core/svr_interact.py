@@ -64,6 +64,7 @@ class SvrState(NamedTuple):
     t: jax.Array
     key: jax.Array
     ef: object = None  # error-feedback residuals {"x", "u"} (compressed wire)
+    guard: object = None  # divergence-guard counters {"tripped", "last_good"}
 
 
 def _sample_batch(key, data_x, data_y, batch_size):
@@ -94,7 +95,7 @@ def _minibatch_grads(problem, hg_cfg, x, y, data: AgentData, key, batch_size):
 
 def init_svr_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
                    x0, y0, data: AgentData, key: jax.Array,
-                   compression=None) -> SvrState:
+                   compression=None, guard=None) -> SvrState:
     m = data.inner_x.shape[0]
     bcast = lambda tree: jax.tree_util.tree_map(
         lambda leaf: jnp.broadcast_to(leaf, (m,) + leaf.shape), tree)
@@ -109,7 +110,7 @@ def init_svr_state(problem: BilevelProblem, hg_cfg: HypergradConfig,
     copy = lambda tree: jax.tree_util.tree_map(jnp.array, tree)
     return SvrState(x=x, y=y, u=p, v=v, p_prev=copy(p), x_prev=copy(x),
                     y_prev=copy(y), t=jnp.zeros((), jnp.int32), key=k_state,
-                    ef=init_ef(compression, x=x, u=p))
+                    ef=init_ef(compression, x=x, u=p), guard=guard)
 
 
 def svr_interact_step(
@@ -168,7 +169,7 @@ def svr_interact_step(
 
     return SvrState(x=x_new, y=y_new, u=u_new, v=v_new, p_prev=p_new,
                     x_prev=state.x, y_prev=state.y,
-                    t=state.t + 1, key=key, ef=ef_new)
+                    t=state.t + 1, key=key, ef=ef_new, guard=state.guard)
 
 
 def make_svr_interact_step(

@@ -32,6 +32,7 @@ from repro.solvers.api import (
     run_recorded,
     solve,
 )
+from repro.byzantine import ByzantineConfig, GuardConfig
 from repro.consensus.compress import CompressionConfig
 from repro.solvers.config import SolverConfig, TopologyConfig
 from repro.solvers.sweep import SweepGroup, SweepResult, expand_grid, sweep
@@ -42,7 +43,9 @@ from repro.solvers import interact as _interact      # noqa: F401
 from repro.solvers import svr_interact as _svr       # noqa: F401
 
 __all__ = [
+    "ByzantineConfig",
     "CompressionConfig",
+    "GuardConfig",
     "SolveResult",
     "Solver",
     "SolverBase",

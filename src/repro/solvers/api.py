@@ -230,7 +230,13 @@ class SolverBase:
             self.config.backend, spec,
             compression=self.config.compression,
             communication_interval=self.config.communication_interval,
+            byzantine=self.config.byzantine,
             **dict(self.config.backend_opts))
+        if self.config.byzantine.attack_active:
+            # the attack schedule inherits the solver seed unless the
+            # ByzantineConfig pins its own
+            engine.byz_values["key"] = jax.random.PRNGKey(
+                self.config.byzantine.resolve_seed(self.config.seed))
         if not self.config.topology_process.is_static:
             from repro.topology import attach_topology
             attach_topology(engine, self.config.topology_process, spec,
@@ -241,6 +247,14 @@ class SolverBase:
                                                      engine, n)
         except NotImplementedError:
             self._param_step = None
+        if self.config.guard.active:
+            if self._param_step is None:
+                raise ValueError(
+                    f"GuardConfig is active but solver {self.name!r} "
+                    f"implements no parameterised step to wrap")
+            from repro.byzantine import guard_param_step
+            self._param_step = guard_param_step(self._param_step,
+                                                self.config.guard)
         raw = self._make_step(problem, hg_cfg, engine, n)
         self._raw_step = raw
         self._step_fn = jax.jit(raw, donate_argnums=0)
@@ -403,6 +417,12 @@ class SolveResult:
     hvp_per_step: float = 0.0
     grad_per_step: float = 0.0
     hess_per_step: float = 0.0
+    # divergence-guard counters (SolverConfig.guard): how many scan
+    # steps tripped a wire and were rolled back, and the step counter of
+    # the last accepted state.  0 / -1 when no guard was configured —
+    # time-to-detection is last_good_step vs num_steps.
+    tripped_steps: int = 0
+    last_good_step: int = -1
 
 
 def default_setup(seed: int = 0, num_agents: int = 5, n_per_agent: int = 600,
@@ -486,6 +506,10 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
         counts = dict(hvp_per_step=per_call.hvp_count * calls,
                       grad_per_step=per_call.grad_count * calls,
                       hess_per_step=per_call.hess_count * calls)
+    guard = getattr(state, "guard", None)
+    if guard is not None:
+        counts.update(tripped_steps=int(guard["tripped"]),
+                      last_good_step=int(guard["last_good"]))
     # one agent's consensus payload: its slice of the outer iterate tree
     payload = jax.tree_util.tree_map(lambda l: l[0], state.x)
     return SolveResult(state=state, trace=trace,

@@ -7,6 +7,7 @@ for it in convergence (Fig. 2).
 """
 from __future__ import annotations
 
+from repro.byzantine import init_guard
 from repro.core.baselines import (
     dsgd_step,
     gt_dsgd_step,
@@ -28,7 +29,8 @@ class GtDsgdSolver(SolverBase):
         n = data.inner_x.shape[1] + data.outer_x.shape[1]
         return init_gt_dsgd_state(problem, hg_cfg, x0, y0, data, key,
                                   self.config.resolve_batch(n),
-                                  compression=self.config.compression)
+                                  compression=self.config.compression,
+                                  guard=init_guard(self.config.guard))
 
     def _make_param_step(self, problem, hg_cfg, engine, n):
         bs = self.config.resolve_batch(n)
@@ -52,7 +54,8 @@ class DsgdSolver(SolverBase):
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
         m = data.inner_x.shape[0]
         return init_dsgd_state(x0, y0, m, key,
-                               compression=self.config.compression)
+                               compression=self.config.compression,
+                               guard=init_guard(self.config.guard))
 
     def _make_param_step(self, problem, hg_cfg, engine, n):
         bs = self.config.resolve_batch(n)

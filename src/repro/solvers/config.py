@@ -21,6 +21,7 @@ from typing import Any, Mapping
 
 import numpy as np
 
+from repro.byzantine import ByzantineConfig, GuardConfig
 from repro.consensus.compress import CompressionConfig
 from repro.core.consensus import (
     MixingSpec,
@@ -107,8 +108,18 @@ class SolverConfig:
         time-varying layer ON TOP of the base graph from ``topology`` /
         ``mixing``.  The default static process is a bitwise no-op.
         See docs/TOPOLOGY.md.
+      byzantine: Byzantine attack injection + robust aggregation
+        (``repro.byzantine.ByzantineConfig``: attack kind / attacker
+        count / combine rule).  The default — no attack, ``weighted``
+        combine — is a bitwise no-op.  See docs/BYZANTINE.md.
+      guard: in-scan divergence trip-wires
+        (``repro.byzantine.GuardConfig``: NaN/Inf detection,
+        iterate-norm bound, ``jnp.where`` rollback-to-last-good);
+        counters surface through ``SolveResult.tripped_steps`` /
+        ``last_good_step``.  Inactive by default.
       seed: PRNG seed for the stochastic solvers' sampling streams (and
-        the fallback seed of the topology process's link schedule).
+        the fallback seed of the topology process's link schedule and
+        the Byzantine attack schedule).
     """
 
     algo: str = "interact"
@@ -125,6 +136,8 @@ class SolverConfig:
     compression: CompressionConfig = CompressionConfig()
     communication_interval: int = 1
     topology_process: TopologyProcessConfig = TopologyProcessConfig()
+    byzantine: ByzantineConfig = ByzantineConfig()
+    guard: GuardConfig = GuardConfig()
     seed: int = 0
 
     def mixing_spec(self, m: int | None = None) -> MixingSpec:
@@ -204,16 +217,30 @@ class SolverConfig:
         # algorithm grid batches into one program per algorithm.
         proc = self.topology_process.structural_key()
         if pad_to is not None:
+            # Byzantine grids batch under padding: only the structure
+            # (attack kind, combine rule, trim) must match — the
+            # attacker count, scale and schedule key are vmap operands,
+            # so a num_byzantine sweep is one dispatch per algorithm.
+            byz = self.byzantine.structural_key()
             return (self.algo, self.batch_size, self.q, ("padded", pad_to),
-                    self.backend, opts, self.hypergrad, wire, proc)
+                    self.backend, opts, self.hypergrad, wire, proc, byz,
+                    self.guard)
         mix = None
         if self.mixing is not None:
             mat = np.asarray(self.mixing.matrix)
             mix = (mat.shape, mat.tobytes(), float(self.mixing.lam),
                    tuple(self.mixing.neighbors), tuple(self.mixing.weights))
+        # Non-padded groups key on the FULL Byzantine config plus the
+        # resolved attack seed: the built engine bakes the attack
+        # operands in as constants, and a seed-inheriting attack
+        # (ByzantineConfig.seed=None) must never share one schedule
+        # across a seed grid.
+        byz = (self.byzantine,
+               self.byzantine.resolve_seed(self.seed)
+               if self.byzantine.attack_active else None)
         return (self.algo, self.batch_size, self.q, self.num_agents, mix,
                 self.topology, self.backend, opts, self.hypergrad, wire,
-                proc)
+                proc, byz, self.guard)
 
     def batch_values(self) -> tuple[int, float, float]:
         """The per-experiment dynamic values: ``(seed, alpha, beta)``."""

@@ -6,6 +6,7 @@ Full local gradients every iteration: n IFO calls per agent per step
 """
 from __future__ import annotations
 
+from repro.byzantine import init_guard
 from repro.core.interact import init_state, interact_step
 from repro.solvers.api import SolverBase, register_solver
 
@@ -19,7 +20,8 @@ class InteractSolver(SolverBase):
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
         # Algorithm 1 is deterministic; the key is unused.
         return init_state(problem, hg_cfg, x0, y0, data,
-                          compression=self.config.compression)
+                          compression=self.config.compression,
+                          guard=init_guard(self.config.guard))
 
     def _make_param_step(self, problem, hg_cfg, engine, n):
         def step(state, data, alpha, beta):

@@ -7,6 +7,7 @@ O(sqrt(n)) regime at the paper's q = |S| = ceil(sqrt(n)) defaults).
 """
 from __future__ import annotations
 
+from repro.byzantine import init_guard
 from repro.core.svr_interact import init_svr_state, svr_interact_step
 from repro.solvers.api import SolverBase, register_solver
 
@@ -19,7 +20,8 @@ class SvrInteractSolver(SolverBase):
 
     def _init_state(self, key, problem, hg_cfg, x0, y0, data):
         return init_svr_state(problem, hg_cfg, x0, y0, data, key,
-                              compression=self.config.compression)
+                              compression=self.config.compression,
+                              guard=init_guard(self.config.guard))
 
     def _make_param_step(self, problem, hg_cfg, engine, n):
         q = self.config.resolve_q(n)

@@ -223,6 +223,7 @@ def _stream_experiment_fn(solver, data, n, num_steps: int,
     per-step matrices are array values, exactly like the padded sweep's
     mixing-matrix operand.
     """
+    from repro.byzantine import guard_param_step
     from repro.consensus.dense import DenseEngine
     from repro.topology.runtime import StreamTopology
 
@@ -231,9 +232,16 @@ def _stream_experiment_fn(solver, data, n, num_steps: int,
     def one(key, alpha, beta, x0, y0, stream):
         engine = DenseEngine(
             solver._engine.matrix, compression=solver.config.compression,
-            communication_interval=solver.config.communication_interval)
+            communication_interval=solver.config.communication_interval,
+            byzantine=solver.config.byzantine)
+        if solver._engine.byz_values is not None:
+            # the built engine carries the group's resolved attack key
+            # (part of the static key, so it is constant within a group)
+            engine.byz_values = dict(solver._engine.byz_values)
         engine.topology = StreamTopology(stream)
         param = solver._make_param_step(problem, hg_cfg, engine, n)
+        if solver.config.guard.active:
+            param = guard_param_step(param, solver.config.guard)
         state = solver._init_state(key, problem, hg_cfg, x0, y0, data)
         return _traced_scan(param, state, data, num_steps, record_every,
                             metric_fn, alpha, beta)
@@ -243,12 +251,13 @@ def _stream_experiment_fn(solver, data, n, num_steps: int,
 
 def _padded_experiment_fn(solver, n: int, num_steps: int,
                           record_every: int, masked_metric_fn,
-                          data_stack, with_stream: bool = False):
+                          data_stack, with_stream: bool = False,
+                          with_byz: bool = False):
     """Per-experiment pipeline with the *network* as vmap operands.
 
-    ``(key, alpha, beta, x0, y0, matrix, num_active, data_idx[, stream])``
-    -> ``(final_state, trace)``.  The dense consensus engine is
-    constructed inside the trace from the experiment's ghost-padded
+    ``(key, alpha, beta, x0, y0, matrix, num_active, data_idx[, stream]
+    [, byz])`` -> ``(final_state, trace)``.  The dense consensus engine
+    is constructed inside the trace from the experiment's ghost-padded
     mixing matrix, so one compiled program serves every network size /
     topology in the group; ``masked_metric_fn(state, data, num_active)``
     keeps ghost agents out of the recorded metric.
@@ -263,25 +272,39 @@ def _padded_experiment_fn(solver, n: int, num_steps: int,
     topology-stream operand (time-varying topologies batch like the
     mixing matrix does); the state-dependent adaptive process instead
     derives its adjacency from the padded matrix in-trace.
+
+    ``with_byz=True`` adds the Byzantine attack operands ``{"
+    num_byzantine", "scale", "key"}`` — the attack *structure* (kind /
+    combine rule / trim) is in the static key, its *values* batch like
+    seeds do, so an attacker-count x seed grid is one dispatch.  The
+    traced ``num_active`` doubles as the mask bound that keeps attacks
+    off ghost rows.
     """
+    from repro.byzantine import guard_param_step
     from repro.consensus.dense import DenseEngine
     from repro.topology.runtime import StreamTopology
 
     problem, hg_cfg = solver._problem, solver._hg_cfg
 
     def one(key, alpha, beta, x0, y0, matrix, num_active, data_idx,
-            stream=None):
+            stream=None, byz=None):
         data = jax.tree_util.tree_map(lambda l: l[data_idx], data_stack)
         # wire options ride along: per-agent (row-wise) compression keeps
         # ghost-padded combines exact, so compressed configs batch too
         engine = DenseEngine(
             matrix, compression=solver.config.compression,
-            communication_interval=solver.config.communication_interval)
+            communication_interval=solver.config.communication_interval,
+            byzantine=solver.config.byzantine)
+        engine.num_active = num_active
+        if byz is not None:
+            engine.byz_values = dict(byz)
         if stream is not None:
             engine.topology = StreamTopology(stream)
         else:
             _attach_traced_topology(engine, solver.config, matrix)
         param = solver._make_param_step(problem, hg_cfg, engine, n)
+        if solver.config.guard.active:
+            param = guard_param_step(param, solver.config.guard)
         state = solver._init_state(key, problem, hg_cfg, x0, y0, data)
         metric_fn = None
         if masked_metric_fn is not None:
@@ -290,13 +313,32 @@ def _padded_experiment_fn(solver, n: int, num_steps: int,
         return _traced_scan(param, state, data, num_steps, record_every,
                             metric_fn, alpha, beta)
 
-    if not with_stream:
-        def one_plain(key, alpha, beta, x0, y0, matrix, num_active,
-                      data_idx):
+    # vmap needs a fixed positional arity: expose exactly the operands
+    # this group batches (stream and/or byz ride at the end, in order).
+    if with_stream and with_byz:
+        def one_stream_byz(key, alpha, beta, x0, y0, matrix, num_active,
+                           data_idx, stream, byz):
             return one(key, alpha, beta, x0, y0, matrix, num_active,
-                       data_idx)
-        return one_plain
-    return one
+                       data_idx, stream=stream, byz=byz)
+        return one_stream_byz
+    if with_stream:
+        def one_stream(key, alpha, beta, x0, y0, matrix, num_active,
+                       data_idx, stream):
+            return one(key, alpha, beta, x0, y0, matrix, num_active,
+                       data_idx, stream=stream)
+        return one_stream
+    if with_byz:
+        def one_byz(key, alpha, beta, x0, y0, matrix, num_active,
+                    data_idx, byz):
+            return one(key, alpha, beta, x0, y0, matrix, num_active,
+                       data_idx, byz=byz)
+        return one_byz
+
+    def one_plain(key, alpha, beta, x0, y0, matrix, num_active,
+                  data_idx):
+        return one(key, alpha, beta, x0, y0, matrix, num_active,
+                   data_idx)
+    return one_plain
 
 
 def _mixed_m_error(configs, indices, need_m: int, have: str) -> ValueError:
@@ -474,6 +516,7 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
         # stream seed) differ, so the stream batches as a vmap operand
         stream_group = not proc.is_static and not proc.state_dependent
         streams = None
+        byz_ops = None
 
         if pad_agents:
             # pad + stack each *distinct* dataset once; experiments map
@@ -515,6 +558,22 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
                     configs[i].mixing_spec(ms[i]), m_pad))
                 for i in indices])
             num_active = jnp.asarray([ms[i] for i in indices], jnp.int32)
+            if rep.byzantine.attack_active:
+                # attack structure (kind / combine / trim) is static per
+                # group; its values batch exactly like seeds do
+                byz_ops = {
+                    "num_byzantine": jnp.asarray(
+                        [configs[i].byzantine.num_byzantine
+                         for i in indices], jnp.int32),
+                    "scale": jnp.asarray(
+                        [configs[i].byzantine.scale for i in indices],
+                        jnp.float32),
+                    "key": jnp.stack([
+                        jax.random.PRNGKey(
+                            configs[i].byzantine.resolve_seed(
+                                configs[i].seed))
+                        for i in indices]),
+                }
             if stream_group:
                 from repro.topology.process import realize_stream
                 streams = jnp.stack([
@@ -591,17 +650,19 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
         if pad_agents:
             one = _padded_experiment_fn(solver, n, num_steps, record_every,
                                         group_metric, data_stack,
-                                        with_stream=streams is not None)
+                                        with_stream=streams is not None,
+                                        with_byz=byz_ops is not None)
+            axes = [0, 0, 0, x_ax, y_ax, 0, 0, 0]
+            ops = [keys, alphas, betas, gx, gy, mats, num_active,
+                   data_idx]
             if streams is not None:
-                batched = jax.jit(jax.vmap(
-                    one, in_axes=(0, 0, 0, x_ax, y_ax, 0, 0, 0, 0)))
-                operands = (keys, alphas, betas, gx, gy, mats, num_active,
-                            data_idx, streams)
-            else:
-                batched = jax.jit(jax.vmap(
-                    one, in_axes=(0, 0, 0, x_ax, y_ax, 0, 0, 0)))
-                operands = (keys, alphas, betas, gx, gy, mats, num_active,
-                            data_idx)
+                axes.append(0)
+                ops.append(streams)
+            if byz_ops is not None:
+                axes.append(0)
+                ops.append(byz_ops)
+            batched = jax.jit(jax.vmap(one, in_axes=tuple(axes)))
+            operands = tuple(ops)
         elif stream_group:
             one = _stream_experiment_fn(solver, g_data, n, num_steps,
                                         record_every, group_metric)
@@ -650,6 +711,9 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
                     base += (mats[r], num_active[r], data_idx[r])
                 if streams is not None:
                     base += (streams[r],)
+                if pad_agents and byz_ops is not None:
+                    base += (jax.tree_util.tree_map(lambda l: l[r],
+                                                    byz_ops),)
                 return base
 
             warm = single(*row_operands(0))
