@@ -37,6 +37,19 @@ def _per_call_evals(s) -> tuple[int, int, int]:
     return st.hvp_count, st.grad_count, st.hess_count
 
 
+def _guard_cols(state) -> str:
+    """Trailing divergence-guard columns (``SolveResult.tripped_steps``
+    / ``last_good_step`` equivalents, read off the final carry): how
+    often the Byzantine guard rolled the iterates back, and the last
+    step it certified.  ``chaos_run`` reports the same counters when a
+    trip is recovered as a resumable fault (docs/RESILIENCE.md)."""
+    guard = getattr(state, "guard", None)
+    if guard is None:
+        return "tripped_steps=0;last_good_step=-1"
+    return (f"tripped_steps={int(guard['tripped'])};"
+            f"last_good_step={int(guard['last_good'])}")
+
+
 def _bytes_per_round(solver, state) -> float:
     """Wire bytes one agent ships per Definition-2 round: the engine's
     ``bytes_on_wire`` of the per-agent x payload (the same accounting
@@ -65,7 +78,7 @@ def run(smoke: bool = False) -> list:
             rows.append(Row(f"table1_{algo}", 0.0,
                             f"eps={EPS};comm_rounds=>{cap};"
                             f"bytes_per_round={wire:.0f};samples=NA;"
-                            f"{byz_col}"))
+                            f"{byz_col};{_guard_cols(state)}"))
             continue
         hvp, grad, hess = _per_call_evals(s)
         calls = solver.hypergrad_calls_per_step(s.n)
@@ -98,7 +111,7 @@ def run(smoke: bool = False) -> list:
                         f"hvp_evals={hvp_evals:.0f};"
                         f"grad_evals={grad_evals:.0f};"
                         f"samples_per_agent={samples:.0f};"
-                        f"{byz_col}"))
+                        f"{byz_col};{_guard_cols(state)}"))
     return rows
 
 

@@ -1,0 +1,241 @@
+"""Resilience bench: bitwise resume, checkpoint overhead, chaos recovery.
+
+Three claims, asserted by ``benchmarks.check_gates`` (docs/RESILIENCE.md):
+
+* **Resume is bitwise** (``resume_bitwise``): for every registry
+  algorithm on the dense backend — plus a sign1bit+EF compressed config,
+  whose ``{e, ref}`` wire state rides in the scan carry — a run killed
+  at an arbitrary step and resumed from its snapshot reproduces the
+  uninterrupted ``run_traced`` metric trace bit for bit.  Recovery
+  wall-time (rebuild + restore + replay to the end) is reported per
+  algorithm.
+
+* **Checkpointing is cheap** (``checkpoint_overhead_pct``): the chunked
+  resumable runner at ``checkpoint_every=50`` — snapshot writes included
+  — stays within ``OVERHEAD_GATE_PCT`` (10%) of the single-scan
+  ``run_traced`` wall-clock.  Both paths are warmed first, so the
+  comparison is steady-state stepping, not compilation.
+
+* **Chaos completes at matched stationarity** (``chaos_completed`` /
+  ``chaos_matched_stationarity``): a seeded fault plan with three
+  process kills, a NaN wire payload, a corrupt + a deleted checkpoint,
+  and transient write failures finishes the Section-6 instance with
+  zero manual intervention, and its final eq.-11 metric matches the
+  fault-free run (bitwise resume makes the tolerance exact).  The
+  wasted-steps column quantifies the replay cost of each
+  ``checkpoint_every`` choice.
+
+Dumped to ``BENCH_resilience.json``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ALGORITHMS, Row, make_setup, metric_fn_of
+from repro.consensus import CompressionConfig
+from repro.resilience import (FaultPlan, chaos_run, make_fault, resume_run,
+                              run_resumable)
+from repro.resilience.runner import SimulatedKill
+from repro.solvers import SolverConfig, make_solver
+
+ITERS = 40
+REC = 10
+KILL_AT = 23            # mid-chunk, not boundary-aligned: the hard case
+CKPT_EVERY = 7          # co-prime with REC so boundaries never align
+OVERHEAD_ITERS = 200
+OVERHEAD_CKPT = 50      # the gate's stated cadence
+OVERHEAD_GATE_PCT = 10.0
+CHAOS_SEED = 1
+
+
+def _json_path() -> str:
+    return os.path.join(os.environ.get("BENCH_JSON_DIR", os.getcwd()),
+                        "BENCH_resilience.json")
+
+
+def _fresh(cfg, s):
+    solver = make_solver(cfg)
+    state = solver.init(None, s.prob, s.hg, s.x0, s.y0, s.data)
+    return solver, state
+
+
+def _kill_resume_case(name, cfg, s, iters, rec, rows, cases):
+    """One kill/resume parity measurement -> (bitwise, recovery_s)."""
+    metric = metric_fn_of(s)
+    solver, state = _fresh(cfg, s)
+    _, ref = solver.run_traced(state, s.data, iters, rec, metric)
+    ref = np.asarray(jax.device_get(ref))
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        plan = FaultPlan([make_fault("kill", step=KILL_AT)], seed=0)
+        solver2, state2 = _fresh(cfg, s)
+        try:
+            run_resumable(solver2, state2, s.data, iters, rec, metric,
+                          checkpoint_every=CKPT_EVERY, ckpt_dir=ckpt,
+                          hooks=plan)
+            raise RuntimeError("kill fault never fired")
+        except SimulatedKill:
+            pass
+        t0 = time.perf_counter()
+        _, _, trace = resume_run(cfg, ckpt, iters, rec, metric,
+                                 checkpoint_every=CKPT_EVERY,
+                                 problem=s.prob, x0=s.x0, y0=s.y0,
+                                 data=s.data)
+        recovery = time.perf_counter() - t0
+    bitwise = np.asarray(trace).tobytes() == ref.tobytes()
+    rows.append(Row(
+        f"resilience_resume_{name}", 1e6 * recovery / iters,
+        f"bitwise={bitwise};killed_at={KILL_AT};"
+        f"checkpoint_every={CKPT_EVERY};recovery_s={recovery:.3f}"))
+    cases.append({"name": name, "bitwise": bool(bitwise),
+                  "killed_at": KILL_AT, "recovery_s": recovery})
+    return bool(bitwise)
+
+
+def run(smoke: bool = False) -> list:
+    import json
+
+    iters = 24 if smoke else ITERS
+    rec = 6 if smoke else REC
+    ov_iters = 100 if smoke else OVERHEAD_ITERS
+
+    s = make_setup(m=5)
+    rows: list = []
+    cases: list = []
+    dump: dict = {"bench": "resilience", "jax": jax.__version__,
+                  "iters": iters, "record_every": rec,
+                  "checkpoint_every": CKPT_EVERY,
+                  "overhead_gate_pct": OVERHEAD_GATE_PCT,
+                  "overhead_checkpoint_every": OVERHEAD_CKPT}
+
+    # -- kill/resume bitwise parity, per algorithm + compressed+EF -------
+    bitwise_all = True
+    for algo in ALGORITHMS:
+        cfg = SolverConfig(algo=algo, alpha=0.3, beta=0.3, mixing=s.spec,
+                           hypergrad=s.hg)
+        bitwise_all &= _kill_resume_case(algo, cfg, s, iters, rec, rows,
+                                         cases)
+    ef_cfg = SolverConfig(
+        algo="interact", alpha=0.3, beta=0.3, mixing=s.spec,
+        hypergrad=s.hg,
+        compression=CompressionConfig(kind="sign1bit",
+                                      error_feedback=True))
+    bitwise_all &= _kill_resume_case("interact_sign1bit_ef", ef_cfg, s,
+                                     iters, rec, rows, cases)
+    dump["resume_cases"] = cases
+    dump["resume_bitwise"] = bool(bitwise_all)
+
+    # -- checkpoint overhead at checkpoint_every=50 ----------------------
+    metric = metric_fn_of(s)
+    base_cfg = SolverConfig(algo="interact", alpha=0.3, beta=0.3,
+                            mixing=s.spec, hypergrad=s.hg)
+
+    def time_plain():
+        solver, state = _fresh(base_cfg, s)
+        solver.warmup(state, s.data)     # engine caches warm
+        t0 = time.perf_counter()
+        _, tr = solver.run_traced(state, s.data, ov_iters, rec, metric)
+        jax.block_until_ready(tr)
+        return time.perf_counter() - t0
+
+    def time_ckpt(ckpt):
+        solver, state = _fresh(base_cfg, s)
+        solver.warmup(state, s.data)
+        t0 = time.perf_counter()
+        run_resumable(solver, state, s.data, ov_iters, rec, metric,
+                      checkpoint_every=OVERHEAD_CKPT, ckpt_dir=ckpt)
+        return time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        time_plain(), time_ckpt(ckpt)          # compile both programs
+        t_plain = time_plain()
+        t_ckpt = time_ckpt(os.path.join(ckpt, "timed"))
+    overhead = 100.0 * (t_ckpt - t_plain) / max(t_plain, 1e-9)
+    overhead = max(overhead, 0.0)   # scheduler noise can go "negative"
+    dump["checkpoint_overhead_pct"] = overhead
+    dump["plain_s"] = t_plain
+    dump["checkpointed_s"] = t_ckpt
+    rows.append(Row(
+        "resilience_overhead", 1e6 * t_ckpt / ov_iters,
+        f"overhead_pct={overhead:.2f};checkpoint_every={OVERHEAD_CKPT};"
+        f"iters={ov_iters};plain_s={t_plain:.3f}"))
+
+    # -- chaos campaign on the Section-6 instance ------------------------
+    solver, state = _fresh(base_cfg, s)
+    _, clean = solver.run_traced(state, s.data, iters, rec, metric)
+    clean_final = float(np.asarray(clean)[-1])
+
+    kill_steps = (iters // 4, iters // 2, 3 * iters // 4)
+    with tempfile.TemporaryDirectory() as ckpt:
+        plan = FaultPlan([
+            make_fault("kill", step=kill_steps[0]),
+            make_fault("kill", step=kill_steps[1]),
+            make_fault("kill", step=kill_steps[2]),
+            make_fault("nan-payload", step=iters // 3),
+            make_fault("corrupt-checkpoint", step=iters // 2,
+                       mode="garbage"),
+            make_fault("stale-checkpoint", step=2 * iters // 3),
+            make_fault("write-failure", step=iters // 4, count=2),
+        ], seed=CHAOS_SEED)
+        rep = chaos_run(base_cfg, plan, iters, rec,
+                        checkpoint_every=CKPT_EVERY, ckpt_dir=ckpt,
+                        metric_fn=metric, problem=s.prob, x0=s.x0,
+                        y0=s.y0, data=s.data)
+    matched = (rep.final_metric is not None
+               and np.isclose(rep.final_metric, clean_final,
+                              rtol=1e-6, atol=1e-9))
+    chaos_bitwise = (rep.trace is not None and
+                     rep.trace.tobytes()
+                     == np.asarray(jax.device_get(clean)).tobytes())
+    dump["chaos"] = {
+        "completed": rep.completed, "restarts": rep.restarts,
+        "kills": rep.kills, "nonfinite_faults": rep.nonfinite_faults,
+        "write_retries": rep.write_retries,
+        "wasted_steps": rep.wasted_steps, "wall_time_s": rep.wall_time_s,
+        "final_metric": rep.final_metric, "clean_final": clean_final,
+        "trace_bitwise": bool(chaos_bitwise),
+        "events": rep.events,
+    }
+    dump["chaos_completed"] = bool(rep.completed)
+    dump["chaos_matched_stationarity"] = bool(matched)
+    rows.append(Row(
+        "resilience_chaos", 1e6 * rep.wall_time_s / iters,
+        f"completed={rep.completed};restarts={rep.restarts};"
+        f"kills={rep.kills};wasted_steps={rep.wasted_steps};"
+        f"final={rep.final_metric};matched={bool(matched)}"))
+
+    # -- wasted steps vs checkpoint_every (replay-cost trade-off) --------
+    wasted_rows = []
+    for ce in (5, 10, 20):
+        kill = int(iters * 0.6) + 1
+        wasted = kill - (kill // ce) * ce   # lost work for a kill there
+        wasted_rows.append({"checkpoint_every": ce, "kill_at": kill,
+                            "wasted_steps": wasted})
+        rows.append(Row(
+            f"resilience_wasted_ce{ce}", 0.0,
+            f"checkpoint_every={ce};kill_at={kill};"
+            f"wasted_steps={wasted}"))
+    dump["wasted_by_checkpoint_every"] = wasted_rows
+
+    try:
+        with open(_json_path(), "w") as fh:
+            json.dump(dump, fh, indent=1)
+    except OSError:
+        pass  # read-only workdir: CSV rows still carry everything
+    rows.append(Row(
+        "resilience_headline", 0.0,
+        f"resume_bitwise={bitwise_all};"
+        f"checkpoint_overhead_pct={overhead:.2f};"
+        f"chaos_completed={rep.completed};"
+        f"chaos_matched_stationarity={bool(matched)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

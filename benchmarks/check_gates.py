@@ -276,6 +276,61 @@ def check_byzantine(dump: dict, path: str) -> list[str]:
     return out
 
 
+def check_resilience(dump: dict, path: str) -> list[str]:
+    """BENCH_resilience.json: fault-tolerance gates (docs/RESILIENCE.md).
+
+    * ``resume_bitwise`` — every kill/resume case (all four registry
+      algorithms on the dense backend, plus sign1bit+EF) reproduced the
+      uninterrupted metric trace bit for bit, and every per-case row
+      says so individually.
+    * ``checkpoint_overhead_pct <= overhead_gate_pct`` — the chunked
+      resumable runner at ``checkpoint_every=50`` (snapshot writes
+      included) costs at most 10% over the single-scan ``run_traced``.
+    * ``chaos_completed`` + ``chaos_matched_stationarity`` — the seeded
+      chaos campaign (>= 3 kills plus corrupt/stale checkpoint
+      injections) finished the Section-6 instance with zero manual
+      intervention and its final eq.-11 metric matches the fault-free
+      run.
+    """
+    out = []
+    if _need(dump, "resume_bitwise", path) is not True:
+        raise GateFailure(f"{path}: resume_bitwise is not True")
+    cases = _need(dump, "resume_cases", path)
+    if len(cases) < 5:
+        raise GateFailure(
+            f"{path}: only {len(cases)} resume cases (need the four "
+            f"registry algorithms plus a compressed+EF config)")
+    for case in cases:
+        if case.get("bitwise") is not True:
+            raise GateFailure(
+                f"{path}: resume case {case.get('name', '?')!r} is not "
+                f"bitwise")
+    out.append(f"resume_bitwise=True over {len(cases)} cases")
+    overhead = _need(dump, "checkpoint_overhead_pct", path)
+    gate = _need(dump, "overhead_gate_pct", path)
+    if not overhead <= gate:
+        raise GateFailure(
+            f"{path}: checkpoint_overhead_pct={overhead:.2f} > {gate}")
+    out.append(f"checkpoint_overhead={overhead:.1f}%<={gate:.0f}%")
+    if _need(dump, "chaos_completed", path) is not True:
+        raise GateFailure(f"{path}: chaos campaign did not complete")
+    if _need(dump, "chaos_matched_stationarity", path) is not True:
+        chaos = dump.get("chaos", {})
+        raise GateFailure(
+            f"{path}: chaos final metric {chaos.get('final_metric')} "
+            f"does not match the fault-free final "
+            f"{chaos.get('clean_final')}")
+    chaos = _need(dump, "chaos", path)
+    if not chaos.get("kills", 0) >= 3:
+        raise GateFailure(
+            f"{path}: chaos campaign survived only "
+            f"{chaos.get('kills')} kills (need >= 3 kill/resume cycles)")
+    out.append(
+        f"chaos completed: {chaos.get('kills')} kills, "
+        f"{chaos.get('restarts')} restarts, matched stationarity")
+    return out
+
+
 # Known dumps: file name -> validator.  Every generator in benchmarks/
 # that dumps a BENCH_*.json should register its gate here so the CI
 # bench-smoke job (and anyone running the module locally) checks it.
@@ -285,6 +340,7 @@ GATES = {
     "BENCH_compression.json": check_compression,
     "BENCH_topology.json": check_topology,
     "BENCH_byzantine.json": check_byzantine,
+    "BENCH_resilience.json": check_resilience,
 }
 
 

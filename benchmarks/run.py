@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   byzantine  Byzantine resilience: stationarity vs attacker count per
          combine rule, guard time-to-detection
          (+ BENCH_byzantine.json dump, see benchmarks.check_gates)
+  resilience  fault tolerance: kill/resume bitwise parity, checkpoint
+         overhead, chaos-campaign recovery
+         (+ BENCH_resilience.json dump, see benchmarks.check_gates)
   roofline dry-run derived roofline terms (if dry-run artifacts exist)
 
 The figure suites (fig2/fig4/fig5) run their seed x config grids through
@@ -43,15 +46,15 @@ import traceback
 
 SUITE_NAMES = ("fig2", "fig4", "fig5", "table1", "compression",
                "hypergrad", "kernels", "topology", "byzantine",
-               "roofline")
+               "resilience", "roofline")
 
 
 def _suite_fn(name: str):
     from benchmarks import (bench_byzantine, bench_complexity,
                             bench_compression, bench_connectivity,
                             bench_convergence, bench_hypergrad,
-                            bench_kernels, bench_lr, bench_topology,
-                            roofline_report)
+                            bench_kernels, bench_lr, bench_resilience,
+                            bench_topology, roofline_report)
     return {
         "fig2": bench_convergence.run,
         "fig4": bench_connectivity.run,
@@ -62,6 +65,7 @@ def _suite_fn(name: str):
         "kernels": bench_kernels.run,
         "topology": bench_topology.run,
         "byzantine": bench_byzantine.run,
+        "resilience": bench_resilience.run,
         "roofline": roofline_report.run,
     }[name]
 

@@ -5,18 +5,43 @@ their treedef encoded as a JSON key-path manifest, so restore round-trips
 exactly — including NamedTuples and nested dicts/lists — onto the same or
 a different mesh (arrays come back as host numpy; re-shard with
 ``jax.device_put``).
+
+Crash safety (docs/RESILIENCE.md): every save writes to a temp file in
+the target directory and lands via atomic ``os.replace`` — a process
+killed mid-write leaves the previous checkpoint intact, never a
+truncated ``.npz``.  The manifest (version 2) records a per-leaf CRC32
+and dtype next to the key paths, so restore detects bit-rot and silent
+dtype reinterpretation instead of feeding garbage downstream; version-1
+checkpoints (bare path list) still restore, minus those checks.
+``latest_step`` / ``restore_step`` skip unreadable or CRC-failing files
+and fall back to the newest *valid* checkpoint, which is what makes a
+directory that survived a crash (or a chaos fault plan) resumable
+without manual cleanup.
 """
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import tempfile
+import warnings
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save_pytree", "restore_pytree", "latest_step", "save_step",
-           "restore_step"]
+__all__ = ["CorruptCheckpointError", "latest_step", "restore_latest",
+           "restore_pytree", "restore_step", "save_pytree", "save_step",
+           "valid_steps", "verify_checkpoint"]
+
+MANIFEST_VERSION = 2
+
+
+class CorruptCheckpointError(ValueError):
+    """A checkpoint file failed integrity validation (truncated archive,
+    unparseable manifest, CRC mismatch, or a leaf count/dtype that
+    contradicts its own manifest)."""
 
 
 def _flatten_with_paths(tree):
@@ -27,45 +52,217 @@ def _flatten_with_paths(tree):
 
 
 def save_pytree(path: str | pathlib.Path, tree: Any) -> None:
+    """Atomically write ``tree`` to ``path`` (temp file + ``os.replace``).
+
+    The version-2 manifest records, per leaf: its key path, its dtype
+    (restore refuses silent reinterpretation against the template), and
+    the CRC32 of its bytes (restore refuses bit-rot).
+    """
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     paths, leaves = _flatten_with_paths(tree)
     arrays = {f"leaf_{i}": np.asarray(jax.device_get(l))
               for i, l in enumerate(leaves)}
-    manifest = json.dumps(paths)
-    np.savez(path, __manifest__=np.frombuffer(
-        manifest.encode(), dtype=np.uint8), **arrays)
+    manifest = json.dumps({
+        "version": MANIFEST_VERSION,
+        "paths": paths,
+        "dtypes": [str(arrays[f"leaf_{i}"].dtype)
+                   for i in range(len(leaves))],
+        "crcs": [zlib.crc32(np.ascontiguousarray(
+            arrays[f"leaf_{i}"]).tobytes()) for i in range(len(leaves))],
+    })
+    # temp file in the TARGET directory: os.replace is atomic only
+    # within one filesystem, and a kill mid-write must never leave a
+    # half-written file under the final name.
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez(fh, __manifest__=np.frombuffer(
+                manifest.encode(), dtype=np.uint8), **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _load_manifest(data) -> dict:
+    """Parse either manifest version into the v2 dict shape."""
+    try:
+        manifest = json.loads(bytes(data["__manifest__"]).decode())
+    except Exception as exc:
+        raise CorruptCheckpointError(
+            f"unparseable checkpoint manifest: {exc}") from exc
+    if isinstance(manifest, list):        # version 1: bare path list
+        return {"version": 1, "paths": manifest, "dtypes": None,
+                "crcs": None}
+    return manifest
+
+
+def _load_leaves(data, manifest: dict, path) -> list[np.ndarray]:
+    """The leaf arrays, CRC- and dtype-validated against the manifest."""
+    paths = manifest["paths"]
+    try:
+        leaves = [data[f"leaf_{i}"] for i in range(len(paths))]
+    except Exception as exc:
+        raise CorruptCheckpointError(
+            f"{path}: leaf array missing or unreadable ({exc})") from exc
+    if manifest.get("crcs") is not None:
+        for i, (leaf, want) in enumerate(zip(leaves, manifest["crcs"])):
+            got = zlib.crc32(np.ascontiguousarray(leaf).tobytes())
+            if got != want:
+                raise CorruptCheckpointError(
+                    f"{path}: CRC mismatch on leaf {i} "
+                    f"({manifest['paths'][i]}): stored {want}, "
+                    f"recomputed {got}")
+    if manifest.get("dtypes") is not None:
+        for i, (leaf, want) in enumerate(zip(leaves, manifest["dtypes"])):
+            if str(leaf.dtype) != want:
+                raise CorruptCheckpointError(
+                    f"{path}: leaf {i} ({manifest['paths'][i]}) decoded "
+                    f"as {leaf.dtype} but the manifest records {want}")
+    return leaves
 
 
 def restore_pytree(path: str | pathlib.Path, like: Any) -> Any:
     """Restore into the structure of ``like`` (shape/dtype template)."""
-    data = np.load(pathlib.Path(path), allow_pickle=False)
-    manifest = json.loads(bytes(data["__manifest__"]).decode())
-    paths_like, leaves_like = _flatten_with_paths(like)
-    if paths_like != manifest:
-        raise ValueError(
-            "checkpoint structure mismatch:\n"
-            f"  saved:    {manifest[:5]}...\n  expected: {paths_like[:5]}...")
-    leaves = [data[f"leaf_{i}"] for i in range(len(manifest))]
-    for got, want in zip(leaves, leaves_like):
+    path = pathlib.Path(path)
+    try:
+        data = np.load(path, allow_pickle=False)
+    except OSError:
+        raise
+    except Exception as exc:   # truncated zip, bad magic, ...
+        raise CorruptCheckpointError(
+            f"{path}: unreadable archive ({exc})") from exc
+    with data:
+        manifest = _load_manifest(data)
+        paths_like, leaves_like = _flatten_with_paths(like)
+        if paths_like != manifest["paths"]:
+            raise ValueError(
+                "checkpoint structure mismatch:\n"
+                f"  saved:    {manifest['paths'][:5]}...\n"
+                f"  expected: {paths_like[:5]}...")
+        leaves = _load_leaves(data, manifest, path)
+    for i, (got, want) in enumerate(zip(leaves, leaves_like)):
         if tuple(got.shape) != tuple(np.shape(want)):
-            raise ValueError(f"shape mismatch {got.shape} vs {np.shape(want)}")
+            raise ValueError(f"shape mismatch {got.shape} vs "
+                             f"{np.shape(want)}")
+        want_dtype = np.asarray(want).dtype
+        if got.dtype != want_dtype:
+            raise ValueError(
+                f"dtype mismatch on leaf {i} ({manifest['paths'][i]}): "
+                f"checkpoint holds {got.dtype}, template expects "
+                f"{want_dtype} — refusing silent reinterpretation")
     treedef = jax.tree_util.tree_structure(like)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def verify_checkpoint(path: str | pathlib.Path) -> bool:
+    """Can this file be restored? (readable archive, parseable manifest,
+    all leaves present with matching CRCs/dtypes — structure NOT checked,
+    that needs a template)."""
+    try:
+        data = np.load(pathlib.Path(path), allow_pickle=False)
+    except Exception:
+        return False
+    try:
+        with data:
+            manifest = _load_manifest(data)
+            _load_leaves(data, manifest, path)
+        return True
+    except Exception:
+        return False
+
+
 def save_step(ckpt_dir: str | pathlib.Path, step: int, tree: Any) -> None:
-    save_pytree(pathlib.Path(ckpt_dir) / f"step_{step:08d}.npz", tree)
+    save_pytree(_step_path(ckpt_dir, step), tree)
 
 
-def latest_step(ckpt_dir: str | pathlib.Path) -> int | None:
+def _step_path(ckpt_dir, step: int) -> pathlib.Path:
+    return pathlib.Path(ckpt_dir) / f"step_{step:08d}.npz"
+
+
+def _all_steps(ckpt_dir) -> list[int]:
     d = pathlib.Path(ckpt_dir)
     if not d.exists():
-        return None
-    steps = sorted(int(p.stem.split("_")[1]) for p in d.glob("step_*.npz"))
-    return steps[-1] if steps else None
+        return []
+    steps = []
+    for p in d.glob("step_*.npz"):
+        try:
+            steps.append(int(p.stem.split("_")[1]))
+        except (IndexError, ValueError):
+            continue   # stray file matching the glob, not a checkpoint
+    return sorted(steps)
 
 
-def restore_step(ckpt_dir: str | pathlib.Path, step: int, like: Any) -> Any:
-    return restore_pytree(
-        pathlib.Path(ckpt_dir) / f"step_{step:08d}.npz", like)
+def valid_steps(ckpt_dir: str | pathlib.Path) -> list[int]:
+    """Ascending steps whose checkpoint files pass integrity validation."""
+    return [s for s in _all_steps(ckpt_dir)
+            if verify_checkpoint(_step_path(ckpt_dir, s))]
+
+
+def latest_step(ckpt_dir: str | pathlib.Path,
+                validate: bool = True) -> int | None:
+    """The newest restorable step (``None`` when the directory is empty).
+
+    ``validate=True`` (default) skips unreadable / CRC-failing files and
+    returns the newest checkpoint that actually verifies — a crash that
+    corrupted the most recent file falls back to the one before it
+    instead of poisoning the resume.  ``validate=False`` is the legacy
+    name-ordering answer (no file reads).
+    """
+    steps = _all_steps(ckpt_dir)
+    if not validate:
+        return steps[-1] if steps else None
+    for s in reversed(steps):
+        if verify_checkpoint(_step_path(ckpt_dir, s)):
+            return s
+    return None
+
+
+def restore_step(ckpt_dir: str | pathlib.Path, step: int, like: Any,
+                 fallback: bool = False) -> Any:
+    """Restore the checkpoint at ``step``.
+
+    ``fallback=True``: when that file is corrupt or missing, warn and
+    restore the newest *older* step that validates instead of raising —
+    the behaviour a crash-resumed run wants (``restore_latest`` also
+    reports which step was used).
+    """
+    if not fallback:
+        return restore_pytree(_step_path(ckpt_dir, step), like)
+    out = restore_latest(ckpt_dir, like, max_step=step)
+    if out is None:
+        raise FileNotFoundError(
+            f"no restorable checkpoint at or before step {step} "
+            f"in {ckpt_dir}")
+    tree, used = out
+    if used != step:
+        warnings.warn(
+            f"checkpoint step {step} in {ckpt_dir} is corrupt or "
+            f"missing; fell back to step {used}", stacklevel=2)
+    return tree
+
+
+def restore_latest(ckpt_dir: str | pathlib.Path, like: Any,
+                   max_step: int | None = None
+                   ) -> tuple[Any, int] | None:
+    """``(tree, step)`` of the newest checkpoint ≤ ``max_step`` that
+    restores cleanly, skipping corrupt files; ``None`` if none does.
+
+    Structure/shape mismatches (a *valid* checkpoint for a different
+    template) still raise — falling back past those would silently
+    resume from the wrong run.
+    """
+    steps = _all_steps(ckpt_dir)
+    if max_step is not None:
+        steps = [s for s in steps if s <= max_step]
+    for s in reversed(steps):
+        try:
+            return restore_pytree(_step_path(ckpt_dir, s), like), s
+        except (CorruptCheckpointError, OSError):
+            continue
+    return None

@@ -90,11 +90,15 @@ def main() -> None:
 
     start = 0
     if args.ckpt_dir:
+        # latest_step validates (skips corrupt/truncated files); the
+        # fallback covers a file rotting between the two calls — a
+        # crashed run resumes from the newest checkpoint that actually
+        # restores (docs/RESILIENCE.md).
         last = latest_step(args.ckpt_dir)
         if last is not None:
             print(f"restoring step {last} from {args.ckpt_dir}")
             state = jax.device_put(
-                restore_step(args.ckpt_dir, last, state),
+                restore_step(args.ckpt_dir, last, state, fallback=True),
                 tree_shardings(mesh, specs))
             start = last
 

@@ -1,0 +1,43 @@
+"""Fault-tolerant resumable runtime (docs/RESILIENCE.md).
+
+Three layers, built on the crash-safe ``repro.checkpoint`` store:
+
+* ``snapshot`` / ``resume`` — bitwise capture of the complete scan
+  carry for every registry solver, with a config fingerprint so a
+  snapshot can only continue the experiment it came from.
+* ``run_resumable`` / ``resume_run`` — the checkpoint-chunked runner
+  behind ``SolverBase.run(..., checkpoint_every=...)``: killed at any
+  step, resumed, the metric trace is bitwise-equal to the
+  uninterrupted scan.
+* ``FaultPlan`` / ``chaos_run`` — seeded fault injection (process
+  kills, NaN wire payloads, corrupt/stale checkpoints, transient write
+  failures) and the recovery loop that survives all of it with zero
+  manual intervention.
+"""
+from repro.resilience.chaos import ChaosReport, chaos_run
+from repro.resilience.faults import (Fault, FaultPlan, available_faults,
+                                     make_fault, register_fault)
+from repro.resilience.runner import (GuardTripFault, NonFiniteStateError,
+                                     SimulatedKill, resume_run,
+                                     run_resumable)
+from repro.resilience.snapshot import (Resumed, config_fingerprint, resume,
+                                       snapshot)
+
+__all__ = [
+    "ChaosReport",
+    "Fault",
+    "FaultPlan",
+    "GuardTripFault",
+    "NonFiniteStateError",
+    "Resumed",
+    "SimulatedKill",
+    "available_faults",
+    "chaos_run",
+    "config_fingerprint",
+    "make_fault",
+    "register_fault",
+    "resume",
+    "resume_run",
+    "run_resumable",
+    "snapshot",
+]

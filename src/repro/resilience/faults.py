@@ -1,0 +1,239 @@
+"""Seeded fault registry for the chaos harness (docs/RESILIENCE.md).
+
+Faults are small objects registered under a string kind via
+``@register_fault`` and instantiated through ``make_fault(kind, ...)``;
+a ``FaultPlan`` bundles several of them plus a seed and acts as the
+hooks object the resumable runner calls at chunk boundaries:
+
+* ``on_chunk_end(start, end, state, total)`` — may mutate the carry
+  (NaN/Inf payload injection) or raise ``SimulatedKill`` (process kill).
+* ``on_write_attempt(step, attempt)`` — may raise ``OSError`` (transient
+  write failure; absorbed by the snapshot retry + exponential backoff).
+* ``on_saved(step, ckpt_dir)`` — may damage what just landed on disk
+  (truncate / garbage-overwrite / delete the newest checkpoint).
+
+Each fault fires once per plan lifetime (``fired``), so a killed-and-
+resumed run replays the lost chunk clean — which is exactly the recovery
+the harness is probing.  Plans re-arm via ``plan.reset()`` for reuse
+across runs, and every firing is appended to ``plan.events`` for the
+chaos report.  Randomness (garbage bytes) comes from a per-plan
+``np.random.default_rng(seed)``: same plan, same damage.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.resilience.runner import SimulatedKill
+from repro.resilience.snapshot import snapshot_meta_path
+
+__all__ = ["Fault", "FaultPlan", "available_faults", "make_fault",
+           "register_fault"]
+
+_FAULTS: dict[str, type] = {}
+
+
+def register_fault(kind: str) -> Callable[[type], type]:
+    """Class decorator: register a Fault implementation under ``kind``."""
+
+    def deco(cls: type) -> type:
+        existing = _FAULTS.get(kind)
+        if existing is not None and existing is not cls:
+            raise ValueError(f"fault {kind!r} already registered "
+                             f"({existing.__name__})")
+        _FAULTS[kind] = cls
+        cls.kind = kind
+        return cls
+
+    return deco
+
+
+def available_faults() -> tuple[str, ...]:
+    return tuple(sorted(_FAULTS))
+
+
+def make_fault(kind: str, **kwargs) -> "Fault":
+    try:
+        cls = _FAULTS[kind]
+    except KeyError:
+        raise ValueError(f"unknown fault {kind!r}; choose from "
+                         f"{available_faults()}") from None
+    return cls(**kwargs)
+
+
+class Fault:
+    """Base fault: schedule (``step``), one-shot arming, no-op hooks."""
+
+    kind: str | None = None
+
+    def __init__(self, step: int = 0):
+        self.step = int(step)
+        self.fired = False
+
+    def reset(self) -> None:
+        self.fired = False
+
+    # hook surface (plan passes itself for logging / rng access)
+    def on_chunk_end(self, plan, start, end, state, total):
+        return None
+
+    def on_write_attempt(self, plan, step, attempt):
+        return None
+
+    def on_saved(self, plan, step, ckpt_dir):
+        return None
+
+
+class FaultPlan:
+    """An ordered bundle of faults + a seed: the runner's hooks object."""
+
+    def __init__(self, faults=(), seed: int = 0):
+        self.faults = list(faults)
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+        self.events: list[dict[str, Any]] = []
+
+    def reset(self) -> None:
+        """Re-arm every fault and clear the event log (rng re-seeded)."""
+        self.rng = np.random.default_rng(self.seed)
+        self.events.clear()
+        for f in self.faults:
+            f.reset()
+
+    def log(self, kind: str, **info) -> None:
+        self.events.append({"kind": kind, **info})
+
+    def count(self, kind: str) -> int:
+        return sum(1 for e in self.events if e["kind"] == kind)
+
+    # -- runner hooks ----------------------------------------------------
+    def on_chunk_end(self, start, end, state, total):
+        for f in self.faults:
+            mutated = f.on_chunk_end(self, start, end, state, total)
+            if mutated is not None:
+                state = mutated
+        return state
+
+    def on_write_attempt(self, step, attempt):
+        for f in self.faults:
+            f.on_write_attempt(self, step, attempt)
+
+    def on_saved(self, step, ckpt_dir):
+        for f in self.faults:
+            f.on_saved(self, step, ckpt_dir)
+
+
+@register_fault("kill")
+class KillFault(Fault):
+    """SIGKILL the process once step ``step`` has been reached — raised
+    at the first chunk boundary past it, *before* that boundary's
+    snapshot lands, so the whole chunk is lost."""
+
+    def on_chunk_end(self, plan, start, end, state, total):
+        if not self.fired and self.step <= end:
+            self.fired = True
+            plan.log("kill", at=end, scheduled=self.step)
+            raise SimulatedKill(end)
+        return None
+
+
+@register_fault("nan-payload")
+class NanPayloadFault(Fault):
+    """Poison the outer iterate with NaN/Inf once ``step`` is reached —
+    what a corrupted wire payload that slipped past the guards does.
+    Detected by the runner's finiteness check before the snapshot, so
+    the checkpoint directory stays clean and the chunk is replayed."""
+
+    def __init__(self, step: int = 0, value: float = float("nan"),
+                 field: str = "x", count: int = 3):
+        super().__init__(step)
+        self.value = float(value)
+        self.field = field
+        self.count = int(count)
+
+    def on_chunk_end(self, plan, start, end, state, total):
+        if self.fired or self.step > end:
+            return None
+        self.fired = True
+        tree = getattr(state, self.field)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        poisoned = np.array(jax.device_get(leaves[0]))
+        poisoned.flat[:min(self.count, poisoned.size)] = self.value
+        leaves = [poisoned] + leaves[1:]
+        plan.log("nan-payload", at=end, field=self.field,
+                 value=self.value)
+        return state._replace(
+            **{self.field: jax.tree_util.tree_unflatten(treedef, leaves)})
+
+
+@register_fault("corrupt-checkpoint")
+class CorruptCheckpointFault(Fault):
+    """Damage the checkpoint that just landed: ``mode='truncate'`` keeps
+    the first third of the file (a mid-write kill with no atomic
+    replace); ``mode='garbage'`` flips 64 bytes in the middle (bit-rot —
+    caught by the per-leaf CRC32).  Resume must fall back to the
+    previous snapshot."""
+
+    def __init__(self, step: int = 0, mode: str = "garbage"):
+        super().__init__(step)
+        if mode not in ("garbage", "truncate"):
+            raise ValueError(f"unknown corruption mode {mode!r}")
+        self.mode = mode
+
+    def on_saved(self, plan, step, ckpt_dir):
+        if self.fired or step < self.step:
+            return
+        self.fired = True
+        from repro.checkpoint.checkpoint import _step_path
+        path = _step_path(ckpt_dir, step)
+        size = path.stat().st_size
+        if self.mode == "truncate":
+            with open(path, "r+b") as fh:
+                fh.truncate(max(1, size // 3))
+        else:
+            with open(path, "r+b") as fh:
+                fh.seek(size // 2)
+                fh.write(plan.rng.bytes(min(64, max(1, size // 4))))
+        plan.log("corrupt-checkpoint", at=step, mode=self.mode)
+
+
+@register_fault("stale-checkpoint")
+class StaleCheckpointFault(Fault):
+    """Delete the checkpoint that just landed (archive + sidecar): the
+    directory now ends at an older snapshot, as if the newest save never
+    happened — resume replays the gap."""
+
+    def on_saved(self, plan, step, ckpt_dir):
+        if self.fired or step < self.step:
+            return
+        self.fired = True
+        from repro.checkpoint.checkpoint import _step_path
+        _step_path(ckpt_dir, step).unlink(missing_ok=True)
+        snapshot_meta_path(ckpt_dir, step).unlink(missing_ok=True)
+        plan.log("stale-checkpoint", at=step)
+
+
+@register_fault("write-failure")
+class WriteFailureFault(Fault):
+    """Transient filesystem failure: the first ``count`` snapshot write
+    attempts at/after ``step`` raise ``OSError``.  With ``count`` below
+    the snapshot retry budget the run never notices beyond the backoff
+    sleeps; the firings are logged for the chaos report."""
+
+    def __init__(self, step: int = 0, count: int = 2):
+        super().__init__(step)
+        self.count = int(count)
+        self.remaining = int(count)
+
+    def reset(self) -> None:
+        super().reset()
+        self.remaining = self.count
+
+    def on_write_attempt(self, plan, step, attempt):
+        if step >= self.step and self.remaining > 0:
+            self.remaining -= 1
+            self.fired = True
+            plan.log("write-failure", at=step, attempt=attempt)
+            raise OSError("injected transient write failure")

@@ -1,0 +1,233 @@
+"""The resumable runner: checkpoint-chunked scans, bitwise-equal traces.
+
+``run_resumable`` cuts a solver run into ``checkpoint_every``-aligned
+chunks of the *same* jitted scan body (``SolverBase._chunk_fn``: one
+compile per distinct chunk length), snapshots the complete carry after
+each chunk, and stitches the per-chunk metric columns back into the
+exact ``run_traced`` trace layout.  Because the chunk scan offsets its
+index by the global start step, metric recording fires on the same
+global boundaries whatever the run was cut into — chunked vs unchunked,
+killed-and-resumed vs uninterrupted, the trace is bitwise equal (the
+parity discipline PRs 4–8 established; asserted per algorithm × backend
+in tests/test_resilience.py).
+
+Fault surface (see docs/RESILIENCE.md): hooks fire at chunk boundaries
+(``on_chunk_end`` may mutate state or raise ``SimulatedKill``), around
+snapshot writes (``on_write_attempt`` → retry/backoff in
+``repro.resilience.snapshot``) and after them (``on_saved`` → corrupt /
+delete injection).  Non-finite state and fresh divergence-guard trips
+are detected *before* the snapshot lands, so a poisoned chunk never
+contaminates the checkpoint directory — the run resumes from the last
+clean boundary.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.resilience.snapshot import Resumed, resume, snapshot
+
+__all__ = ["GuardTripFault", "NonFiniteStateError", "SimulatedKill",
+           "resume_run", "run_resumable"]
+
+
+class SimulatedKill(RuntimeError):
+    """The chaos harness's process kill: raised at a chunk boundary
+    *before* the snapshot lands, so everything since the previous
+    checkpoint is lost — exactly what SIGKILL costs a real run."""
+
+    def __init__(self, step: int):
+        super().__init__(f"simulated process kill at step {step}")
+        self.step = step
+
+
+class NonFiniteStateError(RuntimeError):
+    """The carry went NaN/Inf during a chunk (e.g. an injected wire
+    payload the guards did not contain).  Raised before the snapshot, so
+    the checkpoint directory only ever holds finite states."""
+
+    def __init__(self, step: int):
+        super().__init__(f"non-finite solver state at step {step}")
+        self.step = step
+
+
+class GuardTripFault(RuntimeError):
+    """The divergence guard tripped during this chunk.  Surfaced as a
+    resumable fault so checkpoint rollback and guard rollback share one
+    recovery path (``chaos_run`` retries the chunk a bounded number of
+    times, then accepts the in-scan containment)."""
+
+    def __init__(self, step: int, trips: int):
+        super().__init__(f"divergence guard tripped {trips}x in the chunk "
+                         f"ending at step {step}")
+        self.step = step
+        self.trips = trips
+
+
+def _state_is_finite(state) -> bool:
+    for leaf in jax.tree_util.tree_leaves(state):
+        arr = np.asarray(jax.device_get(leaf))
+        if np.issubdtype(arr.dtype, np.floating) and \
+                not np.isfinite(arr).all():
+            return False
+    return True
+
+
+def _guard_trips(state) -> int | None:
+    guard = getattr(state, "guard", None)
+    if guard is None:
+        return None
+    return int(guard["tripped"])
+
+
+def run_resumable(solver, state, data, num_steps: int,
+                  record_every: int = 0, metric_fn=None, *,
+                  checkpoint_every: int, ckpt_dir,
+                  start_step: int | None = None, padded=None,
+                  hooks=None, raise_on_guard_trip: bool = False,
+                  guard_ignore_below: int = -1, retries: int = 3,
+                  backoff: float = 0.02):
+    """Advance ``num_steps`` from ``state``, snapshotting every
+    ``checkpoint_every`` steps into ``ckpt_dir``.
+
+    ``start_step`` is the global step the incoming carry sits at
+    (defaults to ``state.t``); chunk boundaries land on global multiples
+    of ``checkpoint_every``, so a resumed run re-aligns with the
+    boundaries the original run used.  ``padded`` is the full-length
+    per-step metric column being assembled across resumes (restored by
+    ``repro.resilience.resume``); ``None`` allocates a fresh NaN column.
+
+    Returns ``(state, trace, padded)`` with ``trace`` laid out exactly
+    like ``run_traced`` — metric before steps ``0, record_every, ...``
+    plus the final iterate — or an empty array when ``metric_fn`` is
+    None.  Bitwise contract: ``trace`` equals the single-scan
+    ``run_traced`` output provided the whole column was produced by this
+    chunked runner from step 0 (possibly across kills/resumes).
+    """
+    if ckpt_dir is None:
+        raise ValueError("checkpointed runs need ckpt_dir")
+    if checkpoint_every <= 0:
+        raise ValueError("checkpoint_every must be positive")
+    if solver._chunk_fn is None:
+        raise RuntimeError("call init()/build() before run_resumable()")
+
+    if start_step is None:
+        start_step = int(np.asarray(getattr(state, "t", 0)))
+    start = int(start_step)
+    total = start + int(num_steps)
+    record_mod = int(record_every) if record_every else total
+    if metric_fn is not None:
+        dtype = np.dtype(jax.eval_shape(metric_fn, state).dtype)
+        if padded is None:
+            padded = np.full((total,), np.nan, dtype)
+        else:
+            padded = np.asarray(padded)
+            if padded.shape != (total,):
+                raise ValueError(
+                    f"padded column has shape {padded.shape}, run "
+                    f"geometry needs ({total},)")
+
+    on_write = getattr(hooks, "on_write_attempt", None) \
+        if hooks is not None else None
+    trips_at_ckpt = _guard_trips(state)
+
+    cur = start
+    while cur < total:
+        end = min(total, (cur // checkpoint_every + 1) * checkpoint_every)
+        length = end - cur
+        if metric_fn is None:
+            new_state = solver._run_fn(state, data, length)
+        else:
+            new_state, vals = solver._chunk_fn(state, data, length,
+                                               record_mod, metric_fn, cur)
+            padded[cur:end] = np.asarray(jax.device_get(vals))
+        state = new_state
+        cur = end
+        if hooks is not None:
+            mutated = hooks.on_chunk_end(cur - length, cur, state, total)
+            if mutated is not None:
+                state = mutated
+        # validate BEFORE snapshotting: a poisoned or freshly-tripped
+        # chunk must never land in the checkpoint directory
+        if not _state_is_finite(state):
+            raise NonFiniteStateError(cur)
+        if raise_on_guard_trip:
+            trips = _guard_trips(state)
+            if trips is not None and trips_at_ckpt is not None \
+                    and trips > trips_at_ckpt and cur > guard_ignore_below:
+                raise GuardTripFault(cur, trips - trips_at_ckpt)
+        snapshot(solver, state, cur, ckpt_dir, padded=padded,
+                 total_steps=total, record_every=record_every,
+                 retries=retries, backoff=backoff,
+                 on_write_attempt=on_write)
+        trips_at_ckpt = _guard_trips(state)
+        if hooks is not None:
+            hooks.on_saved(cur, ckpt_dir)
+
+    if metric_fn is None:
+        return state, np.zeros((0,), np.float32), padded
+    final = np.asarray(jax.device_get(solver.metric_eval(metric_fn, state)))
+    trace = np.concatenate([padded[::record_mod],
+                            final.reshape(1).astype(padded.dtype)])
+    return state, trace, padded
+
+
+def resume_run(config, ckpt_dir, num_steps: int | None = None,
+               record_every: int | None = None, metric_fn=None, *,
+               checkpoint_every: int, problem=None, hg_cfg=None,
+               x0=None, y0=None, data=None, num_agents: int = 5,
+               n_per_agent: int = 600, hooks=None,
+               raise_on_guard_trip: bool = False,
+               guard_ignore_below: int = -1, max_step: int | None = None,
+               retries: int = 3, backoff: float = 0.02):
+    """Finish (or freshly start) a checkpointed run for ``config``.
+
+    Restores the newest valid snapshot in ``ckpt_dir`` (falling back past
+    corrupt / truncated / stale files, see ``repro.resilience.resume``)
+    and drives ``run_resumable`` to the run's recorded ``total_steps`` —
+    or from step 0 when the directory holds nothing restorable, in which
+    case ``num_steps`` (the TOTAL length of the run) is required.
+    ``num_steps`` / ``record_every``, when given, override the snapshot's
+    recorded geometry.
+
+    Returns ``(solver, state, trace)``; ``trace`` follows the
+    ``run_traced`` layout and is bitwise-equal to the uninterrupted run.
+    """
+    from repro.solvers.api import default_setup, make_solver
+
+    if problem is None or data is None or x0 is None or y0 is None:
+        problem, x0, y0, data = default_setup(
+            config.seed, num_agents=config.resolve_num_agents(num_agents),
+            n_per_agent=n_per_agent)
+
+    rs: Resumed | None = resume(config, ckpt_dir, problem=problem,
+                                hg_cfg=hg_cfg, x0=x0, y0=y0, data=data,
+                                max_step=max_step)
+    if rs is None:
+        if num_steps is None:
+            raise ValueError("empty/unrestorable checkpoint dir and no "
+                             "num_steps: nothing to resume, nothing to "
+                             "start")
+        solver = make_solver(config)
+        state = solver.init(None, problem, hg_cfg, x0, y0, data)
+        start, padded = 0, None
+        total = int(num_steps)
+        rec = int(record_every or 0)
+    else:
+        solver, state, start, padded = rs.solver, rs.state, rs.step, \
+            rs.padded
+        total = int(num_steps if num_steps is not None
+                    else rs.total_steps)
+        rec = int(record_every if record_every is not None
+                  else rs.record_every)
+
+    state, trace, padded = run_resumable(
+        solver, state, data, total - start, rec, metric_fn,
+        checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir,
+        start_step=start, padded=padded, hooks=hooks,
+        raise_on_guard_trip=raise_on_guard_trip,
+        guard_ignore_below=guard_ignore_below, retries=retries,
+        backoff=backoff)
+    return solver, state, trace

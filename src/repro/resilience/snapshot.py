@@ -1,0 +1,224 @@
+"""Bitwise solver snapshots: the complete scan carry, on disk.
+
+A snapshot is everything a resumed run needs to reproduce the
+uninterrupted trajectory bit for bit:
+
+* the solver state pytree — iterates ``x``/``y``, tracked gradients
+  ``u``/``v``, the SVR anchors ``x_prev``/``y_prev``/``p_prev``, the
+  error-feedback compression state ``ef = {stream: {e, ref}}``, the
+  divergence-guard counters, the sampling ``key``, and the step counter
+  ``t``.  The step counter is also the *topology-process position* (the
+  stream gathers ``matrices[t % T]``) and the *Byzantine schedule
+  position* (per-round keys fold ``t``), so those subsystems need no
+  separate record — they are pure functions of ``(config, t)``.
+* the partial metric column of a traced run (``padded``), so the stitched
+  trace equals the single-scan ``run_traced`` output bitwise.
+* a sidecar JSON with the run geometry (total steps, record cadence) and
+  a fingerprint of the ``SolverConfig``, so resuming against the wrong
+  config fails loudly instead of silently continuing a different
+  experiment.
+
+Saves go through ``repro.checkpoint`` (atomic replace + per-leaf CRC32)
+and retry transient write failures with exponential backoff — the
+``write-failure`` chaos fault (docs/RESILIENCE.md) is absorbed here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint import (CorruptCheckpointError, restore_pytree,
+                              save_step)
+from repro.checkpoint.checkpoint import _all_steps, _step_path
+
+__all__ = ["Resumed", "config_fingerprint", "resume", "snapshot",
+           "snapshot_meta_path", "tree_fingerprint", "write_json_atomic"]
+
+META_FORMAT = 1
+
+
+def config_fingerprint(config) -> str:
+    """Stable hex fingerprint of everything that shapes the trajectory.
+
+    ``static_key()`` covers every trace-static field (algorithm,
+    topology, backend, hypergrad, wire, Byzantine, guard) and
+    ``batch_values()`` the per-experiment dynamics (seed, alpha, beta) —
+    together they pin the run a snapshot belongs to.
+    """
+    key = repr((type(config).__name__, config.static_key(),
+                config.batch_values()))
+    return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+
+def snapshot_meta_path(ckpt_dir, step: int) -> pathlib.Path:
+    return pathlib.Path(ckpt_dir) / f"step_{step:08d}.json"
+
+
+def tree_fingerprint(tree) -> str:
+    """Content hash of a pytree's leaves (dtype + shape + bytes).
+
+    The sweep resume manifest uses this to pin cached group results to
+    the exact problem data / initial points they were computed on.
+    """
+    import jax
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()[:16]
+
+
+def write_json_atomic(path: pathlib.Path, obj: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(obj, fh)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def snapshot(solver, state, step: int, ckpt_dir, *, padded=None,
+             total_steps: int | None = None, record_every: int = 0,
+             retries: int = 3, backoff: float = 0.02,
+             on_write_attempt=None) -> pathlib.Path:
+    """Persist the solver carry (and partial trace) at global ``step``.
+
+    Retries ``OSError`` with exponential backoff (``backoff * 2**k``
+    seconds): transient filesystem hiccups — or the chaos harness's
+    injected ``write-failure`` fault via ``on_write_attempt(step,
+    attempt)`` — never kill the run; a persistently failing disk
+    re-raises after the last attempt.
+    """
+    payload: dict[str, Any] = {"state": state}
+    if padded is not None:
+        payload["padded"] = np.asarray(padded)
+    meta = {
+        "format": META_FORMAT,
+        "algo": solver.config.algo,
+        "config_fp": config_fingerprint(solver.config),
+        "step": int(step),
+        "total_steps": None if total_steps is None else int(total_steps),
+        "record_every": int(record_every),
+        "has_padded": padded is not None,
+        "padded_dtype": (None if padded is None
+                         else str(np.asarray(padded).dtype)),
+    }
+    last_exc: OSError | None = None
+    for attempt in range(retries + 1):
+        try:
+            if on_write_attempt is not None:
+                on_write_attempt(int(step), attempt)
+            save_step(ckpt_dir, int(step), payload)
+            write_json_atomic(snapshot_meta_path(ckpt_dir, int(step)),
+                              meta)
+            return _step_path(ckpt_dir, int(step))
+        except OSError as exc:
+            last_exc = exc
+            if attempt < retries:
+                time.sleep(backoff * (2 ** attempt))
+    raise last_exc
+
+
+@dataclasses.dataclass
+class Resumed:
+    """What ``resume`` hands back: a freshly built solver positioned at
+    the snapshot."""
+
+    solver: Any
+    state: Any
+    step: int                      # global step the state sits at
+    padded: np.ndarray | None      # partial metric column (traced runs)
+    total_steps: int | None        # run geometry recorded at save time
+    record_every: int
+    meta: dict
+
+
+def _read_meta(ckpt_dir, step: int) -> dict | None:
+    try:
+        with open(snapshot_meta_path(ckpt_dir, step)) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None
+
+
+def resume(config, ckpt_dir, *, problem=None, hg_cfg=None, x0=None,
+           y0=None, data=None, num_agents: int = 5,
+           n_per_agent: int = 600, max_step: int | None = None,
+           strict: bool = True) -> Resumed | None:
+    """Rebuild the solver for ``config`` and restore its newest valid
+    snapshot from ``ckpt_dir`` (``None`` when no snapshot restores).
+
+    Walks the checkpoint steps newest-first and skips anything broken —
+    missing/unparseable sidecar, truncated archive, CRC failure — so a
+    directory that survived a crash or a chaos fault plan resumes from
+    the newest snapshot that is actually whole.  A snapshot whose
+    recorded config fingerprint disagrees with ``config`` raises under
+    ``strict`` (resuming a different experiment is never recoverable by
+    falling back) and is skipped otherwise.
+
+    The problem instance defaults to the paper's Section-6 setup exactly
+    as ``repro.solvers.solve`` does — resume MUST be given the same
+    problem/data as the original run or the restored trajectory
+    diverges from the uninterrupted one.
+    """
+    from repro.solvers.api import default_setup, make_solver
+
+    steps = _all_steps(ckpt_dir)
+    if max_step is not None:
+        steps = [s for s in steps if s <= max_step]
+    if not steps:
+        return None
+
+    if problem is None or data is None or x0 is None or y0 is None:
+        problem, x0, y0, data = default_setup(
+            config.seed, num_agents=config.resolve_num_agents(num_agents),
+            n_per_agent=n_per_agent)
+    solver = make_solver(config)
+    template = solver.init(None, problem, hg_cfg, x0, y0, data)
+    fp = config_fingerprint(config)
+
+    for step in reversed(steps):
+        meta = _read_meta(ckpt_dir, step)
+        if meta is None:
+            continue
+        if meta.get("config_fp") != fp:
+            if strict:
+                raise ValueError(
+                    f"snapshot at step {step} in {ckpt_dir} belongs to a "
+                    f"different config (fingerprint "
+                    f"{meta.get('config_fp')!r} != {fp!r}); refusing to "
+                    f"resume a different experiment (strict=False skips)")
+            continue
+        like: dict[str, Any] = {"state": template}
+        if meta.get("has_padded"):
+            like["padded"] = np.full(
+                (int(meta["total_steps"]),), np.nan,
+                np.dtype(meta["padded_dtype"]))
+        try:
+            payload = restore_pytree(_step_path(ckpt_dir, step), like)
+        except (CorruptCheckpointError, OSError):
+            continue
+        return Resumed(solver=solver, state=payload["state"],
+                       step=int(meta["step"]),
+                       padded=payload.get("padded"),
+                       total_steps=meta.get("total_steps"),
+                       record_every=int(meta.get("record_every", 0)),
+                       meta=meta)
+    return None

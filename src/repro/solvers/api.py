@@ -173,6 +173,7 @@ class SolverBase:
         self._step_fn = None
         self._run_fn = None
         self._traced_fn = None
+        self._chunk_fn = None
         self._param_step = None
         self._engine = None
 
@@ -278,8 +279,57 @@ class SolverBase:
 
         self._traced_fn = jax.jit(traced_run, static_argnums=(2, 3, 4),
                                   donate_argnums=0)
+
+        def chunk_run(state, data, chunk_len, record_mod, metric_fn,
+                      start_step):
+            """One checkpoint-interval chunk of the resumable runner.
+
+            Identical step body to ``traced_run`` but (a) the scan index
+            is offset by the traced ``start_step`` — the global step the
+            incoming carry sits at — so the metric fires on the same
+            global boundaries whatever chunk the run was cut into, and
+            (b) the per-step metric column comes back *uncompacted*
+            (NaN off-boundary): compaction needs the whole run, which
+            the resilience runner assembles across chunks
+            (docs/RESILIENCE.md).  ``start_step`` being a traced operand
+            means every equal-length chunk shares one compile.
+            """
+            if metric_fn is None:
+                def body(s, _):
+                    return raw(s, data), None
+
+                state, _ = jax.lax.scan(body, state, xs=None,
+                                        length=chunk_len)
+                return state, jnp.zeros((0,), jnp.float32)
+            dtype = jax.eval_shape(metric_fn, state).dtype
+
+            def body(s, i):
+                val = jax.lax.cond(
+                    (i % record_mod) == 0,
+                    lambda st: jnp.asarray(metric_fn(st), dtype),
+                    lambda st: jnp.asarray(jnp.nan, dtype), s)
+                return raw(s, data), val
+
+            xs = jnp.asarray(start_step, jnp.int32) + jnp.arange(chunk_len)
+            return jax.lax.scan(body, state, xs=xs)
+
+        self._chunk_fn = jax.jit(chunk_run, static_argnums=(2, 3, 4),
+                                 donate_argnums=0)
+        self._metric_jits: dict[int, Any] = {}
         self._problem, self._hg_cfg = problem, hg_cfg
         return self
+
+    def metric_eval(self, metric_fn, state):
+        """``metric_fn(state)`` under jit (cached per metric closure).
+
+        The resilience runner's final-record evaluation: bitwise-equal
+        to the in-program ``metric_fn(final_state)`` the one-scan
+        ``run_traced`` computes.
+        """
+        fn = self._metric_jits.get(id(metric_fn))
+        if fn is None:
+            fn = self._metric_jits[id(metric_fn)] = jax.jit(metric_fn)
+        return fn(state)
 
     def init(self, key, problem, hg_cfg, x0, y0, data):
         """Build the solver for this problem and return the initial state.
@@ -304,14 +354,31 @@ class SolverBase:
             raise RuntimeError("call init()/build() before step()")
         return self._step_fn(state, data)
 
-    def run(self, state, data, num_steps: int):
-        """``num_steps`` iterations under one jitted ``lax.scan``."""
+    def run(self, state, data, num_steps: int, *,
+            checkpoint_every: int | None = None, ckpt_dir=None):
+        """``num_steps`` iterations under one jitted ``lax.scan``.
+
+        ``checkpoint_every`` chunks the scan at checkpoint boundaries
+        and snapshots the complete solver carry into ``ckpt_dir`` after
+        each chunk (atomic, CRC-checked — see docs/RESILIENCE.md), so a
+        killed run resumes from its last boundary via
+        ``repro.resilience.resume_run``.  Every equal-length chunk
+        shares one compile; the final state is bitwise-equal to the
+        unchunked scan.
+        """
         if self._run_fn is None:
             raise RuntimeError("call init()/build() before run()")
+        if checkpoint_every:
+            from repro.resilience import run_resumable
+            state, _, _ = run_resumable(
+                self, state, data, num_steps,
+                checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir)
+            return state
         return self._run_fn(state, data, num_steps)
 
     def run_traced(self, state, data, num_steps: int, record_every: int = 0,
-                   metric_fn=None):
+                   metric_fn=None, *, checkpoint_every: int | None = None,
+                   ckpt_dir=None):
         """``num_steps`` iterations with the metric recorded *in-scan*.
 
         One jitted XLA program (state donated) steps the solver and
@@ -326,9 +393,25 @@ class SolverBase:
         laid out exactly like the legacy ``run_recorded`` list — metric
         before steps ``0, record_every, ...`` then after the last step —
         or an empty array when ``metric_fn`` is None.
+
+        ``checkpoint_every`` routes through the resilience runner: the
+        scan is cut at checkpoint boundaries (every equal-length chunk
+        one compile), the complete carry plus the partial metric column
+        is snapshotted into ``ckpt_dir`` after each chunk, and the
+        returned trace is bitwise-equal to the unchunked program — the
+        contract ``repro.resilience`` kill/resume parity is built on
+        (docs/RESILIENCE.md).  Meant for fresh states (the global step
+        offset is taken from ``state.t``); resuming an interrupted run
+        goes through ``repro.resilience.resume_run``.
         """
         if self._traced_fn is None:
             raise RuntimeError("call init()/build() before run_traced()")
+        if checkpoint_every:
+            from repro.resilience import run_resumable
+            state, trace, _ = run_resumable(
+                self, state, data, num_steps, record_every, metric_fn,
+                checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir)
+            return state, trace
         return self._traced_fn(state, data, num_steps, record_every,
                                metric_fn)
 

@@ -50,7 +50,10 @@ recording cost model.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import json
+import pathlib
 import time
 from collections.abc import Mapping
 from typing import Any, Sequence
@@ -96,6 +99,8 @@ class SweepGroup:
                                 # measured, else first run incl. compile)
     pad_to: int | None = None   # padded agent count (padded groups only)
     num_active: tuple[int, ...] | None = None   # per-config active m
+    loaded: bool = False        # True: traces came from the resume_dir
+                                # manifest, not a fresh dispatch
 
 
 @dataclasses.dataclass
@@ -161,6 +166,77 @@ def _group_by_static_key(configs: Sequence[SolverConfig],
     for i, cfg in enumerate(configs):
         groups.setdefault(cfg.static_key(pad_to=pad_to), []).append(i)
     return list(groups.values())
+
+
+class _SweepResume:
+    """The self-healing sweep's completion manifest (docs/RESILIENCE.md).
+
+    ``resume_dir/manifest.json`` maps a *group fingerprint* — a hash of
+    the sweep geometry (num_steps, record_every, padding, problem data /
+    initial-point content) plus every member config's static key, batch
+    values, and topology process — to the ``group_<fp>.npz`` file
+    holding that group's traces (written through the crash-safe
+    ``repro.checkpoint`` store: atomic replace, per-leaf CRC32).  The
+    manifest is rewritten atomically after *each* group completes, so a
+    sweep killed mid-grid re-queues exactly the failed / missing groups
+    on the next invocation and loads the finished ones bitwise — cached
+    arrays, not recomputation.  A group whose cached file is corrupt or
+    whose fingerprint no longer matches is simply recomputed.
+    """
+
+    MANIFEST = "manifest.json"
+
+    def __init__(self, root, base_key: str, configs):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.base_key = base_key
+        self.configs = configs
+        self.manifest: dict = {"version": 1, "groups": {}}
+        try:
+            with open(self.root / self.MANIFEST) as fh:
+                loaded = json.load(fh)
+            if isinstance(loaded, dict) and "groups" in loaded:
+                self.manifest = loaded
+        except (OSError, ValueError):
+            pass    # no/corrupt manifest: every group recomputes
+
+    def group_fp(self, indices) -> str:
+        tags = [repr((self.configs[i].static_key(),
+                      self.configs[i].batch_values(),
+                      self.configs[i].topology_process))
+                for i in indices]
+        return hashlib.sha256(
+            repr((self.base_key, tags)).encode()).hexdigest()[:16]
+
+    def load(self, fp: str):
+        """``(traces, seconds)`` for a completed group, else ``None``."""
+        from repro.checkpoint import CorruptCheckpointError, restore_pytree
+        entry = self.manifest["groups"].get(fp)
+        if entry is None:
+            return None
+        like = {"traces": np.zeros(tuple(entry["trace_shape"]),
+                                   np.dtype(entry["trace_dtype"]))}
+        try:
+            tree = restore_pytree(self.root / entry["file"], like)
+        except (CorruptCheckpointError, OSError, ValueError):
+            return None     # damaged cache: recompute this group
+        return np.asarray(tree["traces"]), float(entry.get("seconds", 0.0))
+
+    def store(self, fp: str, indices, traces: np.ndarray,
+              seconds: float) -> None:
+        from repro.checkpoint import save_pytree
+        from repro.resilience.snapshot import write_json_atomic
+        traces = np.asarray(traces)
+        fname = f"group_{fp}.npz"
+        save_pytree(self.root / fname, {"traces": traces})
+        self.manifest["groups"][fp] = {
+            "file": fname,
+            "indices": [int(i) for i in indices],
+            "trace_shape": list(traces.shape),
+            "trace_dtype": str(traces.dtype),
+            "seconds": float(seconds),
+        }
+        write_json_atomic(self.root / self.MANIFEST, self.manifest)
 
 
 def _experiment_fn(solver, data, num_steps: int, record_every: int,
@@ -394,7 +470,8 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
           metric_fn=None, x0_stack=None, y0_stack=None,
           measure: bool = False, compare_sequential: bool = False,
           return_states: bool = False, pad_agents: bool = False,
-          pad_to: int | None = None) -> SweepResult:
+          pad_to: int | None = None,
+          resume_dir: str | pathlib.Path | None = None) -> SweepResult:
     """Run a grid of experiments as one compiled program per vmap group.
 
     Args:
@@ -437,6 +514,20 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
         trade-off).  Active-agent trajectories are bitwise unchanged.
       pad_to: the padded agent count; defaults to the grid's largest
         network.
+      resume_dir: self-healing mode (docs/RESILIENCE.md).  Each group's
+        traces land in ``resume_dir`` (atomic, CRC-checked) under a
+        fingerprint of the sweep geometry + member configs the moment
+        the group completes; re-invoking the same sweep after a
+        mid-grid failure loads the finished groups bitwise from disk
+        and recomputes only the missing / damaged ones (their
+        ``SweepGroup.loaded`` flag says which).  The fingerprint covers
+        configs, num_steps/record_every, padding, and the *content* of
+        problem data and initial points — but not ``metric_fn`` or
+        ``problem`` internals: keep those fixed across invocations of
+        one resume_dir.  Incompatible with ``return_states`` (final
+        states are not cached) and with ``measure`` /
+        ``compare_sequential`` timing of loaded groups (their recorded
+        first-run seconds are reused).
 
     Returns a ``SweepResult`` with traces aligned to the input order.
     """
@@ -490,6 +581,12 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
     seconds = 0.0
     seconds_seq: float | None = 0.0 if compare_sequential else None
 
+    if resume_dir is not None and return_states:
+        raise ValueError(
+            "resume_dir caches group traces, not final states; "
+            "return_states=True would hand back a half-empty result — "
+            "drop one of the two")
+
     if pad_agents:
         bad = [i for i, c in enumerate(configs) if c.backend != "dense"]
         if bad:
@@ -508,8 +605,36 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
         m_pad, ms = None, None
         group_indices = _group_by_static_key(configs)
 
+    resume_state = None
+    if resume_dir is not None:
+        from repro.resilience.snapshot import tree_fingerprint
+        base_key = repr((
+            int(num_steps), int(record_every), bool(pad_agents), m_pad,
+            built_default, configs[0].seed, num_agents, n_per_agent,
+            None if data is None else tree_fingerprint(data),
+            None if data_map is None else sorted(
+                (k, tree_fingerprint(v)) for k, v in data_map.items()),
+            tree_fingerprint(x0), tree_fingerprint(y0),
+            None if x0_stack is None else tree_fingerprint(x0_stack),
+            None if y0_stack is None else tree_fingerprint(y0_stack),
+        ))
+        resume_state = _SweepResume(resume_dir, base_key, configs)
+
     for indices in group_indices:
         rep = configs[indices[0]]
+        if resume_state is not None:
+            cached = resume_state.load(resume_state.group_fp(indices))
+            if cached is not None:
+                g_traces, took = cached
+                for row, i in enumerate(indices):
+                    traces[i] = g_traces[row]
+                seconds += took
+                groups.append(SweepGroup(
+                    indices=indices, config=rep, seconds=took,
+                    pad_to=m_pad if pad_agents else None,
+                    num_active=tuple(ms[i] for i in indices)
+                    if pad_agents else None, loaded=True))
+                continue
         proc = rep.topology_process
         # a stream process (link-failure / straggler / gossip) realizes a
         # per-config matrix stream; within a group only its VALUES (p,
@@ -697,6 +822,11 @@ def sweep(configs: Sequence[SolverConfig], num_steps: int,
             pad_to=m_pad if pad_agents else None,
             num_active=tuple(ms[i] for i in indices) if pad_agents
             else None))
+        if resume_state is not None:
+            # persist the moment the group finishes: a kill during the
+            # NEXT group loses nothing already computed
+            resume_state.store(resume_state.group_fp(indices), indices,
+                               g_traces, took)
 
         if compare_sequential:
             single = jax.jit(one)

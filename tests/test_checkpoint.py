@@ -1,0 +1,228 @@
+"""Checkpoint store tests: exact round-trips, corruption detection,
+fallback-to-newest-valid (docs/RESILIENCE.md).
+
+The store is the foundation the resilience layer stands on, so the
+properties under test are the load-bearing ones: bitwise round-trips of
+arbitrary pytrees, loud failure on structure/shape/dtype mismatch, CRC
+detection of bit-rot, atomic writes that never leave a partial file
+under the final name, and step selection that skips damaged files.
+"""
+import json
+import os
+import pathlib
+import tempfile
+import typing
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CorruptCheckpointError,
+    latest_step,
+    restore_latest,
+    restore_pytree,
+    restore_step,
+    save_pytree,
+    save_step,
+    valid_steps,
+    verify_checkpoint,
+)
+
+
+class Carry(typing.NamedTuple):
+    x: dict
+    y: np.ndarray
+    t: np.ndarray
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return Carry(
+        x={"w": rng.standard_normal((3, 4)).astype(np.float32),
+           "b": [rng.standard_normal(4).astype(np.float64),
+                 rng.integers(0, 9, (2,), dtype=np.int32)]},
+        y=rng.standard_normal((2, 2)).astype(np.float32),
+        t=np.asarray(7, np.int32))
+
+
+def _leaves_equal(a, b):
+    import jax
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for p, q in zip(la, lb):
+        p, q = np.asarray(p), np.asarray(q)
+        assert p.dtype == q.dtype and p.shape == q.shape
+        assert p.tobytes() == q.tobytes()
+
+
+def test_roundtrip_namedtuple_nested_bitwise(tmp_path):
+    tree = _tree()
+    p = tmp_path / "ck.npz"
+    save_pytree(p, tree)
+    got = restore_pytree(p, _tree(seed=1))   # template: structure only
+    assert isinstance(got, Carry)
+    _leaves_equal(got, tree)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    p = tmp_path / "ck.npz"
+    save_pytree(p, _tree())
+    with pytest.raises(ValueError, match="structure mismatch"):
+        restore_pytree(p, {"different": np.zeros(3)})
+
+
+def test_shape_and_dtype_mismatch_raise(tmp_path):
+    p = tmp_path / "ck.npz"
+    save_pytree(p, {"a": np.zeros((3,), np.float32)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_pytree(p, {"a": np.zeros((4,), np.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        restore_pytree(p, {"a": np.zeros((3,), np.float64)})
+
+
+def test_crc_detects_bit_rot(tmp_path):
+    """Flipped leaf bytes behind an intact manifest must be caught."""
+    p = tmp_path / "ck.npz"
+    save_pytree(p, {"a": np.arange(8, dtype=np.float32)})
+    with np.load(p) as data:
+        arrays = {k: np.array(data[k]) for k in data.files}
+    arrays["leaf_0"] = arrays["leaf_0"] + 1.0   # stale CRC kept
+    np.savez(p, **arrays)
+    assert not verify_checkpoint(p)
+    with pytest.raises(CorruptCheckpointError, match="CRC mismatch"):
+        restore_pytree(p, {"a": np.zeros(8, np.float32)})
+
+
+def test_truncated_archive_detected(tmp_path):
+    p = tmp_path / "ck.npz"
+    save_pytree(p, _tree())
+    with open(p, "r+b") as fh:
+        fh.truncate(os.path.getsize(p) // 3)
+    assert not verify_checkpoint(p)
+    with pytest.raises(CorruptCheckpointError):
+        restore_pytree(p, _tree())
+
+
+def test_manifest_dtype_record_detects_reinterpretation(tmp_path):
+    """A leaf decoded under a different dtype than the manifest recorded
+    is corruption, even if the template would accept it."""
+    p = tmp_path / "ck.npz"
+    save_pytree(p, {"a": np.arange(4, dtype=np.float32)})
+    with np.load(p) as data:
+        arrays = {k: np.array(data[k]) for k in data.files}
+    manifest = json.loads(bytes(arrays["__manifest__"]).decode())
+    manifest["dtypes"] = ["int32"]
+    manifest["crcs"] = [zlib.crc32(arrays["leaf_0"].tobytes())]
+    arrays["__manifest__"] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8)
+    np.savez(p, **arrays)
+    assert not verify_checkpoint(p)
+    with pytest.raises(CorruptCheckpointError, match="manifest records"):
+        restore_pytree(p, {"a": np.zeros(4, np.float32)})
+
+
+def test_save_is_atomic_no_temp_residue(tmp_path):
+    save_pytree(tmp_path / "ck.npz", _tree())
+    save_pytree(tmp_path / "ck.npz", _tree(seed=1))   # overwrite in place
+    assert sorted(q.name for q in tmp_path.iterdir()) == ["ck.npz"]
+    got = restore_pytree(tmp_path / "ck.npz", _tree())
+    _leaves_equal(got, _tree(seed=1))
+
+
+def test_failed_save_leaves_previous_checkpoint_intact(tmp_path):
+    class Unsaveable:
+        def __array__(self, *a, **k):
+            raise ValueError("not convertible")
+
+    p = tmp_path / "ck.npz"
+    save_pytree(p, _tree())
+    with pytest.raises(ValueError, match="not convertible"):
+        save_pytree(p, {"a": Unsaveable()})
+    assert sorted(q.name for q in tmp_path.iterdir()) == ["ck.npz"]
+    _leaves_equal(restore_pytree(p, _tree(seed=1)), _tree())
+
+
+def test_latest_step_ordering_and_fallback(tmp_path):
+    for s in (5, 10, 40):
+        save_step(tmp_path, s, _tree(seed=s))
+    assert latest_step(tmp_path) == 40
+    # corrupt the newest: validated answer falls back, legacy does not
+    with open(tmp_path / "step_00000040.npz", "r+b") as fh:
+        fh.truncate(10)
+    assert latest_step(tmp_path) == 10
+    assert latest_step(tmp_path, validate=False) == 40
+    assert valid_steps(tmp_path) == [5, 10]
+    assert latest_step(tmp_path / "nope") is None
+
+
+def test_stray_files_ignored(tmp_path):
+    save_step(tmp_path, 3, _tree())
+    (tmp_path / "step_final.npz").write_bytes(b"not a checkpoint")
+    (tmp_path / "notes.txt").write_text("irrelevant")
+    assert latest_step(tmp_path) == 3
+
+
+def test_restore_step_fallback_warns_and_restores_older(tmp_path):
+    save_step(tmp_path, 5, _tree(seed=5))
+    save_step(tmp_path, 10, _tree(seed=10))
+    with open(tmp_path / "step_00000010.npz", "r+b") as fh:
+        fh.truncate(10)
+    with pytest.raises(CorruptCheckpointError):
+        restore_step(tmp_path, 10, _tree())
+    with pytest.warns(UserWarning, match="fell back to step 5"):
+        got = restore_step(tmp_path, 10, _tree(), fallback=True)
+    _leaves_equal(got, _tree(seed=5))
+    with pytest.raises(FileNotFoundError):
+        restore_step(tmp_path, 4, _tree(), fallback=True)
+
+
+def test_restore_latest_max_step_and_empty(tmp_path):
+    assert restore_latest(tmp_path, _tree()) is None
+    for s in (2, 4, 6):
+        save_step(tmp_path, s, _tree(seed=s))
+    tree, used = restore_latest(tmp_path, _tree())
+    assert used == 6
+    _leaves_equal(tree, _tree(seed=6))
+    tree, used = restore_latest(tmp_path, _tree(), max_step=5)
+    assert used == 4
+    _leaves_equal(tree, _tree(seed=4))
+
+
+def test_restore_latest_never_falls_back_past_wrong_template(tmp_path):
+    """A *valid* checkpoint for a different run must raise, not be
+    skipped — silently resuming the wrong experiment is worse than
+    failing."""
+    save_step(tmp_path, 1, _tree())
+    save_step(tmp_path, 2, {"other": np.zeros(3, np.float32)})
+    with pytest.raises(ValueError, match="structure mismatch"):
+        restore_latest(tmp_path, _tree())
+
+
+def test_version1_manifest_still_restores(tmp_path):
+    """Pre-CRC checkpoints (bare path-list manifest) restore, minus the
+    integrity checks."""
+    p = tmp_path / "ck.npz"
+    tree = {"a": np.arange(4, dtype=np.float32),
+            "b": np.asarray(2, np.int32)}
+    save_pytree(p, tree)
+    with np.load(p) as data:
+        arrays = {k: np.array(data[k]) for k in data.files}
+    manifest = json.loads(bytes(arrays["__manifest__"]).decode())
+    arrays["__manifest__"] = np.frombuffer(
+        json.dumps(manifest["paths"]).encode(), dtype=np.uint8)
+    np.savez(p, **arrays)
+    got = restore_pytree(p, {"a": np.zeros(4, np.float32),
+                             "b": np.asarray(0, np.int32)})
+    _leaves_equal(got, tree)
+
+
+def test_jax_arrays_roundtrip(tmp_path):
+    import jax.numpy as jnp
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "t": jnp.asarray(3, jnp.int32)}
+    p = tmp_path / "ck.npz"
+    save_pytree(p, tree)
+    got = restore_pytree(p, tree)
+    _leaves_equal(got, tree)
