@@ -19,12 +19,25 @@ eq.-(9) inner-gradient pass run on the *inner* batch only, gradient
 evaluations on the inner+outer pair (an upper bound for the grad side:
 the grad_{x,y} f pass sees only the outer split, the linearization
 primal only the inner).
+
+Besides the priced ``bytes_per_round`` column, every row carries the
+*measured* communication: ``measured_wire_bytes`` from a ``CommsLedger``
+attached before the step trace (the bytes the compiled program actually
+shipped over the counted iterations — consensus/ledger.py) and
+``round_latency_us`` (median wall-clock of one warmed jitted consensus
+round).  Backends that cannot be measured outside shard_map would report
+``NA``; the dense backend used here always measures.  The same rows are
+dumped to ``BENCH_complexity.json`` for the ``check_complexity`` gate.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 
 from benchmarks.common import ALGORITHMS, Row, build, make_setup, metric_of
+from repro.consensus import attach_ledger, time_round_us
 from repro.hypergrad import measure_problem_counts
 
 EPS = 0.05
@@ -58,12 +71,40 @@ def _bytes_per_round(solver, state) -> float:
     return float(solver._engine.bytes_on_wire(payload))
 
 
+def _measured_cols(solver, ledger, steps: int, state) -> tuple[str, dict]:
+    """Commit the ledger and time one consensus round: the measured
+    columns (``NA`` when the backend records/times nothing — e.g. a mesh
+    backend whose mix cannot run outside shard_map)."""
+    ledger.commit_steps(steps)
+    measured = ledger.measured_wire_bytes if ledger.streams else None
+    latency = None
+    if solver._engine.name in ("dense", "pallas"):
+        engine = solver._engine
+        latency = time_round_us(jax.jit(lambda tr: engine.mix(tr)), state.x,
+                                reps=3)
+    col = (f"measured_wire_bytes="
+           f"{'NA' if measured is None else format(measured, '.0f')};"
+           f"round_latency_us="
+           f"{'NA' if latency is None else format(latency, '.1f')}")
+    return col, {"measured_wire_bytes": measured,
+                 "round_latency_us": latency}
+
+
+def _json_path() -> str:
+    return os.path.join(os.environ.get("BENCH_JSON_DIR", os.getcwd()),
+                        "BENCH_complexity.json")
+
+
 def run(smoke: bool = False) -> list:
     max_iters = 10 if smoke else MAX_ITERS
     rows = []
+    dump = {"bench": "complexity", "eps": EPS, "rows": []}
     s = make_setup(m=5)
     for algo in ALGORITHMS:
         solver, state = build(s, algo)
+        # jit is lazy: attaching after build/init still precedes the
+        # first step trace, so the ledger sees every wire stream
+        ledger = attach_ledger(solver._engine)
         # appended last so existing column parsing stays positional-safe
         byz_col = f"byzantine_kind={solver.config.byzantine.kind}"
         wire = _bytes_per_round(solver, state)
@@ -75,10 +116,14 @@ def run(smoke: bool = False) -> list:
             state = solver.step(state, s.data)
         if iters is None:
             cap = max_iters * solver.communications_per_step
+            mcol, mfields = _measured_cols(solver, ledger, max_iters, state)
             rows.append(Row(f"table1_{algo}", 0.0,
                             f"eps={EPS};comm_rounds=>{cap};"
                             f"bytes_per_round={wire:.0f};samples=NA;"
-                            f"{byz_col};{_guard_cols(state)}"))
+                            f"{mcol};{byz_col};{_guard_cols(state)}"))
+            dump["rows"].append({"name": f"table1_{algo}", "algo": algo,
+                                 "converged": False, "iters": max_iters,
+                                 "bytes_per_round": wire, **mfields})
             continue
         hvp, grad, hess = _per_call_evals(s)
         calls = solver.hypergrad_calls_per_step(s.n)
@@ -104,6 +149,7 @@ def run(smoke: bool = False) -> list:
             per_step = call_samples(bs, bs)
         samples = iters * per_step
         rounds = iters * solver.communications_per_step
+        mcol, mfields = _measured_cols(solver, ledger, iters, state)
         rows.append(Row(f"table1_{algo}", 0.0,
                         f"eps={EPS};comm_rounds={rounds};"
                         f"bytes_per_round={wire:.0f};"
@@ -111,7 +157,18 @@ def run(smoke: bool = False) -> list:
                         f"hvp_evals={hvp_evals:.0f};"
                         f"grad_evals={grad_evals:.0f};"
                         f"samples_per_agent={samples:.0f};"
-                        f"{byz_col};{_guard_cols(state)}"))
+                        f"{mcol};{byz_col};{_guard_cols(state)}"))
+        dump["rows"].append({"name": f"table1_{algo}", "algo": algo,
+                             "converged": True, "iters": iters,
+                             "comm_rounds": rounds,
+                             "bytes_per_round": wire,
+                             "priced_wire_bytes": rounds * wire,
+                             **mfields})
+    try:
+        with open(_json_path(), "w") as fh:
+            json.dump(dump, fh, indent=1)
+    except OSError:
+        pass  # read-only workdir: CSV rows still carry everything
     return rows
 
 

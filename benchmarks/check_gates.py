@@ -5,18 +5,25 @@ headline fields from an inline heredoc in the workflow file — invisible
 to local runs and silent about every other dump.  This module is that
 gate as code: it checks the headline fields of *all* known benchmark
 dumps (sweep speedups >= 1, bitwise parity flags, padded-batching
-speedup and dispatch collapse, hypergradient accounting present) and is
-runnable locally exactly as CI runs it:
+speedup and dispatch collapse, hypergradient accounting present,
+measured-vs-priced wire bytes) and is runnable locally exactly as CI
+runs it:
 
     PYTHONPATH=src BENCH_JSON_DIR=bench-artifacts \
         python -m benchmarks.check_gates
 
+Every validator runs to completion and reports ALL tripped gates for its
+dump — not just the first — and a per-gate summary table closes the
+report, so one CI run shows the full damage instead of a
+fix-one-see-the-next loop.
+
 Dumps are searched in ``$BENCH_JSON_DIR`` (or the cwd).  A *known* dump
 that is missing fails the gate — the benches write them uncondition-
 ally, so absence means the harness rotted; pass ``--allow-missing``
-when deliberately checking a partial run.  Unknown ``BENCH_*.json``
-files only have to parse.  Exit status is the CI contract: 0 iff every
-gate holds.
+when deliberately checking a partial run (absent dumps and absent
+headline fields become skips; out-of-bound values present still fail).
+Unknown ``BENCH_*.json`` files only have to parse.  Exit status is the
+CI contract: 0 iff every gate holds.
 """
 from __future__ import annotations
 
@@ -26,23 +33,69 @@ import json
 import os
 import sys
 
-
-class GateFailure(Exception):
-    """One failed gate (message names the dump, field and bound)."""
+_MISSING = object()
 
 
-class MissingGateField(GateFailure):
-    """A headline field is absent — a partial run under --allow-missing
-    skips these; a full CI run fails on them."""
+class GateReport:
+    """Per-dump collector: every failure, missing field, and ok-note.
+
+    Validators call ``need``/``true``/``ge``/``check``/``fail``/``note``
+    and always run to the end of their checklist; nothing raises, so one
+    report carries ALL tripped gates of its dump.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.notes: list[str] = []
+        self.failures: list[str] = []
+        self.missing: list[str] = []
+
+    # -- primitives -------------------------------------------------------
+    def need(self, dump: dict, field: str):
+        """Fetch a headline field; records it as missing (and returns the
+        ``_MISSING`` sentinel) when absent."""
+        if field not in dump:
+            self.missing.append(f"headline field {field!r} missing")
+            return _MISSING
+        return dump[field]
+
+    def fail(self, msg: str) -> None:
+        self.failures.append(msg)
+
+    def note(self, msg: str) -> None:
+        self.notes.append(msg)
+
+    def check(self, cond: bool, fail_msg: str,
+              note_msg: str | None = None) -> bool:
+        if not cond:
+            self.fail(fail_msg)
+        elif note_msg:
+            self.note(note_msg)
+        return bool(cond)
+
+    # -- field-level gates ------------------------------------------------
+    def ge(self, dump: dict, field: str, bound: float):
+        val = self.need(dump, field)
+        if val is _MISSING:
+            return None
+        if not isinstance(val, (int, float)) or not val >= bound:
+            self.fail(f"{field}={val} < {bound}")
+        else:
+            self.note(f"{field}={val:.2f}")
+        return val
+
+    def true(self, dump: dict, field: str, fail_msg: str | None = None):
+        val = self.need(dump, field)
+        if val is _MISSING:
+            return None
+        if val is not True:
+            self.fail(fail_msg or f"{field} is not True")
+        else:
+            self.note(f"{field}=True")
+        return val
 
 
-def _need(dump: dict, field: str, path: str):
-    if field not in dump:
-        raise MissingGateField(f"{path}: headline field {field!r} missing")
-    return dump[field]
-
-
-def check_sweep(dump: dict, path: str) -> list[str]:
+def check_sweep(dump: dict, g: GateReport) -> None:
     """BENCH_sweep.json: batching + padding regression gates.
 
     * ``vmap_speedup`` >= 1 — the batched sweep must not lose to the
@@ -64,58 +117,46 @@ def check_sweep(dump: dict, path: str) -> list[str]:
     * ``pad_dispatches_padded < pad_dispatches_unpadded`` — padding must
       actually collapse dispatch groups, not just relabel them.
     """
-    out = []
-
-    def ge(field, bound):
-        val = _need(dump, field, path)
-        if not val >= bound:
-            raise GateFailure(f"{path}: {field}={val:.3f} < {bound}")
-        out.append(f"{field}={val:.2f}")
-
-    def ge1(field):
-        ge(field, 1.0)
-
-    def true(field):
-        if _need(dump, field, path) is not True:
-            raise GateFailure(f"{path}: {field} is not True")
-        out.append(f"{field}=True")
-
-    ge1("vmap_speedup")
-    ge("scan_speedup", 0.8)
-    true("trace_bitwise_match")
-    ge1("pad_speedup")
-    true("pad_trace_match")
-    unpad = _need(dump, "pad_dispatches_unpadded", path)
-    pad = _need(dump, "pad_dispatches_padded", path)
-    if not pad < unpad:
-        raise GateFailure(
-            f"{path}: padding did not collapse dispatches "
-            f"({pad} padded vs {unpad} unpadded)")
-    out.append(f"dispatches {unpad}->{pad}")
-    return out
+    g.ge(dump, "vmap_speedup", 1.0)
+    g.ge(dump, "scan_speedup", 0.8)
+    g.true(dump, "trace_bitwise_match")
+    g.ge(dump, "pad_speedup", 1.0)
+    g.true(dump, "pad_trace_match")
+    unpad = g.need(dump, "pad_dispatches_unpadded")
+    pad = g.need(dump, "pad_dispatches_padded")
+    if unpad is not _MISSING and pad is not _MISSING:
+        g.check(pad < unpad,
+                f"padding did not collapse dispatches ({pad} padded vs "
+                f"{unpad} unpadded)",
+                f"dispatches {unpad}->{pad}")
 
 
-def check_hypergrad(dump: dict, path: str) -> list[str]:
+def check_hypergrad(dump: dict, g: GateReport) -> None:
     """BENCH_hypergrad.json: measured accounting present on every row.
 
     Theorem-1/2 complexity claims hang off the *measured* per-call
     hvp/grad/hess counts; a row without them means the counting
     LinearOperator got bypassed.
     """
-    rows = _need(dump, "rows", path)
+    rows = g.need(dump, "rows")
+    if rows is _MISSING:
+        return
     if not rows:
-        raise GateFailure(f"{path}: no benchmark rows")
+        g.fail("no benchmark rows")
+        return
+    clean = True
     for row in rows:
         for field in ("hvp", "grad", "hess"):
             val = row.get(field)
             if not isinstance(val, (int, float)) or val < 0:
-                raise GateFailure(
-                    f"{path}: row {row.get('name', '?')!r} lacks a "
-                    f"measured {field!r} count (got {val!r})")
-    return [f"{len(rows)} rows carry hvp/grad/hess counts"]
+                g.fail(f"row {row.get('name', '?')!r} lacks a measured "
+                       f"{field!r} count (got {val!r})")
+                clean = False
+    if clean:
+        g.note(f"{len(rows)} rows carry hvp/grad/hess counts")
 
 
-def check_compression(dump: dict, path: str) -> list[str]:
+def check_compression(dump: dict, g: GateReport) -> None:
     """BENCH_compression.json: wire-traffic-per-stationarity gates.
 
     * ``bytes_reduction_sign1bit >= 8`` — sign1bit+EF must reach the
@@ -130,28 +171,25 @@ def check_compression(dump: dict, path: str) -> list[str]:
       compressor, same step count), the innovation/EF wire state ends
       strictly below the stateless quantizer.
     """
-    out = []
-    red = _need(dump, "bytes_reduction_sign1bit", path)
-    if not red >= 8.0:
-        raise GateFailure(
-            f"{path}: bytes_reduction_sign1bit={red:.2f} < 8")
-    out.append(f"bytes_reduction_sign1bit={red:.1f}x")
-    if _need(dump, "sign1bit_matched_stationarity", path) is not True:
-        raise GateFailure(
-            f"{path}: sign1bit run did not reach the reference "
-            f"stationarity (reduction measured at unmatched quality)")
-    out.append("sign1bit_matched_stationarity=True")
-    if _need(dump, "ef_beats_noef", path) is not True:
-        ef = dump.get("int8_ef_final_gap")
-        noef = dump.get("int8_noef_final_gap")
-        raise GateFailure(
-            f"{path}: EF did not beat stateless int8 at equal bit "
-            f"budget (EF {ef} vs no-EF {noef})")
-    out.append("ef_beats_noef=True")
-    return out
+    red = g.need(dump, "bytes_reduction_sign1bit")
+    if red is not _MISSING:
+        g.check(isinstance(red, (int, float)) and red >= 8.0,
+                f"bytes_reduction_sign1bit={red} < 8",
+                f"bytes_reduction_sign1bit={red:.1f}x"
+                if isinstance(red, (int, float)) else None)
+    g.true(dump, "sign1bit_matched_stationarity",
+           "sign1bit run did not reach the reference stationarity "
+           "(reduction measured at unmatched quality)")
+    ef = g.need(dump, "ef_beats_noef")
+    if ef is not _MISSING:
+        g.check(ef is True,
+                f"EF did not beat stateless int8 at equal bit budget "
+                f"(EF {dump.get('int8_ef_final_gap')} vs no-EF "
+                f"{dump.get('int8_noef_final_gap')})",
+                "ef_beats_noef=True")
 
 
-def check_topology(dump: dict, path: str) -> list[str]:
+def check_topology(dump: dict, g: GateReport) -> None:
     """BENCH_topology.json: time-varying topology gates.
 
     * ``static_bitwise_match`` — the explicit ``static`` process AND the
@@ -167,54 +205,59 @@ def check_topology(dump: dict, path: str) -> list[str]:
     * the ``gossip`` section carries the matched-bandwidth read-out
       (byte marks + both metrics at them).
     """
-    out = []
-    if _need(dump, "static_bitwise_match", path) is not True:
-        raise GateFailure(f"{path}: static_bitwise_match is not True")
-    out.append("static_bitwise_match=True")
-    factor = _need(dump, "p03_convergence_factor", path)
-    gate = _need(dump, "p03_gate_factor", path)
-    if not factor <= gate:
-        raise GateFailure(
-            f"{path}: p03_convergence_factor={factor:.3f} > {gate}")
-    out.append(f"p03_factor={factor:.2f}<={gate}")
-    lf = _need(dump, "link_failure", path)
-    if not lf:
-        raise GateFailure(f"{path}: no link_failure rows")
-    bytes_by_algo: dict[str, list[tuple[float, float]]] = {}
-    for row in lf:
-        gap = row.get("mean_spectral_gap")
-        if not isinstance(gap, (int, float)) or not 0.0 <= gap <= 1.0:
-            raise GateFailure(
-                f"{path}: row {row.get('name', '?')!r} lacks a valid "
-                f"mean_spectral_gap (got {gap!r})")
-        wb = row.get("wire_bytes_total")
-        if not isinstance(wb, (int, float)) or wb < 0:
-            raise GateFailure(
-                f"{path}: row {row.get('name', '?')!r} lacks nonnegative "
-                f"wire_bytes_total (got {wb!r})")
-        bytes_by_algo.setdefault(row["algo"], []).append(
-            (row["p"], float(wb)))
-    for algo, pairs in bytes_by_algo.items():
-        pairs.sort()
-        totals = [b for _, b in pairs]
-        if any(b > a for a, b in zip(totals, totals[1:])):
-            raise GateFailure(
-                f"{path}: wire bytes increase with drop rate for "
-                f"{algo!r}: {pairs}")
-    out.append(f"{len(lf)} link_failure rows carry gap+bytes columns")
-    gos = _need(dump, "gossip", path)
-    for row in gos:
-        for field in ("matched_bytes", "gossip_metric_at_matched_bytes",
-                      "static_metric_at_matched_bytes"):
-            if not row.get(field):
-                raise GateFailure(
-                    f"{path}: gossip row {row.get('name', '?')!r} lacks "
-                    f"the matched-bandwidth field {field!r}")
-    out.append(f"{len(gos)} gossip rows carry matched-bandwidth read-out")
-    return out
+    g.true(dump, "static_bitwise_match")
+    factor = g.need(dump, "p03_convergence_factor")
+    gate = g.need(dump, "p03_gate_factor")
+    if factor is not _MISSING and gate is not _MISSING:
+        g.check(factor <= gate,
+                f"p03_convergence_factor={factor:.3f} > {gate}",
+                f"p03_factor={factor:.2f}<={gate}")
+    lf = g.need(dump, "link_failure")
+    if lf is not _MISSING:
+        if not lf:
+            g.fail("no link_failure rows")
+        bytes_by_algo: dict[str, list[tuple[float, float]]] = {}
+        clean = bool(lf)
+        for row in lf:
+            gap = row.get("mean_spectral_gap")
+            if not isinstance(gap, (int, float)) or not 0.0 <= gap <= 1.0:
+                g.fail(f"row {row.get('name', '?')!r} lacks a valid "
+                       f"mean_spectral_gap (got {gap!r})")
+                clean = False
+            wb = row.get("wire_bytes_total")
+            if not isinstance(wb, (int, float)) or wb < 0:
+                g.fail(f"row {row.get('name', '?')!r} lacks nonnegative "
+                       f"wire_bytes_total (got {wb!r})")
+                clean = False
+                continue
+            bytes_by_algo.setdefault(row["algo"], []).append(
+                (row["p"], float(wb)))
+        for algo, pairs in bytes_by_algo.items():
+            pairs.sort()
+            totals = [b for _, b in pairs]
+            if any(b > a for a, b in zip(totals, totals[1:])):
+                g.fail(f"wire bytes increase with drop rate for "
+                       f"{algo!r}: {pairs}")
+                clean = False
+        if clean:
+            g.note(f"{len(lf)} link_failure rows carry gap+bytes columns")
+    gos = g.need(dump, "gossip")
+    if gos is not _MISSING:
+        clean = True
+        for row in gos:
+            for field in ("matched_bytes",
+                          "gossip_metric_at_matched_bytes",
+                          "static_metric_at_matched_bytes"):
+                if not row.get(field):
+                    g.fail(f"gossip row {row.get('name', '?')!r} lacks "
+                           f"the matched-bandwidth field {field!r}")
+                    clean = False
+        if clean:
+            g.note(f"{len(gos)} gossip rows carry matched-bandwidth "
+                   f"read-out")
 
 
-def check_byzantine(dump: dict, path: str) -> list[str]:
+def check_byzantine(dump: dict, g: GateReport) -> None:
     """BENCH_byzantine.json: Byzantine-resilience gates.
 
     * ``weighted_zero_bitwise`` — the Byzantine subsystem configured
@@ -233,50 +276,48 @@ def check_byzantine(dump: dict, path: str) -> list[str]:
       ``sweep(..., pad_agents=True)``: attack values batch as vmap
       operands, never as trace constants.
     """
-    out = []
-    if _need(dump, "weighted_zero_bitwise", path) is not True:
-        raise GateFailure(f"{path}: weighted_zero_bitwise is not True")
-    out.append("weighted_zero_bitwise=True")
-    factor = _need(dump, "trimmed_f1_factor", path)
-    gate = _need(dump, "trimmed_gate_factor", path)
-    if not factor <= gate:
-        raise GateFailure(
-            f"{path}: trimmed_f1_factor={factor:.3f} > {gate}")
-    out.append(f"trimmed_f1_factor={factor:.2f}<={gate}")
-    wf = _need(dump, "weighted_attacked_factor", path)
-    div = _need(dump, "weighted_diverge_factor", path)
-    if not wf >= div:
-        raise GateFailure(
-            f"{path}: weighted_attacked_factor={wf:.3f} < {div} — the "
-            f"attack did not break the unprotected baseline")
-    out.append(f"weighted_attacked_factor={wf:.1f}>={div}")
-    if _need(dump, "single_dispatch_grids", path) is not True:
-        raise GateFailure(
-            f"{path}: an attack grid split into multiple dispatches "
-            f"under pad_agents=True")
-    out.append("single_dispatch_grids=True")
-    grids = _need(dump, "grids", path)
-    if not grids:
-        raise GateFailure(f"{path}: no attack-grid rows")
-    for row in grids:
-        finals = row.get("finals_by_nb")
-        if not finals:
-            raise GateFailure(
-                f"{path}: grid {row.get('name', '?')!r} lacks "
-                f"finals_by_nb")
-    out.append(f"{len(grids)} attack grids carry finals_by_nb")
-    guard = _need(dump, "guard", path)
-    for row in guard:
-        for field in ("tripped_steps", "last_good_step"):
-            if not isinstance(row.get(field), int):
-                raise GateFailure(
-                    f"{path}: guard row {row.get('algo', '?')!r} lacks "
-                    f"an integer {field!r} (got {row.get(field)!r})")
-    out.append(f"{len(guard)} guard rows carry detection counters")
-    return out
+    g.true(dump, "weighted_zero_bitwise")
+    factor = g.need(dump, "trimmed_f1_factor")
+    gate = g.need(dump, "trimmed_gate_factor")
+    if factor is not _MISSING and gate is not _MISSING:
+        g.check(factor <= gate,
+                f"trimmed_f1_factor={factor:.3f} > {gate}",
+                f"trimmed_f1_factor={factor:.2f}<={gate}")
+    wf = g.need(dump, "weighted_attacked_factor")
+    div = g.need(dump, "weighted_diverge_factor")
+    if wf is not _MISSING and div is not _MISSING:
+        g.check(wf >= div,
+                f"weighted_attacked_factor={wf:.3f} < {div} — the attack "
+                f"did not break the unprotected baseline",
+                f"weighted_attacked_factor={wf:.1f}>={div}")
+    g.true(dump, "single_dispatch_grids",
+           "an attack grid split into multiple dispatches under "
+           "pad_agents=True")
+    grids = g.need(dump, "grids")
+    if grids is not _MISSING:
+        if not grids:
+            g.fail("no attack-grid rows")
+        clean = bool(grids)
+        for row in grids:
+            if not row.get("finals_by_nb"):
+                g.fail(f"grid {row.get('name', '?')!r} lacks finals_by_nb")
+                clean = False
+        if clean:
+            g.note(f"{len(grids)} attack grids carry finals_by_nb")
+    guard = g.need(dump, "guard")
+    if guard is not _MISSING:
+        clean = True
+        for row in guard:
+            for field in ("tripped_steps", "last_good_step"):
+                if not isinstance(row.get(field), int):
+                    g.fail(f"guard row {row.get('algo', '?')!r} lacks an "
+                           f"integer {field!r} (got {row.get(field)!r})")
+                    clean = False
+        if clean:
+            g.note(f"{len(guard)} guard rows carry detection counters")
 
 
-def check_resilience(dump: dict, path: str) -> list[str]:
+def check_resilience(dump: dict, g: GateReport) -> None:
     """BENCH_resilience.json: fault-tolerance gates (docs/RESILIENCE.md).
 
     * ``resume_bitwise`` — every kill/resume case (all four registry
@@ -292,43 +333,129 @@ def check_resilience(dump: dict, path: str) -> list[str]:
       intervention and its final eq.-11 metric matches the fault-free
       run.
     """
-    out = []
-    if _need(dump, "resume_bitwise", path) is not True:
-        raise GateFailure(f"{path}: resume_bitwise is not True")
-    cases = _need(dump, "resume_cases", path)
-    if len(cases) < 5:
-        raise GateFailure(
-            f"{path}: only {len(cases)} resume cases (need the four "
-            f"registry algorithms plus a compressed+EF config)")
-    for case in cases:
-        if case.get("bitwise") is not True:
-            raise GateFailure(
-                f"{path}: resume case {case.get('name', '?')!r} is not "
-                f"bitwise")
-    out.append(f"resume_bitwise=True over {len(cases)} cases")
-    overhead = _need(dump, "checkpoint_overhead_pct", path)
-    gate = _need(dump, "overhead_gate_pct", path)
-    if not overhead <= gate:
-        raise GateFailure(
-            f"{path}: checkpoint_overhead_pct={overhead:.2f} > {gate}")
-    out.append(f"checkpoint_overhead={overhead:.1f}%<={gate:.0f}%")
-    if _need(dump, "chaos_completed", path) is not True:
-        raise GateFailure(f"{path}: chaos campaign did not complete")
-    if _need(dump, "chaos_matched_stationarity", path) is not True:
+    g.true(dump, "resume_bitwise")
+    cases = g.need(dump, "resume_cases")
+    if cases is not _MISSING:
+        if len(cases) < 5:
+            g.fail(f"only {len(cases)} resume cases (need the four "
+                   f"registry algorithms plus a compressed+EF config)")
+        clean = True
+        for case in cases:
+            if case.get("bitwise") is not True:
+                g.fail(f"resume case {case.get('name', '?')!r} is not "
+                       f"bitwise")
+                clean = False
+        if clean and len(cases) >= 5:
+            g.note(f"resume_bitwise over {len(cases)} cases")
+    overhead = g.need(dump, "checkpoint_overhead_pct")
+    gate = g.need(dump, "overhead_gate_pct")
+    if overhead is not _MISSING and gate is not _MISSING:
+        g.check(overhead <= gate,
+                f"checkpoint_overhead_pct={overhead:.2f} > {gate}",
+                f"checkpoint_overhead={overhead:.1f}%<={gate:.0f}%")
+    g.true(dump, "chaos_completed", "chaos campaign did not complete")
+    if g.need(dump, "chaos_matched_stationarity") not in (_MISSING, True):
         chaos = dump.get("chaos", {})
-        raise GateFailure(
-            f"{path}: chaos final metric {chaos.get('final_metric')} "
-            f"does not match the fault-free final "
-            f"{chaos.get('clean_final')}")
-    chaos = _need(dump, "chaos", path)
-    if not chaos.get("kills", 0) >= 3:
-        raise GateFailure(
-            f"{path}: chaos campaign survived only "
-            f"{chaos.get('kills')} kills (need >= 3 kill/resume cycles)")
-    out.append(
-        f"chaos completed: {chaos.get('kills')} kills, "
-        f"{chaos.get('restarts')} restarts, matched stationarity")
-    return out
+        g.fail(f"chaos final metric {chaos.get('final_metric')} does not "
+               f"match the fault-free final {chaos.get('clean_final')}")
+    chaos = g.need(dump, "chaos")
+    if chaos is not _MISSING:
+        g.check(chaos.get("kills", 0) >= 3,
+                f"chaos campaign survived only {chaos.get('kills')} kills "
+                f"(need >= 3 kill/resume cycles)",
+                f"chaos completed: {chaos.get('kills')} kills, "
+                f"{chaos.get('restarts')} restarts")
+
+
+def check_complexity(dump: dict, g: GateReport) -> None:
+    """BENCH_complexity.json: measured-communication columns present.
+
+    Every Table-1 row must carry the ``measured_wire_bytes`` /
+    ``round_latency_us`` columns (CommsLedger + timed consensus round —
+    consensus/ledger.py).  ``null`` is legal — a backend that records or
+    times nothing — but an absent key means the bench stopped
+    measuring.
+    """
+    rows = g.need(dump, "rows")
+    if rows is _MISSING:
+        return
+    if not rows:
+        g.fail("no benchmark rows")
+        return
+    clean = True
+    for row in rows:
+        for field in ("measured_wire_bytes", "round_latency_us"):
+            if field not in row:
+                g.fail(f"row {row.get('name', '?')!r} lacks the "
+                       f"{field!r} column")
+                clean = False
+                continue
+            val = row[field]
+            if val is not None and (not isinstance(val, (int, float))
+                                    or val < 0):
+                g.fail(f"row {row.get('name', '?')!r} has invalid "
+                       f"{field}={val!r}")
+                clean = False
+    if clean:
+        g.note(f"{len(rows)} rows carry measured wire bytes + latency")
+
+
+def check_distributed(dump: dict, g: GateReport) -> None:
+    """BENCH_distributed.json: real multi-process launch gates.
+
+    * measured-vs-priced ratio within ``ratio_band`` (10%) of 1 for the
+      ``none`` / ``int8`` / ``sign1bit`` compressors on the allgather
+      backend (broadcast model), and for ppermute against its per-link
+      unicast model — the CommsLedger agrees with the analytic pricing.
+    * ``single_process_bitwise`` — the 1-process mesh run with the
+      distributed runtime matches the no-runtime baseline digest.
+    * ``two_process.stationarity_matched`` — the 2-process launch
+      reaches the 1-process eq.-11 stationarity within ``match_tol``.
+    * measured ``round_latency_us`` is present and positive.
+    """
+    band = dump.get("ratio_band", 0.10)
+    lo, hi = 1.0 - band, 1.0 + band
+    rows = g.need(dump, "measured_vs_priced")
+    if rows is not _MISSING:
+        kinds = {row.get("kind") for row in rows}
+        for want in ("none", "int8", "sign1bit"):
+            if want not in kinds:
+                g.fail(f"no measured-vs-priced row for compressor "
+                       f"{want!r}")
+        clean = True
+        for row in rows:
+            ratio = row.get("ratio")
+            if not isinstance(ratio, (int, float)) or not lo <= ratio <= hi:
+                g.fail(f"{row.get('kind', '?')}: measured/priced "
+                       f"ratio={ratio!r} outside [{lo:.2f}, {hi:.2f}]")
+                clean = False
+        if clean and kinds >= {"none", "int8", "sign1bit"}:
+            g.note(f"{len(rows)} compressors measured within "
+                   f"{100 * band:.0f}% of priced")
+    pp = g.need(dump, "ppermute")
+    if pp is not _MISSING:
+        ratio = pp.get("ratio")
+        g.check(isinstance(ratio, (int, float)) and lo <= ratio <= hi,
+                f"ppermute measured/per-link ratio={ratio!r} outside "
+                f"[{lo:.2f}, {hi:.2f}]",
+                f"ppermute per-link ratio={ratio:.3f}"
+                if isinstance(ratio, (int, float)) else None)
+    g.true(dump, "single_process_bitwise",
+           "1-process initialized run is not bitwise vs the no-runtime "
+           "baseline")
+    two = g.need(dump, "two_process")
+    if two is not _MISSING:
+        g.check(two.get("stationarity_matched") is True,
+                f"2-process final metric {two.get('final_metric')} did "
+                f"not match the baseline {two.get('baseline_final_metric')} "
+                f"(rel diff {two.get('rel_diff')})",
+                f"2-process stationarity matched "
+                f"(rel diff {two.get('rel_diff', 0):.1e})")
+        lat = two.get("round_latency_us")
+        g.check(isinstance(lat, (int, float)) and lat > 0,
+                f"2-process round_latency_us={lat!r} is not positive",
+                f"round_latency_us={lat:.0f}"
+                if isinstance(lat, (int, float)) else None)
 
 
 # Known dumps: file name -> validator.  Every generator in benchmarks/
@@ -341,58 +468,89 @@ GATES = {
     "BENCH_topology.json": check_topology,
     "BENCH_byzantine.json": check_byzantine,
     "BENCH_resilience.json": check_resilience,
+    "BENCH_complexity.json": check_complexity,
+    "BENCH_distributed.json": check_distributed,
 }
 
 
+def _print_summary(reports: list[tuple[str, str, int]]) -> None:
+    """The per-gate summary table: dump, status, tripped-gate count."""
+    width = max(len(name) for name, _, _ in reports)
+    print("\nper-gate summary:")
+    print(f"  {'gate'.ljust(width)}  status  failures")
+    for name, status, count in reports:
+        print(f"  {name.ljust(width)}  {status:<6}  {count}")
+
+
 def run_gates(json_dir: str, allow_missing: bool = False) -> int:
-    """Validate every dump in ``json_dir``; returns the failure count."""
+    """Validate every dump in ``json_dir``; returns the failure count.
+
+    Each validator collects ALL its tripped gates; the report lists
+    every failure and closes with a per-gate summary table.
+    """
     failures = 0
     seen = set()
+    summary: list[tuple[str, str, int]] = []
     for name in sorted(GATES):
         path = os.path.join(json_dir, name)
         if not os.path.exists(path):
-            msg = f"MISSING {path}"
             if allow_missing:
-                print(f"skip: {msg}")
+                print(f"skip: MISSING {path}")
+                summary.append((name, "skip", 0))
                 continue
-            print(f"FAIL: {msg} (pass --allow-missing for partial runs)")
+            print(f"FAIL: MISSING {path} (pass --allow-missing for "
+                  f"partial runs)")
             failures += 1
+            summary.append((name, "FAIL", 1))
             continue
         seen.add(os.path.abspath(path))
+        g = GateReport(name)
         try:
             with open(path) as fh:
                 dump = json.load(fh)
-            notes = GATES[name](dump, name)
-            print(f"ok: {name}: " + "; ".join(notes))
-        except MissingGateField as exc:
-            # BENCH_sweep.json is rewritten after every contributing
-            # suite, so a partial run legitimately lacks the headline
-            # fields of the suites that didn't run.
-            if allow_missing:
-                print(f"skip: {exc} (partial run)")
-            else:
-                print(f"FAIL: {exc}")
-                failures += 1
-        except GateFailure as exc:
-            print(f"FAIL: {exc}")
-            failures += 1
-        except (OSError, json.JSONDecodeError, TypeError) as exc:
-            print(f"FAIL: {name}: unreadable dump ({exc})")
-            failures += 1
+            GATES[name](dump, g)
+        except (OSError, json.JSONDecodeError) as exc:
+            g.fail(f"unreadable dump ({exc})")
+        except Exception as exc:  # validator crash = a failed gate, but
+            g.fail(f"validator crashed: {exc!r}")  # keep checking others
+        # Missing headline fields: a partial run legitimately lacks the
+        # fields of the suites that didn't run (BENCH_sweep.json is
+        # rewritten after every contributing suite).
+        missing_fail = 0 if allow_missing else len(g.missing)
+        for msg in g.missing:
+            tag = "skip" if allow_missing else "FAIL"
+            print(f"{tag}: {name}: {msg}"
+                  + (" (partial run)" if allow_missing else ""))
+        for msg in g.failures:
+            print(f"FAIL: {name}: {msg}")
+        count = len(g.failures) + missing_fail
+        failures += count
+        if count:
+            summary.append((name, "FAIL", count))
+        else:
+            status = "skip" if (g.missing and allow_missing
+                                and not g.notes) else "ok"
+            summary.append((name, status, 0))
+            if g.notes:
+                print(f"ok: {name}: " + "; ".join(g.notes))
 
     for path in sorted(glob.glob(os.path.join(json_dir, "BENCH_*.json"))):
         if os.path.abspath(path) in seen:
             continue
         base = os.path.basename(path)
         if base in GATES:
-            continue  # already reported missing/failed above
+            continue  # already reported missing above
         try:
             with open(path) as fh:
                 json.load(fh)
             print(f"ok: {base}: no registered gate, parses")
+            summary.append((base, "ok", 0))
         except (OSError, json.JSONDecodeError) as exc:
             print(f"FAIL: {base}: unreadable dump ({exc})")
             failures += 1
+            summary.append((base, "FAIL", 1))
+    if summary:
+        _print_summary(summary)
     return failures
 
 

@@ -19,6 +19,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
   resilience  fault tolerance: kill/resume bitwise parity, checkpoint
          overhead, chaos-campaign recovery
          (+ BENCH_resilience.json dump, see benchmarks.check_gates)
+  distributed  real multi-process launches (scripts/launch_local.py):
+         measured vs priced bytes-on-wire per compressor, 1-process
+         bitwise parity with/without the distributed runtime, 2-process
+         matched stationarity, round latency
+         (+ BENCH_distributed.json dump, see benchmarks.check_gates)
   roofline dry-run derived roofline terms (if dry-run artifacts exist)
 
 The figure suites (fig2/fig4/fig5) run their seed x config grids through
@@ -46,15 +51,16 @@ import traceback
 
 SUITE_NAMES = ("fig2", "fig4", "fig5", "table1", "compression",
                "hypergrad", "kernels", "topology", "byzantine",
-               "resilience", "roofline")
+               "resilience", "distributed", "roofline")
 
 
 def _suite_fn(name: str):
     from benchmarks import (bench_byzantine, bench_complexity,
                             bench_compression, bench_connectivity,
-                            bench_convergence, bench_hypergrad,
-                            bench_kernels, bench_lr, bench_resilience,
-                            bench_topology, roofline_report)
+                            bench_convergence, bench_distributed,
+                            bench_hypergrad, bench_kernels, bench_lr,
+                            bench_resilience, bench_topology,
+                            roofline_report)
     return {
         "fig2": bench_convergence.run,
         "fig4": bench_connectivity.run,
@@ -66,6 +72,7 @@ def _suite_fn(name: str):
         "topology": bench_topology.run,
         "byzantine": bench_byzantine.run,
         "resilience": bench_resilience.run,
+        "distributed": bench_distributed.run,
         "roofline": roofline_report.run,
     }[name]
 

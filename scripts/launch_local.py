@@ -1,0 +1,188 @@
+#!/usr/bin/env python
+"""Localhost multi-process launcher for the Section-6 mesh runner.
+
+Spawns N worker processes of this same script, each a jax process with K
+forced host devices, wires them to one coordinator, and runs
+``repro.launch.distributed.run_section6`` in lockstep — a real
+``jax.distributed`` run (gloo CPU collectives) on one machine:
+
+    python scripts/launch_local.py --processes 2 --devices-per-process 4 \\
+        --agents 8 --steps 30 --backend allgather --out result.json
+
+Process 0 writes the JSON result (final eq.-11 stationarity, metric
+trace, measured vs priced wire bytes, round latency, state digest); the
+driver prints it.  ``--skip-init`` runs a plain single-process baseline
+with NO distributed runtime — the bitwise reference the
+``check_distributed`` gate compares a 1-process initialized run against.
+
+The driver itself never imports jax: platform/device env vars must be
+set before any jax import, so they are exported into the worker
+environment (JAX_PLATFORMS=cpu, XLA_FLAGS=--xla_force_host_platform_
+device_count=K, REPRO_COORDINATOR / REPRO_NUM_PROCESSES /
+REPRO_PROCESS_ID — see docs/DISTRIBUTED.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--devices-per-process", type=int, default=4)
+    ap.add_argument("--agents", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--record-every", type=int, default=10)
+    ap.add_argument("--backend", default="allgather",
+                    choices=("allgather", "ppermute"))
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "int8", "sign1bit"))
+    ap.add_argument("--compress-after", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-per-agent", type=int, default=80)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--beta", type=float, default=0.1)
+    ap.add_argument("--metric-inner-steps", type=int, default=120)
+    ap.add_argument("--out", default=None,
+                    help="JSON result path (default: temp file, printed)")
+    ap.add_argument("--timeout", type=float, default=900.0,
+                    help="per-worker wall-clock limit, seconds")
+    ap.add_argument("--skip-init", action="store_true",
+                    help="single-process baseline without "
+                         "jax.distributed.initialize (requires "
+                         "--processes 1)")
+    # worker-only internals (the driver spawns itself with these)
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--process-id", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--coordinator", default=None, help=argparse.SUPPRESS)
+    return ap.parse_args(argv)
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def worker(args) -> None:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.launch import distributed as D
+
+    if not args.skip_init:
+        D.initialize(D.DistributedConfig(
+            coordinator=args.coordinator,
+            num_processes=args.processes,
+            process_id=args.process_id))
+    compression = None
+    if args.compression != "none":
+        from repro.consensus import CompressionConfig
+        compression = CompressionConfig(kind=args.compression,
+                                        compress_after=args.compress_after)
+    import jax
+    result = D.run_section6(
+        num_agents=args.agents, num_steps=args.steps,
+        record_every=args.record_every, backend=args.backend,
+        compression=compression, seed=args.seed,
+        n_per_agent=args.n_per_agent, alpha=args.alpha, beta=args.beta,
+        metric_inner_steps=args.metric_inner_steps)
+    result["skip_init"] = bool(args.skip_init)
+    if jax.process_index() == 0:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    if not args.skip_init:
+        D.shutdown()
+
+
+def main() -> int:
+    args = parse_args()
+    if args.worker:
+        worker(args)
+        return 0
+
+    if args.skip_init and args.processes != 1:
+        raise SystemExit("--skip-init is the single-process baseline: "
+                         "pass --processes 1 with it")
+    out = args.out or os.path.join(tempfile.mkdtemp(prefix="launch_local_"),
+                                   "result.json")
+    coordinator = f"127.0.0.1:{_free_port()}"
+
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                        f"{args.devices_per_process}")
+    src = os.path.join(REPO, "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    env[D_ENV_COORD] = coordinator
+    env[D_ENV_NPROC] = str(args.processes)
+
+    passthrough = [
+        "--processes", str(args.processes),
+        "--devices-per-process", str(args.devices_per_process),
+        "--agents", str(args.agents),
+        "--steps", str(args.steps),
+        "--record-every", str(args.record_every),
+        "--backend", args.backend,
+        "--compression", args.compression,
+        "--compress-after", str(args.compress_after),
+        "--seed", str(args.seed),
+        "--n-per-agent", str(args.n_per_agent),
+        "--alpha", str(args.alpha),
+        "--beta", str(args.beta),
+        "--metric-inner-steps", str(args.metric_inner_steps),
+        "--out", out,
+    ]
+    if args.skip_init:
+        passthrough.append("--skip-init")
+
+    procs = []
+    for pid in range(args.processes):
+        wenv = dict(env)
+        wenv[D_ENV_PID] = str(pid)
+        procs.append(subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--worker",
+             "--process-id", str(pid), "--coordinator", coordinator,
+             *passthrough],
+            env=wenv))
+
+    failed = []
+    try:
+        for pid, proc in enumerate(procs):
+            rc = proc.wait(timeout=args.timeout)
+            if rc != 0:
+                failed.append((pid, rc))
+    finally:
+        for proc in procs:
+            if proc.poll() is None:
+                proc.kill()
+    if failed:
+        for pid, rc in failed:
+            print(f"worker {pid} exited {rc}", file=sys.stderr)
+        return 1
+
+    with open(out) as f:
+        result = json.load(f)
+    print(json.dumps(result, indent=1))
+    if args.out is None:
+        print(f"\n(result written to {out})", file=sys.stderr)
+    return 0
+
+
+# env-var names mirrored from repro.launch.distributed WITHOUT importing
+# it here: the driver process must stay jax-free
+D_ENV_COORD = "REPRO_COORDINATOR"
+D_ENV_NPROC = "REPRO_NUM_PROCESSES"
+D_ENV_PID = "REPRO_PROCESS_ID"
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,29 +17,45 @@ from repro.consensus.compress import (
 from repro.consensus.engine import (
     BACKENDS,
     ConsensusEngine,
+    MeshBackendMixin,
     as_engine,
     consensus_descent_and_track,
     make_engine,
+    register_backend,
+)
+from repro.consensus.ledger import (
+    CommsLedger,
+    StreamRecord,
+    attach_ledger,
+    time_round_us,
 )
 
 __all__ = [
+    "AllGatherEngine",
     "BACKENDS",
     "COMPRESSORS",
+    "CommsLedger",
     "CompressionConfig",
     "Compressor",
     "ConsensusEngine",
     "DenseEngine",
+    "MeshBackendMixin",
     "PallasEngine",
     "PermuteEngine",
+    "StreamRecord",
     "as_engine",
+    "attach_ledger",
     "consensus_descent_and_track",
     "cumulative_wire_bytes",
     "init_ef",
     "make_compressor",
     "make_engine",
+    "register_backend",
+    "time_round_us",
 ]
 
 _LAZY_BACKENDS = {
+    "AllGatherEngine": "repro.consensus.allgather",
     "DenseEngine": "repro.consensus.dense",
     "PallasEngine": "repro.consensus.pallas",
     "PermuteEngine": "repro.consensus.ppermute",

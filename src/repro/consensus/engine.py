@@ -47,6 +47,15 @@ Backends (see ``make_engine``):
               single host, the m-agent simulator's hot loop.
     ppermute  per-offset ``lax.ppermute`` schedule — any sparse symmetric
               topology, runs inside ``shard_map`` on the device mesh.
+    allgather dense combine inside ``shard_map`` — ``lax.all_gather``
+              the peer rows, dot the local rows of the full matrix; any
+              topology (including traced matrix streams) on the mesh.
+
+``register_backend`` is the extension point: a fifth backend is one
+decorated factory.  Engines optionally carry a ``CommsLedger``
+(``repro.consensus.ledger``) that records *measured* per-round wire
+bytes at trace time — ``attach_ledger(engine, ...)`` before building
+the step.
 
 ``consensus_descent_and_track`` is the shared step-core: the full Steps
 1-3 skeleton (consensus + descent, local gradients via a callback,
@@ -66,8 +75,8 @@ from repro.byzantine import (ByzantineConfig, apply_attack, byzantine_mask,
 from repro.consensus.compress import CompressionConfig, make_compressor
 
 __all__ = [
-    "ConsensusEngine", "as_engine", "make_engine", "BACKENDS",
-    "consensus_descent_and_track",
+    "ConsensusEngine", "MeshBackendMixin", "as_engine", "make_engine",
+    "register_backend", "BACKENDS", "consensus_descent_and_track",
 ]
 
 
@@ -92,6 +101,11 @@ class ConsensusEngine:
     # ghost-pad active-agent count (padded sweeps install a traced value
     # so the Byzantine mask never selects a ghost slot); None = all m.
     num_active = None
+
+    # measured-communication ledger (repro.consensus.ledger), installed
+    # by ``attach_ledger`` BEFORE the step is traced; None = no
+    # accounting, zero trace cost.
+    ledger = None
 
     def _configure_wire(self, compression: CompressionConfig | None = None,
                         communication_interval: int = 1,
@@ -225,6 +239,30 @@ class ConsensusEngine:
                 "via engine.topology_matrix(t) and pass matrix=)")
         return self.topology.matrix_at(t, tree)
 
+    # -- measured wire accounting (repro.consensus.ledger) ----------------
+
+    def _ledger_note(self, stream: str, tree) -> None:
+        """Record ``stream``'s per-round wire template on the ledger.
+
+        Called at trace time from every combine entry point; a python
+        no-op (zero trace cost) without an attached ledger.  The matrix
+        backends ship ONE concatenated per-agent buffer per stream per
+        round — exactly what ``bytes_on_wire`` prices — so measured and
+        priced bytes agree bit for bit here; ppermute overrides this
+        with its per-leaf x permute-rounds template.
+        """
+        led = self.ledger
+        if led is None:
+            return
+        from repro.consensus.ledger import StreamRecord
+        leaves = jax.tree_util.tree_leaves(tree)
+        m = int(leaves[0].shape[0]) if leaves[0].ndim else 1
+        size = sum(int(l.size) for l in leaves) // max(1, m)
+        led.note(stream, StreamRecord(
+            op=self.name, entries=size,
+            wire_bytes=int(self.compressor.bytes_on_wire(size)),
+            full_bytes=4 * size, collectives=1))
+
     # -- the wire path: EF compression + warmup + interval ----------------
 
     def _self_weights(self, matrix=None) -> jax.Array:
@@ -339,6 +377,7 @@ class ConsensusEngine:
         """
         if matrix is None:
             matrix = self.topology_matrix(t, tree)
+        self._ledger_note(stream, tree)
         sent = self._attack_payload(tree, t, stream)
         if self.compression.active:
             payload, ef_new = self._compress_payload(sent, ef, t)
@@ -400,6 +439,8 @@ class ConsensusEngine:
                 u, None if ef is None else ef.get("u"), t,
                 matrix=matrix, agent_index=agent_index, stream="u")
         else:
+            self._ledger_note("x", x)
+            self._ledger_note("u", u)
             x_mixed = self.mix(x, matrix=matrix, dp_key=dp_key,
                                agent_index=agent_index)
             u_mixed = self.mix(u, matrix=matrix, agent_index=agent_index)
@@ -414,6 +455,64 @@ class ConsensusEngine:
             return x_new, u_new
         ef_new = None if ef is None else {"x": ef_x, "u": ef_u}
         return x_new, u_new, ef_new
+
+
+class MeshBackendMixin:
+    """Shared helpers for backends that run *inside* ``shard_map``.
+
+    Mesh backends (ppermute, allgather) see only the local agent's slice
+    (leading local dim) and must recover global slot identities from the
+    mesh axes — for Byzantine masks/keys that have to match the dense
+    reference bitwise, and for slicing the local rows of a full mixing
+    matrix.  Requires ``self.agent_axes`` and the usual wire attributes
+    from ``_configure_wire``; ``_mesh_num_agents`` supplies the global
+    agent count (schedule / matrix dependent).
+    """
+
+    @property
+    def _mesh_num_agents(self) -> int:
+        raise NotImplementedError
+
+    def _axis_agent_index(self):
+        """This shard's position along the (flattened) agent axes."""
+        idx = jnp.int32(0)
+        for ax in self.agent_axes:
+            idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+        return idx
+
+    def _local_slots(self, tree, agent_index):
+        """Global slot ids of this shard's rows (leading local dim)."""
+        rows = jax.tree_util.tree_leaves(tree)[0].shape[0]
+        if agent_index is None:
+            idx = self._axis_agent_index()
+        else:
+            idx = jnp.asarray(agent_index, jnp.int32)
+        return idx * rows + jnp.arange(rows, dtype=jnp.int32)
+
+    def _attack_local(self, tree, t, stream, agent_index):
+        """The local-slice form of the base ``_attack_payload``.
+
+        The mask and per-slot keys are derived from *global* slot ids,
+        so the corrupted payload matches the dense reference bitwise
+        (under the exact ``none`` compressor).  Expects the standard
+        leading local agent dim on every leaf.
+        """
+        byz = self.byzantine
+        if not byz.attack_active:
+            return tree
+        attack = make_attack(byz.kind)
+        if stream not in attack.streams:
+            return tree
+        vals = self.byz_values
+        mask = byzantine_mask(vals["key"], self._mesh_num_agents,
+                              vals["num_byzantine"],
+                              num_active=self.num_active)
+        slots = self._local_slots(tree, agent_index)
+        key_t = jax.random.fold_in(
+            jax.random.fold_in(vals["key"], _STREAM_IDS[stream]),
+            self._require_t(t))
+        return apply_attack(attack, tree, mask[slots], key_t,
+                            vals["scale"], slots=slots)
 
 
 def _split_points(sizes):
@@ -481,26 +580,55 @@ def consensus_descent_and_track(
     return x_new, y_new, u_new, v_new, p_new, ef_new, aux
 
 
+# Backend registry: name -> factory(mixing, **opts).  Factories import
+# their engine module lazily (PEP-562 in the package __init__) so pulling
+# in repro.core never loads the pallas extras or the sharding collectives.
+BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a consensus-backend factory under ``name``.
+
+    The factory signature is ``factory(mixing, **opts) ->
+    ConsensusEngine``; ``make_engine`` resolves names through this
+    registry, so adding a backend is one decorated factory — no edits to
+    the engine module required (the in-repo backends register here only
+    to keep their imports lazy).
+    """
+
+    def deco(factory: Callable) -> Callable:
+        existing = BACKENDS.get(name)
+        if existing is not None and existing is not factory:
+            raise ValueError(f"consensus backend {name!r} already "
+                             f"registered ({existing!r})")
+        BACKENDS[name] = factory
+        return factory
+
+    return deco
+
+
+@register_backend("dense")
 def _make_dense(mixing, **opts):
     from repro.consensus.dense import DenseEngine
     return DenseEngine(mixing, **opts)
 
 
+@register_backend("pallas")
 def _make_pallas(mixing, **opts):
     from repro.consensus.pallas import PallasEngine
     return PallasEngine(mixing, **opts)
 
 
+@register_backend("ppermute")
 def _make_ppermute(mixing, **opts):
     from repro.consensus.ppermute import PermuteEngine
     return PermuteEngine(mixing, **opts)
 
 
-BACKENDS = {
-    "dense": _make_dense,
-    "pallas": _make_pallas,
-    "ppermute": _make_ppermute,
-}
+@register_backend("allgather")
+def _make_allgather(mixing, **opts):
+    from repro.consensus.allgather import AllGatherEngine
+    return AllGatherEngine(mixing, **opts)
 
 
 def make_engine(backend: str, mixing, **opts) -> ConsensusEngine:
@@ -508,9 +636,9 @@ def make_engine(backend: str, mixing, **opts) -> ConsensusEngine:
 
     ``mixing`` is a ``MixingSpec`` or a raw (m, m) matrix.  Backend
     options: ``block_d``/``interpret`` (pallas), ``agent_axes``/
-    ``compress``/``dp_sigma`` (ppermute); every backend additionally
-    accepts ``compression``/``communication_interval``/``byzantine``
-    wire options.
+    ``compress``/``dp_sigma`` (ppermute), ``agent_axes`` (allgather);
+    every backend additionally accepts ``compression``/
+    ``communication_interval``/``byzantine`` wire options.
     """
     try:
         factory = BACKENDS[backend]

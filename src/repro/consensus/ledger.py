@@ -1,0 +1,174 @@
+"""CommsLedger: *measured* bytes-on-wire and per-round latency.
+
+The repo prices communication analytically — ``engine.bytes_on_wire``
+per combine, ``cumulative_wire_bytes`` for a schedule — but a priced
+model can silently drift from what the program actually ships.  The
+ledger closes that loop: an engine with ``engine.ledger`` set records,
+**at trace time**, the payload dtypes/shapes of every wire stream that
+actually crosses the mesh axis (one ``StreamRecord`` per stream: the
+``x`` and ``u`` consensus streams of the tracking algorithms, just
+``x`` for D-SGD), and the host commits the engine's deterministic
+schedule afterwards:
+
+    ledger = attach_ledger(engine, CommsLedger())
+    ... trace/run the solver step ...          # records stream templates
+    ledger.commit_steps(num_steps)             # applies warmup/interval
+    ledger.measured_wire_bytes                 # per-agent bytes shipped
+
+Trace-time capture is exact because the wire is static: the compression
+schedule (warmup for ``t < compress_after``, silence when ``t %
+interval != 0``) is a pure function of the step index, realised as
+``jnp.where`` inside one compiled program — so the per-round payloads
+never change shape and the host can replay the schedule without
+instrumenting the device.  Re-traces overwrite the same stream keys
+(idempotent), so warmup + run + recompile never double-count.
+
+Two accounting models coexist, matching the backends (see
+docs/DISTRIBUTED.md):
+
+* matrix backends (dense / pallas / allgather) ship ONE concatenated
+  per-agent buffer per stream per round — the broadcast model
+  ``cumulative_wire_bytes`` prices, so measured == priced bit for bit
+  under ``none``/``int8``/``sign1bit``.
+* ppermute ships one payload per leaf per permute round (the per-link
+  unicast model ``PermuteEngine.bytes_on_wire`` prices) — measured
+  matches *that* model exactly, and exceeds the broadcast model by the
+  ``rounds_per_mix`` fan-out factor on non-ring graphs.
+
+``round_latency_us`` is observed separately (time a warmed jitted
+combine dispatch; the launch layer and ``solve`` both do) and stored on
+the ledger so one object carries the full measured-communication
+read-out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+__all__ = ["CommsLedger", "StreamRecord", "attach_ledger", "time_round_us"]
+
+
+@dataclasses.dataclass
+class StreamRecord:
+    """Per-round wire template of ONE consensus stream (one agent).
+
+    ``wire_bytes`` is what an active compressed round ships,
+    ``full_bytes`` what a warmup (full-f32) round ships; ``entries`` the
+    per-agent payload entry count and ``collectives`` how many
+    collective ops realise one round (1 for matrix backends,
+    ``rounds_per_mix x leaves`` for ppermute).
+    """
+
+    op: str
+    entries: int
+    wire_bytes: int
+    full_bytes: int
+    collectives: int = 1
+
+
+class CommsLedger:
+    """Measured per-agent communication accounting for one engine."""
+
+    def __init__(self):
+        self.streams: dict[str, StreamRecord] = {}
+        # schedule knobs, copied from the engine by ``attach_ledger``
+        self.compress_after = 0
+        self.communication_interval = 1
+        self.steps_committed = 0
+        self.round_latency_us: float | None = None
+        self._bytes = 0.0
+        self._collectives = 0
+
+    # -- trace-time capture ----------------------------------------------
+    def note(self, stream: str, record: StreamRecord) -> None:
+        """Record (or overwrite) one stream's per-round wire template."""
+        self.streams[stream] = record
+
+    # -- host-side commit -------------------------------------------------
+    def commit_steps(self, num_steps: int) -> float:
+        """Charge ``num_steps`` solver steps of the recorded streams.
+
+        Applies the engine's deterministic wire schedule per step index
+        (continuing from any previously committed steps): warmup rounds
+        ship ``full_bytes``, silenced rounds (``t % interval != 0``)
+        ship nothing, active rounds ship ``wire_bytes``.  Returns the
+        bytes charged by THIS call.
+        """
+        start = self.steps_committed
+        charged = 0.0
+        for t in range(start, start + int(num_steps)):
+            if t % self.communication_interval != 0:
+                continue
+            for rec in self.streams.values():
+                charged += (rec.full_bytes if t < self.compress_after
+                            else rec.wire_bytes)
+                self._collectives += rec.collectives
+        self.steps_committed += int(num_steps)
+        self._bytes += charged
+        return charged
+
+    # -- read-out ---------------------------------------------------------
+    @property
+    def measured_wire_bytes(self) -> float:
+        """Per-agent bytes shipped over all committed steps."""
+        return self._bytes
+
+    @property
+    def collectives_issued(self) -> int:
+        """Collective ops dispatched over all committed steps (per agent)."""
+        return self._collectives
+
+    def bytes_per_step(self) -> float:
+        """Active-round bytes of one step (all streams, no schedule)."""
+        return float(sum(r.wire_bytes for r in self.streams.values()))
+
+    def observe_latency(self, us: float) -> None:
+        self.round_latency_us = float(us)
+
+    def summary(self) -> dict:
+        """JSON-ready dump of everything measured."""
+        return {
+            "streams": {k: dataclasses.asdict(v)
+                        for k, v in self.streams.items()},
+            "compress_after": self.compress_after,
+            "communication_interval": self.communication_interval,
+            "steps_committed": self.steps_committed,
+            "measured_wire_bytes": self.measured_wire_bytes,
+            "collectives_issued": self.collectives_issued,
+            "round_latency_us": self.round_latency_us,
+        }
+
+
+def attach_ledger(engine, ledger: CommsLedger | None = None) -> CommsLedger:
+    """Install ``ledger`` on ``engine`` (before the step is traced!).
+
+    Copies the engine's wire-schedule knobs onto the ledger so
+    ``commit_steps`` replays the same warmup/interval the compiled
+    program applies.  Returns the ledger.
+    """
+    if ledger is None:
+        ledger = CommsLedger()
+    ledger.compress_after = int(engine.compression.compress_after)
+    ledger.communication_interval = int(engine.communication_interval)
+    engine.ledger = ledger
+    return ledger
+
+
+def time_round_us(fn, *args, reps: int = 5) -> float:
+    """Median wall-clock of one warmed dispatch of ``fn(*args)`` in us.
+
+    ``fn`` should be a jitted combine (one consensus round); the first
+    call compiles outside the timed window.
+    """
+    import jax
+
+    out = fn(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    samples = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return 1e6 * samples[len(samples) // 2]

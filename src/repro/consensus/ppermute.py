@@ -25,9 +25,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.byzantine import apply_attack, byzantine_mask, make_attack
 from repro.consensus.compress import CompressionConfig, Int8Compressor
-from repro.consensus.engine import _STREAM_IDS, ConsensusEngine
+from repro.consensus.engine import ConsensusEngine, MeshBackendMixin
 from repro.core.consensus import MixingSpec
 from repro.sharding.collectives import (
     PermuteSchedule, permute_mix_tree, permute_schedule)
@@ -35,7 +34,7 @@ from repro.sharding.collectives import (
 __all__ = ["PermuteEngine"]
 
 
-class PermuteEngine(ConsensusEngine):
+class PermuteEngine(MeshBackendMixin, ConsensusEngine):
 
     name = "ppermute"
 
@@ -70,6 +69,10 @@ class PermuteEngine(ConsensusEngine):
     def rounds_per_mix(self) -> int:
         return self.schedule.rounds_per_mix
 
+    @property
+    def _mesh_num_agents(self) -> int:
+        return self.schedule.num_agents
+
     def mix(self, tree, *, matrix=None, dp_key=None, agent_index=None):
         # ``matrix`` here is a ``PermuteWeights`` override — the round's
         # weights on the SAME offset schedule (time-varying topology).
@@ -79,41 +82,35 @@ class PermuteEngine(ConsensusEngine):
             dp_key=dp_key, impl=self.impl, agent_index=agent_index,
             override=matrix)
 
-    def _local_slots(self, tree, agent_index):
-        """Global slot ids of this shard's rows (leading local dim)."""
-        rows = jax.tree_util.tree_leaves(tree)[0].shape[0]
-        if agent_index is None:
-            idx = jnp.int32(0)
-            for ax in self.agent_axes:
-                idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
-        else:
-            idx = jnp.asarray(agent_index, jnp.int32)
-        return idx * rows + jnp.arange(rows, dtype=jnp.int32)
+    def _ledger_note(self, stream, tree):
+        """Per-link wire template: one payload per LEAF per permute round.
 
-    def _attack_local(self, tree, t, stream, agent_index):
-        """The local-slice form of the base ``_attack_payload``.
-
-        The mask and per-slot keys are derived from *global* slot ids,
-        so the corrupted payload matches the dense reference bitwise
-        (under the exact ``none`` compressor).  Expects the standard
-        leading local agent dim on every leaf.
+        This is the unicast model ``bytes_on_wire`` prices for this
+        backend — ``rounds_per_mix`` permute rounds each shipping every
+        leaf separately — which exceeds the matrix backends' broadcast
+        model by the offset fan-out on non-ring graphs.  A dropped link
+        in a time-varying topology zeroes a *weight*, not a payload: the
+        compiled program still ships the round (static shapes), and so
+        does the measured accounting — docs/DISTRIBUTED.md spells out
+        the contrast with the per-process priced model.
         """
-        byz = self.byzantine
-        if not byz.attack_active:
-            return tree
-        attack = make_attack(byz.kind)
-        if stream not in attack.streams:
-            return tree
-        vals = self.byz_values
-        mask = byzantine_mask(vals["key"], self.schedule.num_agents,
-                              vals["num_byzantine"],
-                              num_active=self.num_active)
-        slots = self._local_slots(tree, agent_index)
-        key_t = jax.random.fold_in(
-            jax.random.fold_in(vals["key"], _STREAM_IDS[stream]),
-            self._require_t(t))
-        return apply_attack(attack, tree, mask[slots], key_t,
-                            vals["scale"], slots=slots)
+        led = self.ledger
+        if led is None:
+            return
+        from repro.consensus.ledger import StreamRecord
+        compressor = self.compressor
+        if not self.compression.active and self.compress == "int8":
+            compressor = Int8Compressor()
+        leaves = jax.tree_util.tree_leaves(tree)
+        sizes = [int(l.size) // (int(l.shape[0]) if l.ndim else 1)
+                 for l in leaves]
+        rounds = self.rounds_per_mix
+        led.note(stream, StreamRecord(
+            op=f"{self.name}/{self.impl}", entries=sum(sizes),
+            wire_bytes=rounds * sum(compressor.bytes_on_wire(s)
+                                    for s in sizes),
+            full_bytes=rounds * 4 * sum(sizes),
+            collectives=rounds * len(leaves)))
 
     def mix_ef(self, tree, ef=None, t=None, *, matrix=None, dp_key=None,
                agent_index=None, stream="x"):
@@ -134,6 +131,7 @@ class PermuteEngine(ConsensusEngine):
         """
         if matrix is None:
             matrix = self.topology_matrix(t, tree)
+        self._ledger_note(stream, tree)
         sent = self._attack_local(tree, t, stream, agent_index)
         if self.compression.active:
             v = jax.tree_util.tree_map(

@@ -156,7 +156,10 @@ def dsgd_step(problem: BilevelProblem, hg_cfg: HypergradConfig,
                                           matrix=matrix)
         ef_new = None if state.ef is None else {"x": ef_x_new}
     else:
-        x_mixed, ef_new = engine.mix(state.x, matrix=matrix), state.ef
+        # mix_ef with no wire state is bitwise ``mix`` — routed through it
+        # so an attached CommsLedger records D-SGD's single x stream too.
+        x_mixed, _ = engine.mix_ef(state.x, None, state.t, matrix=matrix)
+        ef_new = state.ef
     x_new = jax.tree_util.tree_map(
         lambda mx, g: mx - alpha * g, x_mixed, p)
     y_new = jax.tree_util.tree_map(

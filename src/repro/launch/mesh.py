@@ -7,19 +7,61 @@ The *agent* axis of the paper (the peer-to-peer network) is the data axis,
 extended across pods in the multi-pod mesh: agents = pod-major ring, so
 only the two ring edges crossing the pod boundary use DCI (DESIGN.md §3).
 
+``shape=`` overrides the hard-coded pod shapes for anything smaller —
+the localhost multi-process driver (scripts/launch_local.py) and the CI
+smoke runs build e.g. a ``(8,)`` mesh over 2 processes x 4 forced host
+devices.  Axis names default by rank: ``("data",)``, ``("data",
+"model")``, ``("pod", "data", "model")``.
+
 Defined as functions (never module-level constants) so importing this
 module does not touch jax device state.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 
 __all__ = ["make_production_mesh", "agent_axes", "agent_count", "model_axis"]
 
+_DEFAULT_AXES = {1: ("data",), 2: ("data", "model"),
+                 3: ("pod", "data", "model")}
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: Sequence[int] | None = None,
+                         axis_names: Sequence[str] | None = None):
+    """Build the device mesh, hard-failing on a device shortfall.
+
+    Without ``shape`` this is the fixed 256-chip pod (512 with
+    ``multi_pod``).  ``shape`` overrides it with any validated shape
+    (rank 1-3, positive dims); ``axis_names`` must match its rank and
+    defaults to the rank's conventional names.  In a multi-process run
+    ``jax.devices()`` spans every process, so the same call on every
+    process yields the same global mesh.
+    """
+    if shape is None:
+        if axis_names is not None:
+            raise ValueError("axis_names= requires an explicit shape=")
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    else:
+        if multi_pod:
+            raise ValueError("pass either multi_pod=True or shape=, not both")
+        shape = tuple(int(s) for s in shape)
+        if not shape or any(s < 1 for s in shape):
+            raise ValueError(f"mesh shape must be positive dims, got {shape}")
+        if axis_names is None:
+            axes = _DEFAULT_AXES.get(len(shape))
+            if axes is None:
+                raise ValueError(
+                    f"no default axis names for a rank-{len(shape)} mesh; "
+                    "pass axis_names=")
+        else:
+            axes = tuple(axis_names)
+            if len(axes) != len(shape):
+                raise ValueError(
+                    f"axis_names {axes} does not match mesh shape {shape}")
     import numpy as np
     need = int(np.prod(shape))
     devices = jax.devices()
@@ -27,7 +69,8 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"mesh {shape} needs {need} devices, found {len(devices)} — the "
             "dry-run launcher must set XLA_FLAGS=--xla_force_host_platform_"
-            "device_count=512 before any jax import")
+            f"device_count={need} before any jax import (or pass a smaller "
+            "shape=)")
     return jax.make_mesh(shape, axes, devices=devices[:need])
 
 

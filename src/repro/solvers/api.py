@@ -506,6 +506,15 @@ class SolveResult:
     # time-to-detection is last_good_step vs num_steps.
     tripped_steps: int = 0
     last_good_step: int = -1
+    # MEASURED communication, from the CommsLedger attached to the engine
+    # before the step was traced: per-agent bytes the compiled program
+    # actually shipped over the run (trace-time payload capture + the
+    # host-replayed warmup/interval schedule — consensus/ledger.py), and
+    # the median wall-clock of one warmed jitted consensus round.  None
+    # when the backend cannot be timed outside shard_map (latency) —
+    # bytes are recorded for every backend.
+    measured_wire_bytes: float | None = None
+    round_latency_us: float | None = None
 
 
 def default_setup(seed: int = 0, num_agents: int = 5, n_per_agent: int = 600,
@@ -567,6 +576,10 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
 
     solver = make_solver(config)
     state = solver.init(None, problem, hg_cfg, x0, y0, data)
+    # jit is lazy, so attaching after init/build still precedes the first
+    # trace — every wire stream the compiled step ships gets recorded
+    from repro.consensus import attach_ledger
+    ledger = attach_ledger(solver._engine)
 
     if metric_fn is None and record_every:
         from repro.core import convergence_metric
@@ -593,6 +606,15 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
     if guard is not None:
         counts.update(tripped_steps=int(guard["tripped"]),
                       last_good_step=int(guard["last_good"]))
+    ledger.commit_steps(num_steps)
+    if solver._engine.name in ("dense", "pallas"):
+        # single-host matrix backends mix outside shard_map, so one
+        # warmed jitted combine times cleanly; mesh backends report
+        # latency through the launch layer instead (docs/DISTRIBUTED.md)
+        from repro.consensus import time_round_us
+        engine = solver._engine
+        ledger.observe_latency(time_round_us(
+            jax.jit(lambda tr: engine.mix(tr)), state.x))
     # one agent's consensus payload: its slice of the outer iterate tree
     payload = jax.tree_util.tree_map(lambda l: l[0], state.x)
     return SolveResult(state=state, trace=trace,
@@ -601,4 +623,6 @@ def solve(config: SolverConfig, num_steps: int, record_every: int = 0,
                        communications_per_step=solver.communications_per_step,
                        bytes_per_round=float(
                            solver._engine.bytes_on_wire(payload)),
+                       measured_wire_bytes=ledger.measured_wire_bytes,
+                       round_latency_us=ledger.round_latency_us,
                        **counts)

@@ -85,7 +85,9 @@ class SolverConfig:
         ``None``: m comes from the data, as before.
       mixing: explicit ``MixingSpec``; overrides ``topology`` when set.
       topology: declarative graph, realised once m is known.
-      backend: consensus backend — "dense" | "pallas" | "ppermute".
+      backend: consensus backend — "dense" | "pallas" | "ppermute" |
+        "allgather" (the mesh backends run inside ``shard_map``; see
+        docs/DISTRIBUTED.md for the multi-process launch path).
       backend_opts: extra kwargs for ``repro.consensus.make_engine``
         (e.g. ``interpret`` for pallas, ``compress``/``dp_sigma`` for
         ppermute).

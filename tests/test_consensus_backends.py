@@ -197,6 +197,131 @@ def test_ppermute_backend_matches_dense_all_topologies():
     assert "BACKENDS_OK" in out
 
 
+def test_allgather_backend_matches_dense_all_topologies():
+    """The mesh dense-matmul backend (all_gather inside shard_map on 8
+    forced host devices) reproduces the dense mixed trees for ring, ER,
+    and torus graphs, agrees on the fused step1_step3, and runs the
+    robust (trimmed) combine exactly like the dense reference — the
+    property ppermute cannot offer (no all-to-all access)."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.consensus import AllGatherEngine, DenseEngine
+        from repro.core import (erdos_renyi_adjacency, laplacian_mixing,
+                                ring_mixing, torus_mixing)
+        from repro.sharding.compat import shard_map, set_mesh
+
+        mesh = jax.make_mesh((8,), ("data",))
+        m = 8
+        specs = {
+            "ring": ring_mixing(m, self_weight=1/3),
+            "erdos-renyi": laplacian_mixing(
+                erdos_renyi_adjacency(m, 0.5, seed=11)),
+            "torus": torus_mixing(2, 4),
+        }
+        tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, 37, 5)),
+                "b": jax.random.normal(jax.random.PRNGKey(1), (m, 131))}
+        u = jax.tree_util.tree_map(lambda l: 0.5 * l, tree)
+        p = jax.tree_util.tree_map(lambda l: 0.1 * l, tree)
+        pp = jax.tree_util.tree_map(lambda l: 0.2 * l, tree)
+        for name, spec in specs.items():
+            eng = AllGatherEngine(spec, agent_axes=("data",))
+            dense = DenseEngine(spec)
+            fn = shard_map(lambda t: eng.mix(t), mesh=mesh,
+                           in_specs=P("data"), out_specs=P("data"),
+                           axis_names={"data"}, check_vma=False)
+            with set_mesh(mesh):
+                got = jax.jit(fn)(tree)
+            want = dense.mix(tree)
+            for a, b in zip(jax.tree_util.tree_leaves(got),
+                            jax.tree_util.tree_leaves(want)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5)
+            fused = shard_map(
+                lambda x_, u_, p_, pp_: eng.step1_step3(x_, u_, p_, pp_,
+                                                        0.3),
+                mesh=mesh, in_specs=(P("data"),) * 4,
+                out_specs=(P("data"), P("data")), axis_names={"data"},
+                check_vma=False)
+            with set_mesh(mesh):
+                xg, ug = jax.jit(fused)(tree, u, p, pp)
+            xd, ud = dense.step1_step3(tree, u, p, pp, 0.3)
+            for a, b in zip(jax.tree_util.tree_leaves(xg),
+                            jax.tree_util.tree_leaves(xd)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5)
+            for a, b in zip(jax.tree_util.tree_leaves(ug),
+                            jax.tree_util.tree_leaves(ud)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5)
+            print(name, "OK")
+
+        # robust combine: the gathered table gives all-to-all access, so
+        # trimmed-mean must match the dense backend's exactly
+        from repro.byzantine import ByzantineConfig
+        byz = ByzantineConfig(combine="trimmed-mean")
+        spec = specs["erdos-renyi"]
+        engr = AllGatherEngine(spec, agent_axes=("data",), byzantine=byz)
+        fn = shard_map(lambda t: engr._combine(t), mesh=mesh,
+                       in_specs=P("data"), out_specs=P("data"),
+                       axis_names={"data"}, check_vma=False)
+        with set_mesh(mesh):
+            got = jax.jit(fn)(tree)
+        want = DenseEngine(spec, byzantine=byz)._combine(tree)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+        print("ALLGATHER_OK")
+    """)
+    assert "ALLGATHER_OK" in out
+
+
+def test_allgather_compressed_mix_ef_matches_dense_bitwise():
+    """int8+EF through the allgather backend: the wire math is the base
+    (dense) implementation verbatim — one concatenated per-agent buffer
+    — so under shard_map the mixed tree AND the EF state must match the
+    dense backend exactly, not just within quantization tolerance."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.consensus import (AllGatherEngine, CompressionConfig,
+                                     DenseEngine)
+        from repro.core import erdos_renyi_adjacency, laplacian_mixing
+        from repro.sharding.compat import shard_map, set_mesh
+
+        mesh = jax.make_mesh((8,), ("data",))
+        m = 8
+        spec = laplacian_mixing(erdos_renyi_adjacency(m, 0.5, seed=11))
+        tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, 37, 5)),
+                "b": jax.random.normal(jax.random.PRNGKey(1), (m, 131))}
+        zeros = jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), tree)
+        ef = {"e": zeros, "ref": zeros}
+        comp = CompressionConfig("int8")
+        t0 = jnp.zeros((), jnp.int32)
+
+        md, efd = DenseEngine(spec, compression=comp).mix_ef(tree, ef, t0)
+        eng = AllGatherEngine(spec, agent_axes=("data",), compression=comp)
+        fn = shard_map(lambda t, r: eng.mix_ef(t, r, t0), mesh=mesh,
+                       in_specs=(P("data"), P("data")),
+                       out_specs=(P("data"), P("data")),
+                       axis_names={"data"}, check_vma=False)
+        with set_mesh(mesh):
+            mg, efg = jax.jit(fn)(tree, ef)
+        for a, b in zip(jax.tree_util.tree_leaves(mg),
+                        jax.tree_util.tree_leaves(md)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+        for a, b in zip(jax.tree_util.tree_leaves(efg),
+                        jax.tree_util.tree_leaves(efd)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+        print("ALLGATHER_EF_OK")
+    """)
+    assert "ALLGATHER_EF_OK" in out
+
+
 def test_consensus_step_preserves_mixed_dtypes():
     """The fused op must not cast the tracker to x's leaf dtypes."""
     from repro.kernels.consensus_step import ops as cs_ops

@@ -165,6 +165,133 @@ def test_dryrun_single_combo_small_mesh():
     assert "DRYRUN_OK" in out
 
 
+def _run_two_process(body: str, devices_per_process: int = 2,
+                     timeout: float = 600.0):
+    """Spawn TWO coordinator-wired jax processes running ``body`` — a
+    real ``jax.distributed`` run (gloo CPU collectives) on localhost,
+    configured through the REPRO_* env vars ``initialize_from_env``
+    reads (docs/DISTRIBUTED.md)."""
+    import socket
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    code = textwrap.dedent(body)
+    procs = []
+    for pid in range(2):
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                            f"{devices_per_process}")
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env["REPRO_COORDINATOR"] = f"127.0.0.1:{port}"
+        env["REPRO_NUM_PROCESSES"] = "2"
+        env["REPRO_PROCESS_ID"] = str(pid)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", code], env=env,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+    outs = []
+    try:
+        for proc in procs:
+            out, err = proc.communicate(timeout=timeout)
+            assert proc.returncode == 0, err[-4000:]
+            outs.append(out)
+    finally:
+        for proc in procs:
+            if proc.poll() is None:
+                proc.kill()
+    return outs
+
+
+def test_two_process_init_and_cross_process_collectives():
+    """2 processes x 2 devices: ``initialize_from_env`` brings the gloo
+    runtime up, the 4-agent mesh spans both processes, and psum/ppermute
+    inside shard_map agree with the host-side reference — collectives
+    really cross the process boundary (each process only holds half the
+    agents)."""
+    outs = _run_two_process("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.launch import distributed as D
+        from repro.sharding.compat import shard_map, set_mesh
+
+        assert D.initialize_from_env()
+        assert jax.process_count() == 2
+        assert jax.device_count() == 4
+        mesh = D.agent_mesh(4)
+        host = np.arange(8, dtype=np.float32).reshape(4, 2) + 1.0
+        x = D.shard_host_tree(mesh, host, 4)
+        gather = D._make_gather(mesh)
+
+        fn = shard_map(lambda t: jax.lax.psum(t, "data"), mesh=mesh,
+                       in_specs=(P("data"),), out_specs=P(),
+                       axis_names=set(mesh.axis_names), check_vma=False)
+        with set_mesh(mesh):
+            got = np.asarray(jax.device_get(jax.jit(fn)(x)))
+        np.testing.assert_allclose(got, host.sum(axis=0, keepdims=True),
+                                   atol=1e-6)
+
+        perm = [(i, (i + 1) % 4) for i in range(4)]
+        fn2 = shard_map(lambda t: jax.lax.ppermute(t, "data", perm),
+                        mesh=mesh, in_specs=(P("data"),),
+                        out_specs=P("data"),
+                        axis_names=set(mesh.axis_names), check_vma=False)
+        with set_mesh(mesh):
+            got2 = np.asarray(gather(jax.jit(fn2)(x)))
+        np.testing.assert_allclose(got2, np.roll(host, 1, axis=0),
+                                   atol=1e-6)
+        D.shutdown()
+        print("TWO_PROC_OK", jax.process_index())
+    """)
+    assert all("TWO_PROC_OK" in out for out in outs)
+
+
+def test_agent_mesh_divisibility_error_is_actionable():
+    out = run_in_subprocess("""
+        from repro.launch.distributed import agent_mesh
+        try:
+            agent_mesh(3)     # 3 does not divide the 8 forced devices
+            raise SystemExit("expected ValueError")
+        except ValueError as e:
+            msg = str(e)
+            assert "does not divide" in msg, msg
+            assert "divisors" in msg, msg
+            assert "--devices-per-process" in msg, msg
+        mesh = agent_mesh(4)  # 4 agents x 2 model shards
+        assert mesh.shape["data"] == 4 and mesh.shape["model"] == 2
+        print("AGENT_MESH_OK")
+    """)
+    assert "AGENT_MESH_OK" in out
+
+
+def test_launch_local_end_to_end():
+    """The localhost driver end to end: 2 processes x 2 devices through
+    run_section6, result JSON carries the measured-communication
+    read-out and a finite stationarity metric."""
+    import json
+    import tempfile
+    out_path = os.path.join(tempfile.mkdtemp(prefix="launch_test_"),
+                            "result.json")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "launch_local.py"),
+         "--processes", "2", "--devices-per-process", "2",
+         "--agents", "4", "--steps", "4", "--record-every", "4",
+         "--n-per-agent", "24", "--metric-inner-steps", "20",
+         "--out", out_path],
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    with open(out_path) as fh:
+        res = json.load(fh)
+    assert res["num_processes"] == 2
+    assert res["num_devices"] == 4
+    assert res["num_agents"] == 4
+    import math
+    assert math.isfinite(res["final_metric"])
+    assert res["measured_wire_bytes"] == res["priced_wire_bytes"]
+    assert res["round_latency_us"] > 0
+    assert len(res["digest"]) == 64     # sha256 hex of the final iterates
+
+
 def test_multipod_mesh_shapes():
     out = run_in_subprocess("""
         import os

@@ -1,0 +1,109 @@
+"""CommsLedger: measured bytes-on-wire == the priced analytic model.
+
+The ledger records wire-stream templates at trace time and replays the
+engine's deterministic warmup/interval schedule on the host
+(consensus/ledger.py).  For the matrix backends the measured per-agent
+bytes must equal ``cumulative_wire_bytes`` EXACTLY — same schedule, same
+per-round payload — for every compressor kind; ``solve`` surfaces the
+same numbers on ``SolveResult``.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.consensus import (
+    CompressionConfig,
+    attach_ledger,
+    cumulative_wire_bytes,
+    make_engine,
+    time_round_us,
+)
+from repro.core import ring_mixing
+from repro.solvers import SolverConfig
+from repro.solvers.api import solve
+
+M = 5
+ENTRIES = 7 * 6 + 88   # per-agent payload entries of _tree
+
+
+def _tree(seed: int = 0):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    return [jax.random.normal(ka, (M, 7, 6)),
+            {"w": jax.random.normal(kb, (M, 88))}]
+
+
+@pytest.mark.parametrize("kind,compress_after,interval", [
+    ("none", 0, 1),
+    ("int8", 0, 1),
+    ("int8", 3, 2),       # warmup + silenced rounds
+    ("sign1bit", 2, 1),
+])
+def test_measured_equals_priced_exactly(kind, compress_after, interval):
+    steps = 9
+    cfg = CompressionConfig(kind=kind, compress_after=compress_after)
+    engine = make_engine("dense", ring_mixing(M), compression=cfg,
+                         communication_interval=interval)
+    ledger = attach_ledger(engine)
+    # one trace records the stream template; the host replays the
+    # schedule, so a single call prices any number of steps
+    fn = jax.jit(lambda tr, t: engine.mix_ef(tr, None, t)[0])
+    fn(_tree(), jnp.asarray(0))
+    ledger.commit_steps(steps)
+    priced = cumulative_wire_bytes(cfg, ENTRIES, steps, comms_per_step=1,
+                                   communication_interval=interval)[-1]
+    assert ledger.measured_wire_bytes == priced
+    assert ledger.streams["x"].entries == ENTRIES
+
+
+def test_retrace_does_not_double_count():
+    cfg = CompressionConfig(kind="int8")
+    engine = make_engine("dense", ring_mixing(M), compression=cfg)
+    ledger = attach_ledger(engine)
+    fn = jax.jit(lambda tr, t: engine.mix_ef(tr, None, t)[0])
+    fn(_tree(0), jnp.asarray(0))
+    fn(_tree(1), jnp.asarray(0))        # cache hit
+    fn(jax.tree_util.tree_map(lambda l: l.astype(jnp.float32), _tree(2)),
+       jnp.asarray(1))
+    assert len(ledger.streams) == 1     # idempotent per-stream key
+    ledger.commit_steps(4)
+    priced = cumulative_wire_bytes(cfg, ENTRIES, 4, comms_per_step=1)[-1]
+    assert ledger.measured_wire_bytes == priced
+
+
+def test_attach_before_trace_contract():
+    """A ledger attached after the step was already traced sees nothing
+    (jit cache replays the compiled program) — the documented contract is
+    attach-then-trace, and benches attach right after build."""
+    engine = make_engine("dense", ring_mixing(M))
+    first = attach_ledger(engine)
+    fn = jax.jit(lambda tr: engine.mix_ef(tr, None, 0)[0])
+    fn(_tree())
+    assert first.streams
+    late = attach_ledger(engine)
+    fn(_tree())                          # cache hit: no retrace
+    assert not late.streams
+    assert late.measured_wire_bytes == 0.0
+
+
+def test_solve_exposes_measured_columns():
+    """``solve`` attaches a ledger and reports measured bytes + latency:
+    the tracking algorithms ship TWO streams (x and u) per step, D-SGD
+    one, at identical per-stream payloads."""
+    steps = 4
+    results = {}
+    for algo in ("interact", "d-sgd"):
+        cfg = SolverConfig(algo=algo, alpha=0.1, beta=0.1,
+                           mixing=ring_mixing(4), seed=3)
+        results[algo] = solve(cfg, steps, num_agents=4, n_per_agent=40)
+    di, dd = results["interact"], results["d-sgd"]
+    assert di.measured_wire_bytes and di.measured_wire_bytes > 0
+    assert di.measured_wire_bytes == 2 * dd.measured_wire_bytes
+    assert di.measured_wire_bytes == 2 * steps * dd.bytes_per_round
+    assert di.round_latency_us and di.round_latency_us > 0
+
+
+def test_time_round_us_positive():
+    engine = make_engine("dense", ring_mixing(M))
+    tree = _tree()
+    us = time_round_us(jax.jit(lambda tr: engine.mix(tr)), tree, reps=3)
+    assert us > 0
